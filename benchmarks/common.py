@@ -1,0 +1,50 @@
+"""Benchmark helpers: timing + CSV emission.
+
+Every benchmark module exposes ``run() -> list[tuple[name, us_per_call,
+derived]]``; ``benchmarks.run`` prints the combined CSV.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+# the paper's four workloads (Table I/VI): (name, params, T_before s,
+# T_comp s, T_comm s on 64 GPUs @30Gbps) — T_* from the paper's Table I.
+PAPER_DNNS = [
+    ("ResNet-101", 44_654_504, 0.055, 0.135, 0.280),
+    ("VGG-19", 143_652_544, 0.105, 0.210, 0.842),
+    ("Bert", 102_267_648, 0.080, 0.170, 0.520),
+    ("GPT-2", 81_894_144, 0.080, 0.170, 0.595),  # CCR~3.5 per SS IV.C.4
+]
+
+
+def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time per call in seconds (blocks on jax arrays)."""
+
+    def call():
+        out = fn(*args)
+        for leaf in jax.tree.leaves(out):
+            if hasattr(leaf, "block_until_ready"):
+                leaf.block_until_ready()
+        return out
+
+    for _ in range(warmup):
+        call()
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        call()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def row(name: str, seconds: float, derived: str = "") -> tuple:
+    return (name, seconds * 1e6, derived)
+
+
+def emit(rows) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")

@@ -1,0 +1,63 @@
+"""Paper Fig 11: scalability across cluster sizes (8/16/32/64 ... 512).
+
+Per GC scheme: modelled speedup at each cluster size with (a) comm time
+scaling as ring-allreduce 2(W-1)/W, (b) AllGather-based schemes degrading
+~W/ring (the paper's Random-k/EFsignSGD cliff), (c) measured compression
+overheads from table2.  Reproduces: COVAP near-linear at every size,
+AllGather schemes flattening out."""
+from __future__ import annotations
+
+from repro.core import perfmodel as pm
+from repro.core.ccr import allreduce_bytes_on_wire, select_interval
+
+from .common import row
+
+SIZES = [8, 16, 32, 64, 128, 256, 512]
+
+# (scheme, volume_ratio(P), compress_frac, allgather_based, data_dependency)
+SCHEMES = [
+    ("ddp_ovlp", lambda ccr: 1.0, 0.0, False, False),
+    ("covap", lambda ccr: float(select_interval(ccr)), 0.001, False, False),
+    ("fp16", lambda ccr: 2.0, 0.01, False, False),
+    ("powersgd", lambda ccr: 50.0, 0.15, False, False),
+    ("topk", lambda ccr: 100.0, 2.7, True, False),
+    ("randomk", lambda ccr: 100.0, 1.5, True, False),
+    ("efsignsgd", lambda ccr: 4.0, 0.15, True, False),
+    ("oktopk", lambda ccr: 100.0, 0.3, False, True),
+]
+
+# VGG-19 profile at 8 workers in the paper's network; comm grows with ring factor
+TB, TC = 0.105, 0.210
+COMM_64 = 0.842
+
+
+def comm_at(P):
+    ring64 = 2 * (64 - 1) / 64
+    ringP = 2 * (P - 1) / P
+    return COMM_64 * ringP / ring64
+
+
+def run():
+    rows = []
+    for name, vol_fn, cfrac, allgather, dep in SCHEMES:
+        speeds = []
+        for P in SIZES:
+            tm = comm_at(P)
+            ccr = tm / TC
+            vol = vol_fn(ccr)
+            if allgather:
+                ring = 2 * (P - 1) / P
+                tm = tm * (P / ring)  # allgather wire volume penalty
+            s = pm.speedup_gc_ovlp(
+                P, TB, TC, tm, volume_ratio=vol,
+                t_compress=cfrac * TC, data_dependency=dep,
+            )
+            speeds.append(s / P)  # fraction of linear scaling
+        detail = ";".join(
+            f"P{P}={f:.2f}" for P, f in zip(SIZES, speeds)
+        )
+        rows.append(row(
+            f"fig11/{name}", 0.0,
+            f"frac_of_linear:{detail}",
+        ))
+    return rows

@@ -1,0 +1,35 @@
+"""Paper Fig 5: speedup vs compression ratio.
+
+For each paper workload, sweep the interval I and report the modelled
+speedup on 64 workers.  The claim to reproduce: speedup saturates at
+I = ceil(CCR) (compressing harder than the CCR buys nothing once the
+residual communication already hides under compute)."""
+from __future__ import annotations
+
+from repro.core import perfmodel as pm
+from repro.core.ccr import select_interval
+
+from .common import PAPER_DNNS, row
+
+RATIOS = [1, 2, 3, 4, 8, 16]
+
+
+def run():
+    P = 64
+    rows = []
+    for name, _, tb, tc, tm in PAPER_DNNS:
+        ccr = tm / tc
+        chosen = select_interval(ccr)
+        speeds = {}
+        for i in RATIOS:
+            speeds[i] = pm.speedup_gc_ovlp(
+                P, tb, tc, tm, volume_ratio=float(i), t_compress=0.0,
+            )
+        knee = speeds[min(RATIOS, key=lambda i: abs(i - chosen))]
+        best = max(speeds.values())
+        detail = ";".join(f"I{i}={s:.1f}" for i, s in speeds.items())
+        rows.append(row(
+            f"fig5/{name}", tm / chosen,
+            f"chosen_I={chosen};knee_speedup={knee:.1f};max={best:.1f};{detail}",
+        ))
+    return rows

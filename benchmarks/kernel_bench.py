@@ -1,0 +1,54 @@
+"""SS III.A "near-zero overhead" kernels: per-kernel us/call.
+
+On CPU the Pallas kernels run in interpret mode (Python — not a timing
+target), so wall time is measured on the mathematically-identical jnp
+reference path that production uses off-TPU, plus the analytic VMEM-roofline
+time the fused TPU kernel would take (bytes moved / HBM bandwidth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ccr import HardwareSpec
+from repro.kernels import ref
+
+from .common import row, timeit
+
+N = 4_000_000  # one 16 MB fp32 bucket
+HW = HardwareSpec.v5e()
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    g = jax.random.normal(key, (N,), jnp.float32)
+    r = jax.random.normal(jax.random.fold_in(key, 1), (N,), jnp.float32)
+    rows = []
+
+    cases = {
+        "ef_update": (
+            jax.jit(lambda g, r: ref.ef_update_ref(g, r, 0.5, selected=True)),
+            (g, r), 3 * N * 4,  # read g,r write send (r'=0 folded)
+        ),
+        "quantize_fp8": (
+            jax.jit(lambda x: ref.quantize_fp8_ref(x)), (g,), N * 5,
+        ),
+        "sign_compress": (
+            jax.jit(lambda x: ref.sign_compress_ref(x)), (g,), N * 5,
+        ),
+        "threshold_filter": (
+            jax.jit(lambda x: ref.threshold_filter_ref(x, 1.5)), (g,), N * 8,
+        ),
+        "lowrank_matmul": (
+            jax.jit(lambda a, b: ref.matmul_ref(a, b)),
+            (g.reshape(2000, 2000), r.reshape(2000, 2000)[:, :128]),
+            (2000 * 2000 + 2000 * 128 + 2000 * 128) * 4,
+        ),
+    }
+    for name, (fn, args, bytes_moved) in cases.items():
+        t = timeit(fn, *args, warmup=1, iters=3)
+        tpu_us = bytes_moved / HW.hbm_bw * 1e6
+        rows.append(row(
+            f"kernel/{name}", t,
+            f"bytes={bytes_moved};tpu_roofline_us={tpu_us:.1f}",
+        ))
+    return rows

@@ -1,0 +1,63 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table2,fig5]
+
+Prints ``name,us_per_call,derived`` CSV (one line per measurement).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import (
+    fig5_ratio_sweep,
+    fig11_scaling,
+    kernel_bench,
+    table1_ccr,
+    table2_overhead,
+    table3_gc_overlap,
+    table5_sharding,
+    table7_training,
+)
+from .common import emit
+
+MODULES = {
+    "table1": table1_ccr,
+    "table2": table2_overhead,
+    "table3": table3_gc_overlap,
+    "table5": table5_sharding,
+    "table7": table7_training,
+    "fig5": fig5_ratio_sweep,
+    "fig11": fig11_scaling,
+    "kernels": kernel_bench,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(MODULES)
+
+    print("name,us_per_call,derived")
+    ok = True
+    for name in names:
+        mod = MODULES[name]
+        t0 = time.perf_counter()
+        try:
+            rows = mod.run()
+            emit(rows)
+            print(f"# {name}: {len(rows)} rows in "
+                  f"{time.perf_counter()-t0:.1f}s", file=sys.stderr)
+        except Exception:
+            ok = False
+            print(f"# {name}: FAILED", file=sys.stderr)
+            traceback.print_exc()
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Paper Table I: computation vs communication times and CCR.
+
+Two parts: (a) the paper's own DNNs with its measured times — validates the
+analytic model against the paper's CCRs (2.1 / 4.0 / 3.1); (b) the assigned
+architectures' analytic CCR on the v5e production mesh (the numbers that
+drive COVAP's adaptive interval in the dry-run).
+"""
+from __future__ import annotations
+
+from repro.configs import INPUT_SHAPES, get_config, list_archs
+from repro.core.ccr import HardwareSpec, analytic_times, select_interval
+from repro.models import count_params
+
+from .common import PAPER_DNNS, row
+
+
+def run():
+    rows = []
+    # (a) paper environment: reproduce Table I CCRs from its own T_comp/T_comm
+    for name, params, tb, tc, tm in PAPER_DNNS:
+        ccr = tm / tc
+        interval = select_interval(ccr)
+        rows.append(row(
+            f"table1/paper/{name}", tm,
+            f"ccr={ccr:.2f};interval={interval}",
+        ))
+    # (b) assigned archs on the production mesh (train_4k, 256 chips DP=16)
+    hw = HardwareSpec.v5e()
+    shape = INPUT_SHAPES["train_4k"]
+    for arch in list_archs():
+        cfg = get_config(arch)
+        n_active = count_params(cfg, active_only=True)
+        tokens = shape.global_batch * shape.seq_len
+        r = analytic_times(
+            step_flops_per_chip=6.0 * n_active * tokens / 256,
+            grad_bytes=count_params(cfg) * 4 / 16,  # per model shard
+            dp_world=16,
+            hw=hw,
+        )
+        rows.append(row(
+            f"table1/v5e/{arch}", r["t_comm"],
+            f"ccr={r['ccr']:.3f};interval={select_interval(r['ccr'])};"
+            f"t_comp={r['t_comp']*1e3:.1f}ms",
+        ))
+    # (c) same archs in the paper's 30Gbps cloud environment
+    hw_cloud = HardwareSpec.cloud_v100_30gbps()
+    for arch in list_archs():
+        cfg = get_config(arch)
+        n_active = count_params(cfg, active_only=True)
+        # per-worker micro-batch of 2x512 tokens (paper-scale local batches)
+        r = analytic_times(
+            step_flops_per_chip=6.0 * n_active * 2 * 512,
+            grad_bytes=count_params(cfg) * 4,
+            dp_world=64,
+            hw=hw_cloud,
+        )
+        rows.append(row(
+            f"table1/cloud30g/{arch}", r["t_comm"],
+            f"ccr={r['ccr']:.2f};interval={select_interval(r['ccr'])}",
+        ))
+    return rows

@@ -1,0 +1,69 @@
+"""Paper Table II: compression overhead of every GC scheme.
+
+Measures single-worker ``compress`` wall time (the T_compress term — no
+collectives) on a VGG-19-shaped gradient pytree, scaled to 1/8 size on CPU
+with the scale factor reported (the paper's ordering is what matters:
+Top-k >> DGC/PowerSGD/EFsignSGD >> FP16 > COVAP ~ 0).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import build_plan, get_compressor
+
+from .common import row, timeit
+
+SCALE = 8  # measure at 1/SCALE of VGG-19's 143.6M params
+
+# VGG-19 layer shapes (paper Table IV), divided by SCALE on the FC dims
+VGG_LIKE = {
+    "conv1_1": (64, 3, 3, 3),
+    "conv_mid": (24, 256, 256, 3),      # the conv bulk, stacked
+    "fc1": (25088, 4096 // SCALE),
+    "fc2": (4096, 4096 // SCALE),
+    "fc3": (4096, 1000 // SCALE),
+}
+
+SCHEMES = [
+    ("covap", {"interval": 4}),
+    ("none", {}),
+    ("fp16", {}),
+    ("topk", {"ratio": 0.01}),
+    ("dgc", {"ratio": 0.001}),
+    ("randomk", {"ratio": 0.01}),
+    ("efsignsgd", {}),
+    ("powersgd", {"rank": 2}),
+    ("oktopk", {"ratio": 0.01}),
+    ("fp8wire", {}),
+]
+
+
+def run():
+    params = {k: jnp.zeros(s, jnp.float32) for k, s in VGG_LIKE.items()}
+    total = sum(int(v.size) for v in params.values())
+    plan = build_plan(params, interval=4)
+    key = jax.random.PRNGKey(0)
+    grads = {
+        k: jax.random.normal(jax.random.fold_in(key, i), v.shape)
+        for i, (k, v) in enumerate(params.items())
+    }
+    rows = []
+    for name, opts in SCHEMES:
+        comp = get_compressor(name, **opts)
+        state = comp.init_state(params, plan)
+
+        @jax.jit
+        def compress(g, s):
+            out, s2, _ = comp.sync(g, s, plan=plan, phase=0, step=0,
+                                   axis_names=())
+            return out, s2
+
+        t = timeit(compress, grads, state, warmup=1, iters=3)
+        _, _, stats = comp.sync(grads, state, plan=plan, phase=0, step=0,
+                                axis_names=())
+        rows.append(row(
+            f"table2/{name}", t,
+            f"params={total};scale=1/{SCALE};volume_ratio={stats.volume_ratio:.1f}",
+        ))
+    return rows

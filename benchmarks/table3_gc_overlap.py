@@ -1,0 +1,41 @@
+"""Paper Table III + SS II analysis: GC alone vs GC+Overlapping.
+
+Uses the paper's ResNet-101 numbers (T_before=55ms, T_comp=135ms, CCR=2.1)
+and the timeline simulator to reproduce S_GC vs S_GC-ovlp vs S_LS, showing
+that compressing CCR to ~1 under overlap reaches near-linear scaling."""
+from __future__ import annotations
+
+from repro.core import perfmodel as pm
+
+from .common import row
+
+CASES = [
+    # (scheme, volume_ratio, compress_frac_of_comp, data_dependency)
+    ("ddp_ovlp", 1.0, 0.0, False),
+    ("randomk", 2.0, 0.05, False),
+    ("fp16", 2.0, 0.01, False),
+    ("covap_I3", 3.0, 0.001, False),
+    ("topk", 100.0, 2.7, False),       # huge T_compress (Table II: 370ms/135ms)
+    ("oktopk", 100.0, 0.3, True),      # data dependency kills overlap
+]
+
+
+def run():
+    P = 64
+    tb, tc = 0.055, 0.135
+    tm = 2.1 * tc
+    ls = P
+    rows = [row("table3/linear_scaling", tb + tc, f"speedup={ls:.2f}")]
+    s_dp = pm.speedup_dp(P, tb, tc, tm)
+    rows.append(row("table3/dp_no_overlap", tb + tc + tm, f"speedup={s_dp:.2f}"))
+    for name, vol, cfrac, dep in CASES:
+        s = pm.speedup_gc_ovlp(
+            P, tb, tc, tm,
+            volume_ratio=vol, t_compress=cfrac * tc, data_dependency=dep,
+        )
+        t = pm.t_gc_ovlp(tb, tc, tm / vol, cfrac * tc, data_dependency=dep)
+        rows.append(row(
+            f"table3/{name}", t,
+            f"speedup={s:.2f};of_linear={s/ls:.1%}",
+        ))
+    return rows

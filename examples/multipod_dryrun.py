@@ -1,0 +1,29 @@
+"""Example: lower + compile one architecture against the production meshes
+and print its roofline terms (the programmatic face of launch/dryrun.py).
+
+    PYTHONPATH=src python examples/multipod_dryrun.py --arch gemma-2b
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+
+from repro.launch.dryrun import run_one
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="gemma-2b")
+ap.add_argument("--shape", default="train_4k")
+args = ap.parse_args()
+
+for multi_pod in (False, True):
+    rec = run_one(args.arch, args.shape, multi_pod)
+    mesh = rec["mesh"]
+    if rec["status"] != "ok":
+        print(f"{mesh}: FAILED {rec['error']}")
+        continue
+    r = rec["roofline"]
+    print(f"{mesh}: dominant={r['dominant']} "
+          f"compute={r['compute_s']*1e3:.2f}ms "
+          f"memory={r['memory_s']*1e3:.2f}ms "
+          f"collective={r['collective_s']*1e3:.2f}ms "
+          f"(I={rec.get('interval')}, buckets={rec.get('plan_buckets')})")

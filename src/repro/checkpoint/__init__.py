@@ -1,0 +1,4 @@
+"""Checkpointing: pytree <-> npz + JSON manifest, sharding-aware on restore."""
+from .store import latest_step, restore, save
+
+__all__ = ["save", "restore", "latest_step"]

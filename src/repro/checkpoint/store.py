@@ -1,0 +1,93 @@
+"""Pytree checkpointing without external deps.
+
+Layout: ``<dir>/step_<N>/arrays.npz`` + ``manifest.json`` (treedef as
+keypath strings, dtypes, shapes).  Arrays are gathered to host on save; on
+restore they are placed back with the caller's shardings (pass
+``shardings=`` a matching pytree of NamedSharding, or None for host).
+bf16 is round-tripped through a uint16 view (npz has no bfloat16).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "::"
+
+
+def _flatten(tree: Any) -> dict[str, jax.Array]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        out[jax.tree_util.keystr(path)] = leaf
+    return out
+
+
+def save(directory: str, step: int, tree: Any) -> str:
+    d = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(d, exist_ok=True)
+    flat = _flatten(tree)
+    arrays, manifest = {}, {}
+    for i, (key, leaf) in enumerate(sorted(flat.items())):
+        arr = np.asarray(jax.device_get(leaf))
+        name = f"a{i}"
+        if arr.dtype == jnp.bfloat16:
+            arrays[name] = arr.view(np.uint16)
+            manifest[key] = {"name": name, "dtype": "bfloat16", "shape": arr.shape}
+        else:
+            arrays[name] = arr
+            manifest[key] = {
+                "name": name,
+                "dtype": str(arr.dtype),
+                "shape": arr.shape,
+            }
+    np.savez(os.path.join(d, "arrays.npz"), **arrays)
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump({"step": step, "leaves": manifest}, f)
+    return d
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(m.group(1))
+        for m in (re.match(r"step_(\d+)$", n) for n in os.listdir(directory))
+        if m
+    ]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, like: Any, shardings: Any = None) -> Any:
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)["leaves"]
+    data = np.load(os.path.join(d, "arrays.npz"))
+
+    paths_and_leaves = jax.tree_util.tree_leaves_with_path(like)
+    treedef = jax.tree_util.tree_structure(like)
+    shard_leaves = (
+        jax.tree_util.tree_leaves(shardings) if shardings is not None else None
+    )
+    out = []
+    for i, (path, leaf) in enumerate(paths_and_leaves):
+        key = jax.tree_util.keystr(path)
+        if key not in manifest:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        meta = manifest[key]
+        arr = data[meta["name"]]
+        if meta["dtype"] == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs model {leaf.shape}"
+            )
+        if shard_leaves is not None:
+            out.append(jax.device_put(arr, shard_leaves[i]))
+        else:
+            out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,26 @@
+"""COVAP core: the paper's contribution as composable JAX modules."""
+from . import bucketing, ccr, compressors, error_feedback, filter, perfmodel
+from .bucketing import BucketPlan, build_plan
+from .ccr import HardwareSpec, analytic_times, select_interval
+from .compressors import available, get_compressor
+from .error_feedback import EFSchedule
+from .filter import compression_ratio, selected_buckets
+
+__all__ = [
+    "bucketing",
+    "ccr",
+    "compressors",
+    "error_feedback",
+    "filter",
+    "perfmodel",
+    "BucketPlan",
+    "build_plan",
+    "HardwareSpec",
+    "analytic_times",
+    "select_interval",
+    "available",
+    "get_compressor",
+    "EFSchedule",
+    "compression_ratio",
+    "selected_buckets",
+]

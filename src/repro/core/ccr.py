@@ -1,0 +1,135 @@
+"""CCR (communication-to-computation ratio) estimation + interval selection
+(paper SS III.B).
+
+Two estimators, per DESIGN.md SS2:
+
+* ``analytic_ccr`` — the TPU-native profiler: XLA graphs are static, so
+  communication volume and FLOPs are exact properties of the compiled
+  artifact (or of the config, pre-compile).  This replaces CUDA-event
+  tracing for the production path.
+* ``measure_ccr`` / ``align_comm_times`` — the paper's measured profiler,
+  including the *distributed timeline alignment*: a worker that reaches the
+  collective early observes transfer + rendezvous-wait; the true transfer
+  starts when the **last** worker arrives, so per-op comm time is
+  ``end - max_w(start_w)``.  Used by the CPU benchmarks and tests.
+
+The adaptive rule is the paper's: ``I = ceil(CCR)`` (a little more
+compression than strictly needed, so the remaining communication always
+fits under the backward pass).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """TPU v5e defaults (per chip)."""
+
+    peak_flops: float = 197e12          # bf16 FLOP/s
+    hbm_bw: float = 819e9               # bytes/s
+    ici_bw: float = 50e9                # bytes/s per link
+    dcn_bw: float = 6.25e9              # bytes/s per chip across pods (DCN)
+    mfu: float = 0.4                    # assumed model-FLOPs utilisation
+
+    @staticmethod
+    def v5e() -> "HardwareSpec":
+        return HardwareSpec()
+
+    @staticmethod
+    def cloud_v100_30gbps() -> "HardwareSpec":
+        """The paper's environment: V100 + 30 Gbps Ethernet."""
+        return HardwareSpec(
+            peak_flops=125e12, hbm_bw=900e9, ici_bw=30e9 / 8, mfu=0.35
+        )
+
+
+def allreduce_bytes_on_wire(payload_bytes: float, world: int) -> float:
+    """Ring all-reduce: each worker moves 2*(W-1)/W * payload."""
+    if world <= 1:
+        return 0.0
+    return 2.0 * (world - 1) / world * payload_bytes
+
+
+def analytic_times(
+    *,
+    step_flops_per_chip: float,
+    grad_bytes: float,
+    dp_world: int,
+    hw: HardwareSpec,
+    fwd_fraction: float = 1.0 / 3.0,
+) -> dict:
+    """Analytic T_before / T_comp / T_comm for one DP step (paper Table I).
+
+    ``step_flops_per_chip`` is fwd+bwd model FLOPs per chip;
+    the backward pass is ~2/3 of it; T_before ~ forward third.
+    """
+    t_total_compute = step_flops_per_chip / (hw.peak_flops * hw.mfu)
+    t_before = t_total_compute * fwd_fraction
+    t_comp = t_total_compute * (1.0 - fwd_fraction)
+    wire = allreduce_bytes_on_wire(grad_bytes, dp_world)
+    t_comm = wire / hw.ici_bw
+    ccr = t_comm / max(t_comp, 1e-12)
+    return {
+        "t_before": t_before,
+        "t_comp": t_comp,
+        "t_comm": t_comm,
+        "ccr": ccr,
+    }
+
+
+def select_interval(ccr: float, max_interval: int = 64) -> int:
+    """The paper's adaptive compression ratio: I = ceil(CCR), floored at 1."""
+    return int(min(max(1, math.ceil(ccr)), max_interval))
+
+
+# ---------------------------------------------------------------------------
+# measured profiler (CPU benchmarks / tests)
+# ---------------------------------------------------------------------------
+
+def align_comm_times(
+    starts: np.ndarray, ends: np.ndarray
+) -> np.ndarray:
+    """Distributed-profiler alignment (paper SS III.B, Fig. 3).
+
+    ``starts``/``ends``: (workers, ops) wall-clock times of each collective.
+    Returns (ops,) true transfer times: ``min_w(end) - max_w(start)`` — wait
+    time spent by early workers at the rendezvous is excluded.
+    """
+    starts = np.asarray(starts, dtype=np.float64)
+    ends = np.asarray(ends, dtype=np.float64)
+    return ends.min(axis=0) - starts.max(axis=0)
+
+
+def measure_ccr(
+    step_full: Callable[[], None],
+    step_compute_only: Callable[[], None],
+    *,
+    warmup: int = 2,
+    iters: int = 5,
+) -> dict:
+    """One-off measured profiler: times a full DP step vs. a communication-
+    free step and derives CCR = (T_full - T_comp) / T_comp."""
+
+    def timed(fn):
+        for _ in range(warmup):
+            fn()
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            fn()
+        return (time.perf_counter() - t0) / iters
+
+    t_full = timed(step_full)
+    t_comp = timed(step_compute_only)
+    t_comm = max(t_full - t_comp, 0.0)
+    return {
+        "t_full": t_full,
+        "t_comp": t_comp,
+        "t_comm": t_comm,
+        "ccr": t_comm / max(t_comp, 1e-12),
+    }

@@ -1,0 +1,34 @@
+"""GC scheme registry: COVAP + every baseline from the paper's Table II."""
+from .base import (
+    Compressor,
+    SyncStats,
+    available,
+    dense_bytes,
+    get_compressor,
+    register,
+)
+from .covap import COVAP
+from .fp8wire import FP8Wire
+from .oktopk import OkTopK
+from .powersgd import PowerSGD
+from .signsgd import EFSignSGD
+from .simple import HalfPrecision, NoCompression
+from .sparsify import DGC, RandomK, TopK
+
+__all__ = [
+    "Compressor",
+    "SyncStats",
+    "available",
+    "dense_bytes",
+    "get_compressor",
+    "register",
+    "COVAP",
+    "NoCompression",
+    "HalfPrecision",
+    "TopK",
+    "DGC",
+    "RandomK",
+    "EFSignSGD",
+    "PowerSGD",
+    "OkTopK",
+]

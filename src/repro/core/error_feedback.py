@@ -1,0 +1,52 @@
+"""Error feedback with COVAP's compensation-coefficient scheduler (SS III.D).
+
+Algorithm 1 of the paper, with the scheduler extension:
+
+    t         = g + coeff(step) * residual      # compensation
+    g'        = filter(t)                       # communicated part
+    residual' = t - g'                          # kept locally
+
+    coeff(step) = min(init + floor(step / ascend_steps) * ascend_range, 1)
+
+The residual lives as a pytree with the *same structure and sharding* as the
+gradients, so it adds exactly one parameter-sized buffer per worker and never
+forces a resharding collective.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class EFSchedule:
+    init_value: float = 0.3
+    ascend_steps: int = 200
+    ascend_range: float = 0.1
+
+    def coefficient(self, step) -> jax.Array:
+        """Traceable: ``step`` may be a python int or a jnp scalar."""
+        step = jnp.asarray(step, jnp.float32)
+        c = self.init_value + jnp.floor(step / self.ascend_steps) * self.ascend_range
+        return jnp.minimum(c, 1.0)
+
+
+def init_residual(params_like: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params_like)
+
+
+def compensate(grads: Any, residual: Any, coeff) -> Any:
+    """t = g + coeff * r (line 2 of Algorithm 1 with the scheduler)."""
+    return jax.tree.map(lambda g, r: g + coeff * r.astype(g.dtype), grads, residual)
+
+
+def residual_update(t: Any, sent: Any) -> Any:
+    """residual' = t - g' (line 4 of Algorithm 1).
+
+    ``sent`` must be the *local pre-reduction* contribution at the positions
+    that were communicated and zero elsewhere.
+    """
+    return jax.tree.map(lambda a, b: a - b, t, sent)

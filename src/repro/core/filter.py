@@ -1,0 +1,59 @@
+"""COVAP coarse-grained gradient filter (paper SS III.A).
+
+Bucket ``t`` is communicated at iteration ``num_steps`` iff
+``(t + num_steps) % I == 0``.  Every bucket is therefore communicated exactly
+once per ``I`` consecutive iterations, and ~``num_buckets / I`` buckets are
+communicated per iteration — a compression ratio of ``I`` with O(num_buckets)
+selection cost and **no data dependency**: every worker derives the same
+selection from ``(step, I)`` locally, no index exchange required.
+
+On TPU/XLA the selection must be static inside a compiled graph, so the train
+step is specialised on ``phase = step % I`` (``I`` compiled executables); see
+DESIGN.md SS8.  ``selected_buckets`` is the single source of truth used both by
+the runtime and by the tests proving schedule equivalence with the paper's
+modulo rule.
+"""
+from __future__ import annotations
+
+from .bucketing import BucketPlan
+
+
+def is_selected(bucket_idx: int, step: int, interval: int) -> bool:
+    """The paper's selection rule, verbatim."""
+    if interval <= 1:
+        return True
+    return (bucket_idx + step) % interval == 0
+
+
+def selected_buckets(num_buckets: int, phase: int, interval: int) -> tuple[int, ...]:
+    """Indices of buckets communicated at any step with ``step % I == phase``."""
+    if interval <= 1:
+        return tuple(range(num_buckets))
+    return tuple(
+        b for b in range(num_buckets) if (b + phase) % interval == 0
+    )
+
+
+def selected_numel(plan: BucketPlan, phase: int, interval: int) -> int:
+    sel = selected_buckets(plan.num_buckets, phase, interval)
+    return sum(plan.buckets[b].numel for b in sel)
+
+
+def compression_ratio(plan: BucketPlan, interval: int) -> float:
+    """Average achieved volume-compression ratio over one full period."""
+    if interval <= 1:
+        return 1.0
+    total = plan.total_numel()
+    per_step = [
+        selected_numel(plan, phase, interval) for phase in range(interval)
+    ]
+    avg = sum(per_step) / interval
+    return total / max(avg, 1)
+
+
+def schedule_table(num_buckets: int, interval: int, steps: int) -> list[list[int]]:
+    """For visualisation/tests: bucket selections for ``steps`` iterations."""
+    return [
+        [b for b in range(num_buckets) if is_selected(b, s, interval)]
+        for s in range(steps)
+    ]

@@ -1,0 +1,138 @@
+"""The paper's analytical performance model — equations (1)-(6) — plus the
+bucket-timeline simulator used for Figs. 1/4/5/11.
+
+All times in seconds; all speedups relative to single-worker linear scaling
+(upper limit = P, the number of workers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+
+# ---- eq (1)/(2): plain DP ---------------------------------------------------
+
+def t_dp(t_before: float, t_comp: float, t_comm: float) -> float:
+    return t_before + t_comp + t_comm
+
+
+def speedup_dp(P: int, t_before: float, t_comp: float, t_comm: float) -> float:
+    """Eq (2): P * k / (k + CCR), k = T_before/T_comp + 1."""
+    k = t_before / t_comp + 1.0
+    ccr = t_comm / t_comp
+    return P * k / (k + ccr)
+
+
+# ---- eq (3): tensor-based overlapping timeline ------------------------------
+
+def simulate_overlap(
+    t_before: float,
+    comp_times: Sequence[float],
+    comm_times: Sequence[float],
+) -> dict:
+    """Simulate one iteration of bucketed overlapped DP (Fig. 1(b)/(d)).
+
+    Bucket i's communication may start once (a) its gradients are computed
+    and (b) the previous bucket's communication finished (collectives are
+    ordered on the interconnect).  Returns total time + bubble accounting
+    (the idle interconnect slots of eq (3))."""
+    assert len(comp_times) == len(comm_times)
+    t = t_before
+    comm_free = t_before
+    bubbles = 0.0
+    for comp, comm in zip(comp_times, comm_times):
+        t += comp  # gradient of this bucket ready
+        start = max(t, comm_free)
+        if comm > 0 and start > comm_free and comm_free > t_before:
+            bubbles += start - comm_free
+        comm_free = start + comm
+    total = max(t, comm_free)
+    return {
+        "total": total,
+        "compute_end": t,
+        "comm_end": comm_free,
+        "bubbles": bubbles,
+        "exposed_comm": max(0.0, comm_free - t),
+    }
+
+
+def t_ovlp(t_before: float, t_comp: float, t_comm: float, n_buckets: int = 8) -> float:
+    """Eq (4) via the simulator with uniform buckets."""
+    comp = [t_comp / n_buckets] * n_buckets
+    comm = [t_comm / n_buckets] * n_buckets
+    return simulate_overlap(t_before, comp, comm)["total"]
+
+
+def speedup_ovlp(P: int, t_before: float, t_comp: float, t_comm: float) -> float:
+    ls = t_before + t_comp
+    return P * ls / t_ovlp(t_before, t_comp, t_comm)
+
+
+# ---- eq (5)/(6): GC and GC+overlap ------------------------------------------
+
+def t_gc(
+    t_before: float, t_comp: float, t_comm_gc: float, t_compress: float
+) -> float:
+    """Eq (5): compression is serial between compute and communication."""
+    return t_before + t_comp + t_compress + t_comm_gc
+
+
+def t_gc_ovlp(
+    t_before: float,
+    t_comp: float,
+    t_comm_gc: float,
+    t_compress: float,
+    n_buckets: int = 8,
+    data_dependency: bool = False,
+) -> float:
+    """Eq (6) via the simulator.  With ``data_dependency`` (Fig. 1(e)) the
+    scheme's synchronous exchange serialises compression+communication after
+    compute — overlap is lost (Ok-topk-style)."""
+    if data_dependency:
+        return t_before + t_comp + t_compress + t_comm_gc
+    comp = [(t_comp + t_compress) / n_buckets] * n_buckets
+    comm = [t_comm_gc / n_buckets] * n_buckets
+    return simulate_overlap(t_before, comp, comm)["total"]
+
+
+def speedup_gc_ovlp(
+    P: int,
+    t_before: float,
+    t_comp: float,
+    t_comm: float,
+    *,
+    volume_ratio: float,
+    t_compress: float = 0.0,
+    data_dependency: bool = False,
+    n_buckets: int = 8,
+) -> float:
+    """Speedup of a GC scheme under overlapping; ``volume_ratio`` is the
+    communication-volume compression factor (dense/sent)."""
+    ls = t_before + t_comp
+    total = t_gc_ovlp(
+        t_before,
+        t_comp,
+        t_comm / max(volume_ratio, 1e-9),
+        t_compress,
+        n_buckets=n_buckets,
+        data_dependency=data_dependency,
+    )
+    return P * ls / total
+
+
+@dataclasses.dataclass(frozen=True)
+class SchemeProfile:
+    """What the timeline model needs to know about a GC scheme."""
+
+    name: str
+    volume_ratio: float          # dense bytes / sent bytes
+    compress_overhead_frac: float  # T_compress / T_comp
+    data_dependency: bool = False
+    allgather_based: bool = False  # scales worse with W (Fig. 11)
+
+    def comm_scale(self, world: int) -> float:
+        """AllGather traffic grows ~W/(2(W-1)/W) vs ring all-reduce."""
+        if not self.allgather_based or world <= 1:
+            return 1.0
+        ring = 2.0 * (world - 1) / world
+        return world / ring

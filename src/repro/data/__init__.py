@@ -1,0 +1,12 @@
+"""Data pipeline: deterministic synthetic corpora + sharded host loader."""
+from .pipeline import DataConfig, ShardedLoader, make_loader, synth_batch
+from .synthetic import markov_corpus, zipf_tokens
+
+__all__ = [
+    "DataConfig",
+    "ShardedLoader",
+    "make_loader",
+    "synth_batch",
+    "markov_corpus",
+    "zipf_tokens",
+]

@@ -1,0 +1,30 @@
+"""Shared Pallas helpers: interpret-mode selection + padding utilities.
+
+Kernels TARGET TPU (pl.pallas_call with explicit VMEM BlockSpecs, tile sizes
+aligned to the 8x128 VPU lanes / 128x128 MXU); on this CPU container they
+are VALIDATED with ``interpret=True`` which executes the kernel body in
+Python.  ``INTERPRET`` auto-detects the backend.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INTERPRET = jax.default_backend() != "tpu"
+
+# default elementwise block: 8 sublanes x 128 lanes x 32 = 32k elems (128 KiB fp32)
+ELEMWISE_BLOCK = 32768
+
+
+def pad_to_multiple(x: jax.Array, multiple: int, axis: int = 0, value=0):
+    n = x.shape[axis]
+    rem = (-n) % multiple
+    if rem == 0:
+        return x, n
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad, constant_values=value), n
+
+
+def unpad(x: jax.Array, n: int, axis: int = 0):
+    return jax.lax.slice_in_dim(x, 0, n, axis=axis)

@@ -1,0 +1,73 @@
+"""MXU-aligned blocked matmul kernel — the PowerSGD P/Q projection hot-spot.
+
+C (m, n) = A (m, k) @ B (k, n) with 128-aligned tiles, fp32 accumulation in
+a VMEM scratch accumulator; grid (m/bm, n/bn, k/bk) with k innermost so the
+accumulator lives across the k-loop (standard TPU matmul schedule).
+PowerSGD calls this with n = rank (padded to 128) — a skinny matmul where
+MXU alignment of the m/k tiles is what matters.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import INTERPRET
+
+
+def _matmul_kernel(a_ref, b_ref, c_ref, acc_ref, *, k_steps):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...].astype(jnp.float32),
+        b_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _store():
+        c_ref[...] = acc_ref[...].astype(c_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret", "out_dtype")
+)
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    out_dtype=jnp.float32,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Tiled matmul; dims are padded up to tile multiples."""
+    interpret = INTERPRET if interpret is None else interpret
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    a = jnp.pad(a, ((0, pm), (0, pk)))
+    b = jnp.pad(b, ((0, pk), (0, pn)))
+    M, K = a.shape
+    _, N = b.shape
+    k_steps = K // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=(M // bm, N // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+    return out[:m, :n]

@@ -1,0 +1,17 @@
+"""jit'd public wrappers for the Pallas kernels."""
+from .ef_covap import ef_update
+from .lowrank import matmul
+from .quantize import dequantize_fp8, quantize_fp8
+from .sign_compress import sign_compress, sign_decompress
+from .topk_threshold import sample_threshold, threshold_filter
+
+__all__ = [
+    "ef_update",
+    "matmul",
+    "quantize_fp8",
+    "dequantize_fp8",
+    "sign_compress",
+    "sign_decompress",
+    "threshold_filter",
+    "sample_threshold",
+]

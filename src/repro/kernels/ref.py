@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+FP8_MAX = 448.0
+
+
+def ef_update_ref(g, r, coeff, *, selected: bool):
+    t = g + jnp.asarray(coeff, g.dtype) * r
+    if selected:
+        return t, jnp.zeros_like(t)
+    return jnp.zeros_like(t), t
+
+
+def quantize_fp8_ref(x, *, block: int = 8192):
+    n = x.shape[0]
+    pad = (-n) % block
+    xp = jnp.pad(x, (0, pad)).astype(jnp.float32)
+    nb = xp.shape[0] // block
+    x2 = xp.reshape(nb, block)
+    amax = jnp.max(jnp.abs(x2), axis=1)
+    scales = jnp.maximum(amax / FP8_MAX, 1e-12)
+    q = (x2 / scales[:, None]).astype(jnp.float8_e4m3fn)
+    return q.reshape(-1)[:n], scales
+
+
+def dequantize_fp8_ref(q, scales, *, block: int = 8192):
+    n = q.shape[0]
+    pad = (-n) % block
+    qp = jnp.pad(q, (0, pad))
+    nb = qp.shape[0] // block
+    x = qp.reshape(nb, block).astype(jnp.float32) * scales[:, None]
+    return x.reshape(-1)[:n]
+
+
+def sign_compress_ref(x):
+    signs = jnp.where(x >= 0, 1, -1).astype(jnp.int8)
+    scale = jnp.mean(jnp.abs(x.astype(jnp.float32)))
+    return signs, scale
+
+
+def threshold_filter_ref(x, threshold, *, block: int = 32768):
+    keep = jnp.abs(x) >= threshold
+    y = jnp.where(keep, x, jnp.zeros_like(x))
+    n = x.shape[0]
+    pad = (-n) % block
+    kp = jnp.pad(keep, (0, pad))
+    counts = kp.reshape(-1, block).sum(axis=1).astype(jnp.int32)
+    return y, counts
+
+
+def matmul_ref(a, b, out_dtype=jnp.float32):
+    return jnp.dot(
+        a.astype(jnp.float32), b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(out_dtype)

@@ -1,0 +1,65 @@
+"""SSDry-run evidence table: memory fit + collective schedule per combo.
+
+    python -m repro.launch.dryrun_summary --dir experiments/dryrun_v2 \
+        --md experiments/dryrun_summary.md
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def gb(x):
+    return f"{x/1e9:.2f}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun_v2")
+    ap.add_argument("--md", default="")
+    args = ap.parse_args()
+
+    recs = []
+    for f in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+
+    lines = [
+        "| arch | shape | mesh | peak GB/dev | args GB | AR ops/GB | "
+        "AG ops/GB | A2A ops/GB | compile s |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(
+        recs, key=lambda r: (r.get("arch", ""), r.get("shape", ""), r.get("mesh", ""))
+    ):
+        if r.get("status") != "ok":
+            lines.append(
+                f"| {r.get('arch')} | {r.get('shape')} | {r.get('mesh')} | "
+                f"{r.get('status').upper()} | | | | | |"
+            )
+            continue
+        ma = r.get("memory_analysis", {})
+        coll = r.get("collectives", {}).get("by_kind", {})
+
+        def cell(kind):
+            d = coll.get(kind)
+            return f"{d['count']}/{gb(d['bytes'])}" if d else "-"
+
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{gb(ma.get('peak_memory_in_bytes', 0))} | "
+            f"{gb(ma.get('argument_size_in_bytes', 0))} | "
+            f"{cell('all-reduce')} | {cell('all-gather')} | "
+            f"{cell('all-to-all')} | {r.get('compile_s', '')} |"
+        )
+    text = "\n".join(lines)
+    if args.md:
+        with open(args.md, "w") as f:
+            f.write(text)
+    print(text)
+
+
+if __name__ == "__main__":
+    main()

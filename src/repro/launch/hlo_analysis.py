@@ -1,0 +1,207 @@
+"""HLO artifact analysis: collective-byte accounting + roofline terms.
+
+``cost_analysis()`` gives HLO FLOPs and HBM bytes but NOT collective volume,
+so collectives are parsed from the compiled module text: every
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute
+op's result bytes are summed (start/done pairs counted once).
+
+Wire-byte model (ring algorithms): all-reduce moves 2(n-1)/n of its buffer
+per device; the others move ~(n-1)/n ~ 1x.  We report raw buffer bytes per
+type plus a wire estimate with factor 2 for all-reduce, 1 otherwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Iterable
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLL_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\b"
+)
+_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|c64)\[([\d,]*)\]")
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: int
+    line: str
+
+
+def _result_bytes(lhs: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(lhs):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> list[CollectiveOp]:
+    ops = []
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        _, rhs = s.split("=", 1)
+        m = _COLL_RE.search(rhs)
+        if not m:
+            continue
+        # '-done' ops re-state the shape; only count the op (or its -start)
+        if re.search(r"\b\w+-done\b", rhs):
+            continue
+        kind = m.group(1)
+        # result shape(s) sit between '=' and the opcode
+        shape_str = rhs[: m.start()]
+        ops.append(CollectiveOp(kind, _result_bytes(shape_str), s[:200]))
+    return ops
+
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\([^)]*\)\s*->")
+_WHILE_RE = re.compile(
+    r"\bwhile\(.*?\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)"
+)
+_CALL_RE = re.compile(r"\b(?:call|to_apply|calls)=%?([\w\.\-]+)")
+_CONST_INT = re.compile(r"\bconstant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> tuple[dict[str, list[str]], str | None]:
+    """-> ({computation_name: lines}, entry_name)."""
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _COMP_HDR.match(line.strip()) if line and not line.startswith(" ") else None
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps, entry
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    consts = [int(x) for l in cond_lines for x in _CONST_INT.findall(l)]
+    consts = [c for c in consts if 1 < c <= 1_000_000]
+    return max(consts) if consts else 1
+
+
+def computation_multipliers(hlo_text: str) -> dict[str, int]:
+    """Execution-count multiplier per computation, following while-loop
+    nesting from ENTRY (lax.scan bodies execute trip-count times — XLA's
+    cost_analysis ignores this; we don't)."""
+    comps, entry = _split_computations(hlo_text)
+    if entry is None:
+        return {name: 1 for name in comps}
+    mult = {name: 0 for name in comps}
+
+    def visit(name: str, m: int, depth=0):
+        if name not in comps or depth > 12:
+            return
+        mult[name] = mult.get(name, 0) + m
+        for line in comps[name]:
+            w = _WHILE_RE.search(line)
+            if w:
+                cond, body = w.group(1), w.group(2)
+                trips = _trip_count(comps.get(cond, []))
+                visit(body, m * trips, depth + 1)
+                visit(cond, m * (trips + 1), depth + 1)
+                continue
+            for callee in _CALL_RE.findall(line):
+                if callee in comps and callee != name:
+                    visit(callee, m, depth + 1)
+
+    visit(entry, 1)
+    return {k: max(v, 0) for k, v in mult.items()}
+
+
+def collective_summary(hlo_text: str, trip_aware: bool = True) -> dict:
+    comps, entry = _split_computations(hlo_text)
+    mults = computation_multipliers(hlo_text) if trip_aware else {}
+    by_kind: dict[str, dict] = {}
+    total_ops = 0
+    buffer_bytes = 0
+    wire = 0
+    for name, lines in (comps.items() if comps else [("", hlo_text.splitlines())]):
+        m = mults.get(name, 1) if trip_aware else 1
+        if m == 0:
+            m = 1  # unreferenced (conservative)
+        for op in parse_collectives("\n".join(lines)):
+            total_ops += m
+            d = by_kind.setdefault(op.kind, {"count": 0, "bytes": 0})
+            d["count"] += m
+            d["bytes"] += m * op.result_bytes
+            buffer_bytes += m * op.result_bytes
+            wire += (2 if op.kind == "all-reduce" else 1) * m * op.result_bytes
+    return {
+        "ops": total_ops,
+        "by_kind": by_kind,
+        "buffer_bytes": buffer_bytes,
+        "wire_bytes_est": wire,
+        "trip_aware": trip_aware,
+    }
+
+
+# ---------------------------------------------------------------------------
+# roofline
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def roofline_terms(
+    *,
+    flops_per_device: float,
+    hbm_bytes_per_device: float,
+    wire_bytes_per_device: float,
+    peak_flops: float = 197e12,
+    hbm_bw: float = 819e9,
+    ici_bw: float = 50e9,
+) -> RooflineTerms:
+    return RooflineTerms(
+        compute_s=flops_per_device / peak_flops,
+        memory_s=hbm_bytes_per_device / hbm_bw,
+        collective_s=wire_bytes_per_device / ici_bw,
+    )
+
+
+def count_hlo_ops(hlo_text: str, names: Iterable[str]) -> dict[str, int]:
+    out = {n: 0 for n in names}
+    for line in hlo_text.splitlines():
+        for n in names:
+            if re.search(rf"\b{re.escape(n)}\b", line):
+                out[n] += 1
+    return out

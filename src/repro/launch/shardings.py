@@ -1,0 +1,144 @@
+"""Sharding assignment for the dry-run / production launchers.
+
+Training:  params/opt/EF-residuals sharded over 'model' (TP), replicated
+over the DP axes (the COVAP psums run there).  Batch over DP axes.
+
+Serving:   no gradients -> weights are sharded over ('model','data') [+
+'pod' for batch-1 long-context] so the full fleet's HBM holds them; KV
+caches shard batch over the DP axes and kv-heads/head-dim over 'model';
+batch-1 long-context shards the cache's *sequence* axis over 'data'.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import build_param_specs
+
+
+def as_named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _axis_size(mesh, names) -> int:
+    if isinstance(names, str):
+        names = (names,)
+    n = 1
+    for a in names:
+        n *= mesh.shape[a]
+    return n
+
+
+def train_param_specs(model, mesh):
+    return build_param_specs(
+        model.cfg, model.init, _axis_size(mesh, "model"), "model"
+    )
+
+
+def serve_param_specs(model, mesh, *, include_pod_in_weights: bool = False):
+    axes = ("model", "data", "pod") if include_pod_in_weights else ("model", "data")
+    axes = tuple(a for a in axes if a in mesh.shape)
+    sizes = tuple(mesh.shape[a] for a in axes)
+    return build_param_specs(
+        model.cfg, model.init, _axis_size(mesh, axes), axes, axis_sizes=sizes
+    )
+
+
+def opt_state_specs(opt_state_shapes: dict, param_specs) -> dict:
+    """Optimizer moments mirror the parameter shardings."""
+    out = {}
+    for k, v in opt_state_shapes.items():
+        if k == "step" or v == ():
+            out[k] = P() if k == "step" else ()
+        else:
+            out[k] = param_specs
+    return out
+
+
+def comp_state_specs(comp_state_shapes, param_shapes, param_specs):
+    """EF residuals mirror params; anything else is replicated."""
+    if comp_state_shapes == ():
+        return ()
+    same = jax.tree_util.tree_structure(
+        comp_state_shapes
+    ) == jax.tree_util.tree_structure(param_shapes)
+    if same:
+        return param_specs
+    return jax.tree.map(lambda _: P(), comp_state_shapes)
+
+
+def batch_specs(batch_sds: dict, mesh, dp_axes: Sequence[str]) -> dict:
+    dp = tuple(dp_axes)
+    world = _axis_size(mesh, dp)
+
+    def one(sds):
+        if sds.shape and sds.shape[0] % world == 0 and world > 1:
+            return P(dp)
+        # try pod-only for small batches on the multi-pod mesh
+        if (
+            "pod" in mesh.shape
+            and sds.shape
+            and sds.shape[0] % mesh.shape["pod"] == 0
+        ):
+            return P(("pod",))
+        return P()
+
+    return jax.tree.map(one, batch_sds)
+
+
+def cache_specs_tree(cache_sds, cfg, mesh, dp_axes: Sequence[str], batch: int):
+    """Heuristic KV/state cache shardings (see module docstring)."""
+    dp = tuple(a for a in dp_axes if a in mesh.shape)
+    dp_world = _axis_size(mesh, dp)
+    model_world = mesh.shape.get("model", 1)
+    kv = cfg.num_kv_heads
+    hd = cfg.head_dim
+    heads = cfg.num_heads
+
+    def one(sds):
+        shape = sds.shape
+        spec = [None] * len(shape)
+        batch_done = False
+        for ax, dim in enumerate(shape):
+            if ax == 0:
+                continue  # stacked layer axis
+            if not batch_done and dim == batch:
+                if batch % dp_world == 0 and dp_world > 1:
+                    spec[ax] = dp
+                elif "pod" in mesh.shape and batch % mesh.shape["pod"] == 0 and mesh.shape["pod"] > 1:
+                    spec[ax] = ("pod",)
+                batch_done = True
+                continue
+        # shard kv-heads (or head_dim) over 'model'
+        for ax in range(len(shape) - 1, 0, -1):
+            if spec[ax] is None and shape[ax] in (kv, heads) and shape[ax] % model_world == 0:
+                spec[ax] = "model"
+                break
+        else:
+            for ax in range(len(shape) - 1, 0, -1):
+                if spec[ax] is None and shape[ax] == hd and hd % model_world == 0:
+                    spec[ax] = "model"
+                    break
+        # batch-1 long context: shard the longest (sequence) axis over 'data'
+        if batch == 1 and "data" in mesh.shape:
+            seq_ax = max(
+                (ax for ax in range(1, len(shape)) if spec[ax] is None),
+                key=lambda ax: shape[ax],
+                default=None,
+            )
+            if (
+                seq_ax is not None
+                and shape[seq_ax] >= 4096
+                and shape[seq_ax] % mesh.shape["data"] == 0
+            ):
+                spec[seq_ax] = "data"
+        return P(*spec)
+
+    return jax.tree.map(one, cache_sds)

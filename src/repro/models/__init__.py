@@ -1,0 +1,20 @@
+"""Model zoo substrate: every assigned architecture family in pure JAX."""
+from .model import (
+    Model,
+    build_model,
+    build_param_specs,
+    count_params,
+    long_context_variant,
+    model_flops,
+    padded_vocab,
+)
+
+__all__ = [
+    "Model",
+    "build_model",
+    "build_param_specs",
+    "count_params",
+    "long_context_variant",
+    "model_flops",
+    "padded_vocab",
+]

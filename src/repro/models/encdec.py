@@ -1,0 +1,203 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+Encoder: bidirectional self-attention over stub frame embeddings.
+Decoder: causal self-attention + cross-attention to the encoder memory.
+Decode path caches decoder self-attn KV plus the projected memory KV.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import attention as attn
+from .attention import NEG_INF, _qkv, _scores_softmax_value
+from .layers import mlp, mlp_init, rmsnorm, rmsnorm_init, rope, truncated_normal_init
+
+
+# ---------------------------------------------------------------------------
+# cross attention
+# ---------------------------------------------------------------------------
+
+def cross_attn_init(key, cfg, dtype):
+    return attn.attn_init(key, cfg, dtype)
+
+
+def _memory_kv(params, memory, cfg):
+    cd = jnp.dtype(cfg.compute_dtype)
+    B, T, _ = memory.shape
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    k = jnp.einsum("btd,dh->bth", memory.astype(cd), params["wk"].astype(cd))
+    v = jnp.einsum("btd,dh->bth", memory.astype(cd), params["wv"].astype(cd))
+    return k.reshape(B, T, K, hd), v.reshape(B, T, K, hd)
+
+
+def cross_attn(params, x, mem_k, mem_v, cfg):
+    """x: (B,S,d); mem_k/v: (B,T,K,hd).  No masking (full cross-attn)."""
+    B, S, _ = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // K
+    cd = jnp.dtype(cfg.compute_dtype)
+    q = jnp.einsum("bsd,dh->bsh", x.astype(cd), params["wq"].astype(cd))
+    q = q.reshape(B, S, K, G, hd)
+    mask = jnp.ones((1, 1, 1, S, mem_k.shape[1]), bool)
+    out = _scores_softmax_value(q, mem_k, mem_v, mask, cfg)
+    out = out.reshape(B, S, H * hd)
+    return jnp.einsum("bsh,hd->bsd", out, params["wo"].astype(cd))
+
+
+def _bidir_attn(params, x, cfg):
+    """Non-causal self-attention (encoder)."""
+    B, S, _ = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // K
+    cd = jnp.dtype(cfg.compute_dtype)
+    q, k, v = _qkv(params, x, cfg)
+    positions = jnp.arange(S)[None, :]
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    mask = jnp.ones((1, 1, 1, S, S), bool)
+    out = _scores_softmax_value(q.reshape(B, S, K, G, hd), k, v, mask, cfg)
+    out = out.reshape(B, S, H * hd)
+    return jnp.einsum("bsh,hd->bsd", out, params["wo"].astype(cd))
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def enc_block_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attn.attn_init(k1, cfg, dtype),
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+        "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def dec_block_init(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attn.attn_init(k1, cfg, dtype),
+        "lnx": rmsnorm_init(cfg.d_model, dtype),
+        "xattn": cross_attn_init(k2, cfg, dtype),
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+        "mlp": mlp_init(k3, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def encdec_init(key, cfg) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ke, kd = jax.random.split(key)
+    enc_keys = jax.random.split(ke, cfg.encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.num_layers)
+    return {
+        "encoder": jax.vmap(lambda k: enc_block_init(k, cfg, dtype))(enc_keys),
+        "enc_norm": rmsnorm_init(cfg.d_model, dtype),
+        "decoder": jax.vmap(lambda k: dec_block_init(k, cfg, dtype))(dec_keys),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+
+
+def encode(params, frames, cfg):
+    """frames: (B, T_enc, d) stub frontend embeddings -> memory (B, T_enc, d)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = frames.astype(cd)
+
+    def body(x, p):
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        x = x + _bidir_attn(p["attn"], h, cfg)
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        x = x + mlp(p["mlp"], h, cfg.mlp_act, cd)
+        return x, ()
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = lax.scan(body, x, params["encoder"])
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def decode_train(params, x, memory, cfg, *, window: int = 0):
+    """Teacher-forced decoder pass.  x: (B,S,d) token embeddings."""
+    cd = jnp.dtype(cfg.compute_dtype)
+
+    def body(x, p):
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        x = x + attn.attn_train(p["attn"], h, cfg, window=window)
+        h = rmsnorm(p["lnx"], x, cfg.norm_eps)
+        mk, mv = _memory_kv(p["xattn"], memory, cfg)
+        x = x + cross_attn(p["xattn"], h, mk, mv, cfg)
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        x = x + mlp(p["mlp"], h, cfg.mlp_act, cd)
+        return x, ()
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = lax.scan(body, x.astype(cd), params["decoder"])
+    return rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# decode step
+# ---------------------------------------------------------------------------
+
+def dec_caches(params_or_cfg, cfg, batch, max_len, memory_len, *, window: int = 0,
+               specs_only: bool = False):
+    L = cfg.num_layers
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    cd = jnp.dtype(cfg.compute_dtype)
+    self_c = attn.cache_specs(cfg, batch, max_len, window=window) if specs_only \
+        else attn.init_cache(cfg, batch, max_len, window=window)
+
+    def stack(leaf):
+        if specs_only:
+            return jax.ShapeDtypeStruct((L,) + leaf.shape, leaf.dtype)
+        return jnp.zeros((L,) + leaf.shape, leaf.dtype)
+
+    mem_kv_shape = (L, batch, memory_len, K, hd)
+    mem_kv = (
+        jax.ShapeDtypeStruct(mem_kv_shape, cd)
+        if specs_only
+        else jnp.zeros(mem_kv_shape, cd)
+    )
+    return {
+        "self": jax.tree.map(stack, self_c),
+        "mem_k": mem_kv,
+        "mem_v": mem_kv if specs_only else jnp.zeros(mem_kv_shape, cd),
+    }
+
+
+def precompute_memory_kv(params, memory, cfg):
+    """Project encoder memory into per-layer cross-attn KV once per request."""
+
+    def body(_, p):
+        mk, mv = _memory_kv(p["xattn"], memory, cfg)
+        return (), (mk, mv)
+
+    _, (mks, mvs) = lax.scan(body, (), params["decoder"])
+    return mks, mvs  # (L, B, T, K, hd)
+
+
+def decode_step(params, x, caches, pos, cfg, *, window: int = 0):
+    """x: (B,1,d) -> (y (B,1,d), new_caches)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+
+    def body(x, scanned):
+        p, self_c, mk, mv = scanned
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        y, self_c = attn.attn_decode(p["attn"], h, self_c, pos, cfg, window=window)
+        x = x + y
+        h = rmsnorm(p["lnx"], x, cfg.norm_eps)
+        x = x + cross_attn(p["xattn"], h, mk, mv, cfg)
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        x = x + mlp(p["mlp"], h, cfg.mlp_act, cd)
+        return x, self_c
+
+    x, new_self = lax.scan(
+        body, x.astype(cd),
+        (params["decoder"], caches["self"], caches["mem_k"], caches["mem_v"]),
+    )
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, {"self": new_self, "mem_k": caches["mem_k"], "mem_v": caches["mem_v"]}

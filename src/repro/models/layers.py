@@ -1,0 +1,144 @@
+"""Shared model primitives: norms, linears, embeddings, RoPE, gated MLPs.
+
+Conventions:
+* params are nested dicts of ``jnp`` arrays;
+* stacked-layer leaves carry a leading ``(n_superblocks,)`` axis and are
+  consumed inside ``lax.scan`` bodies;
+* matmul inputs are cast to ``compute_dtype``; accumulation is fp32 via
+  ``preferred_element_type`` where it matters.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def truncated_normal_init(key, shape, dtype, scale: float = 1.0):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale / math.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * lax.rsqrt(var + eps)
+    return (x * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+def layernorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * lax.rsqrt(var + eps)
+    out = x * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# linear / embedding
+# ---------------------------------------------------------------------------
+
+def linear_init(key, d_in: int, d_out: int, dtype, bias: bool = False) -> dict:
+    p = {"w": truncated_normal_init(key, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(params: dict, x: jax.Array, compute_dtype=jnp.bfloat16) -> jax.Array:
+    w = params["w"].astype(compute_dtype)
+    y = jnp.einsum("...i,io->...o", x.astype(compute_dtype), w)
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def embedding_init(key, vocab: int, d: int, dtype) -> dict:
+    return {"table": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+
+def embed(params: dict, tokens: jax.Array, compute_dtype=jnp.bfloat16) -> jax.Array:
+    return params["table"].astype(compute_dtype)[tokens]
+
+
+def unembed(params: dict, x: jax.Array, compute_dtype=jnp.bfloat16) -> jax.Array:
+    """Tied unembedding: logits over the vocab."""
+    t = params["table"].astype(compute_dtype)
+    return jnp.einsum("...d,vd->...v", x.astype(compute_dtype), t)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(
+        -jnp.arange(0, half, dtype=jnp.float32) * (math.log(theta) / half)
+    )
+    ang = positions[..., :, None].astype(jnp.float32) * freqs[None, :]
+    cos = jnp.cos(ang)[..., :, None, :]  # (..., seq, 1, half)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# gated MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": truncated_normal_init(k1, (d, d_ff), dtype),
+        "w_up": truncated_normal_init(k2, (d, d_ff), dtype),
+        "w_down": truncated_normal_init(k3, (d_ff, d), dtype),
+    }
+
+
+def _act(name: str, x: jax.Array) -> jax.Array:
+    if name == "swiglu":
+        return jax.nn.silu(x)
+    if name == "geglu":
+        return jax.nn.gelu(x, approximate=True)
+    if name == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(name)
+
+
+def mlp(params: dict, x: jax.Array, act: str, compute_dtype=jnp.bfloat16) -> jax.Array:
+    xc = x.astype(compute_dtype)
+    g = jnp.einsum("...d,df->...f", xc, params["w_gate"].astype(compute_dtype))
+    u = jnp.einsum("...d,df->...f", xc, params["w_up"].astype(compute_dtype))
+    h = _act(act, g) * u
+    return jnp.einsum("...f,fd->...d", h, params["w_down"].astype(compute_dtype))
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)

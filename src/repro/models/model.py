@@ -1,0 +1,421 @@
+"""Unified model API over every assigned architecture family.
+
+    model = build_model(cfg)
+    params = model.init(key)
+    loss, metrics = model.loss_fn(params, batch)              # train_4k
+    logits = model.prefill(params, batch)                     # prefill_32k
+    logits, caches = model.decode_step(params, caches, batch) # decode_*
+
+plus ``param_specs`` (tensor-parallel PartitionSpecs over the 'model' mesh
+axis) and ``input_specs`` (ShapeDtypeStruct stand-ins for the dry-run).
+
+Sharding deviations from the reference checkpoints (DESIGN.md SS8):
+embeddings are untied and the input table is sharded on d_model (cheap row
+gather) while the output head is sharded on the vocab (keeps logits
+vocab-sharded through the chunked softmax-xent); vocab sizes are padded to a
+multiple of 128 for even sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+from . import encdec as encdec_mod
+from . import multimodal, transformer
+from .layers import embedding_init, rmsnorm, softcap, truncated_normal_init
+
+LONG_CONTEXT_WINDOW = 8192  # sliding-window variant used for long_500k
+
+
+def padded_vocab(cfg: ArchConfig) -> int:
+    return int(math.ceil(cfg.vocab_size / 128) * 128)
+
+
+def long_context_variant(cfg: ArchConfig) -> ArchConfig:
+    """The sliding-window variant that makes full-attention archs runnable at
+    500k decode (DESIGN.md SS4)."""
+    if cfg.family in ("ssm", "hybrid"):
+        return cfg  # O(1)/O(window) state already
+    if cfg.local_global:
+        # gemma2: local layers keep their window; global layers get 32k
+        return cfg.with_(sliding_window=cfg.sliding_window or 4096)
+    return cfg.with_(sliding_window=LONG_CONTEXT_WINDOW)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable
+    loss_fn: Callable          # (params, batch) -> (loss, metrics)
+    prefill: Callable          # (params, batch) -> logits (B, S, V) last-chunk
+    decode_step: Callable      # (params, caches, batch) -> (logits, caches)
+    init_caches: Callable      # (batch, max_len) -> cache pytree
+    cache_specs: Callable      # (batch, max_len) -> ShapeDtypeStruct pytree
+    param_specs: Callable      # (model_axis_size) -> pytree of PartitionSpec
+    input_specs: Callable      # (InputShape) -> batch of ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# loss (chunked softmax-xent, vocab-sharded logits)
+# ---------------------------------------------------------------------------
+
+def _xent_chunked(head_w, x, labels, cfg):
+    """x: (B,S,d) hidden; labels: (B,S) int32, -1 = ignore.
+
+    Computes softmax-xent in sequence chunks so the (B,c,V) logits buffer is
+    bounded (DESIGN.md SS7)."""
+    B, S, d = x.shape
+    c = min(cfg.xent_chunk, S)
+    if S % c != 0:
+        c = S
+    n = S // c
+    cd = jnp.dtype(cfg.compute_dtype)
+
+    xc = x.reshape(B, n, c, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n, c).transpose(1, 0, 2)
+
+    def body(acc, inp):
+        xk, lk = inp
+        logits = jnp.einsum("bcd,dv->bcv", xk.astype(cd), head_w.astype(cd))
+        logits = logits.astype(jnp.float32)
+        if cfg.logit_softcap > 0:
+            logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, jnp.clip(lk, 0)[..., None], axis=-1
+        )[..., 0]
+        mask = (lk >= 0).astype(jnp.float32)
+        loss_sum, count = acc
+        return (loss_sum + jnp.sum((lse - ll) * mask), count + jnp.sum(mask)), ()
+
+    (loss_sum, count), _ = lax.scan(body, (jnp.float32(0), jnp.float32(0)), (xc, lc))
+    return loss_sum / jnp.maximum(count, 1.0)
+
+
+def _logits(head_w, x, cfg):
+    cd = jnp.dtype(cfg.compute_dtype)
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(cd), head_w.astype(cd))
+    logits = logits.astype(jnp.float32)
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# decoder-only families (dense / moe / ssm / hybrid / vlm)
+# ---------------------------------------------------------------------------
+
+def _decoder_model(cfg: ArchConfig) -> Model:
+    V = padded_vocab(cfg)
+    is_vlm = cfg.family == "vlm"
+
+    def init(key):
+        dtype = jnp.dtype(cfg.param_dtype)
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        params = {
+            "embed": embedding_init(k1, V, cfg.d_model, dtype),
+            "stack": transformer.stack_init(k2, cfg),
+            "head": {"w": truncated_normal_init(k3, (cfg.d_model, V), dtype)},
+        }
+        if is_vlm:
+            params["projector"] = multimodal.projector_init(
+                k4, cfg.d_model, cfg.d_model, dtype
+            )
+        return params
+
+    def _embed_inputs(params, batch):
+        cd = jnp.dtype(cfg.compute_dtype)
+        x = params["embed"]["table"].astype(cd)[batch["tokens"]]
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cd)
+        if is_vlm and "patch_embeds" in batch:
+            pe = multimodal.project(params["projector"], batch["patch_embeds"], cd)
+            x = jnp.concatenate([pe, x], axis=1)
+        return x
+
+    def loss_fn(params, batch):
+        x = _embed_inputs(params, batch)
+        x, aux = transformer.stack_train(params["stack"], x, cfg)
+        labels = batch["labels"]
+        if is_vlm and "patch_embeds" in batch:
+            npatch = batch["patch_embeds"].shape[1]
+            pad = jnp.full(labels.shape[:1] + (npatch,), -1, labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+        loss = _xent_chunked(params["head"]["w"], x, labels, cfg)
+        total = loss + aux
+        return total, {"loss": loss, "aux_loss": aux}
+
+    def prefill(params, batch):
+        x = _embed_inputs(params, batch)
+        x, _ = transformer.stack_train(params["stack"], x, cfg)
+        # return logits of the last xent_chunk only (bounded output)
+        c = min(cfg.xent_chunk, x.shape[1])
+        return _logits(params["head"]["w"], x[:, -c:], cfg)
+
+    def decode_step(params, caches, batch):
+        cd = jnp.dtype(cfg.compute_dtype)
+        tok, pos = batch["tokens"], batch["pos"]  # (B,1), (B,)
+        x = params["embed"]["table"].astype(cd)[tok]
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cd)
+        x, caches = transformer.stack_decode(params["stack"], x, caches, pos, cfg)
+        return _logits(params["head"]["w"], x, cfg), caches
+
+    def init_caches(batch, max_len):
+        return transformer.init_caches(cfg, batch, max_len)
+
+    def cache_specs(batch, max_len):
+        return transformer.init_caches(cfg, batch, max_len, specs_only=True)
+
+    def input_specs(shape: InputShape):
+        return _decoder_input_specs(cfg, shape, is_vlm)
+
+    return Model(
+        cfg=cfg,
+        init=init,
+        loss_fn=loss_fn,
+        prefill=prefill,
+        decode_step=decode_step,
+        init_caches=init_caches,
+        cache_specs=cache_specs,
+        param_specs=lambda model_axis=16, axis_name="model": build_param_specs(
+            cfg, init, model_axis, axis_name
+        ),
+        input_specs=input_specs,
+    )
+
+
+def _decoder_input_specs(cfg, shape: InputShape, is_vlm):
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        text = S - cfg.frontend_tokens if is_vlm else S
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((B, text), i32),
+            "labels": jax.ShapeDtypeStruct((B, text), i32),
+        }
+        if is_vlm:
+            batch["patch_embeds"] = multimodal.frontend_embed_specs(cfg, B)
+        return batch
+    if shape.kind == "prefill":
+        text = S - cfg.frontend_tokens if is_vlm else S
+        batch = {"tokens": jax.ShapeDtypeStruct((B, text), i32)}
+        if is_vlm:
+            batch["patch_embeds"] = multimodal.frontend_embed_specs(cfg, B)
+        return batch
+    # decode: one new token against a cache of S
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+        "pos": jax.ShapeDtypeStruct((B,), i32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder (audio / seamless)
+# ---------------------------------------------------------------------------
+
+def _encdec_model(cfg: ArchConfig) -> Model:
+    V = padded_vocab(cfg)
+
+    def init(key):
+        dtype = jnp.dtype(cfg.param_dtype)
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "embed": embedding_init(k1, V, cfg.d_model, dtype),
+            "encdec": encdec_mod.encdec_init(k2, cfg),
+            "head": {"w": truncated_normal_init(k3, (cfg.d_model, V), dtype)},
+        }
+
+    def _tok_embed(params, tok):
+        cd = jnp.dtype(cfg.compute_dtype)
+        x = params["embed"]["table"].astype(cd)[tok]
+        return x * jnp.asarray(math.sqrt(cfg.d_model), cd)
+
+    def loss_fn(params, batch):
+        memory = encdec_mod.encode(params["encdec"], batch["frames"], cfg)
+        x = _tok_embed(params, batch["tokens"])
+        x = encdec_mod.decode_train(params["encdec"], x, memory, cfg)
+        loss = _xent_chunked(params["head"]["w"], x, batch["labels"], cfg)
+        return loss, {"loss": loss, "aux_loss": jnp.float32(0)}
+
+    def prefill(params, batch):
+        memory = encdec_mod.encode(params["encdec"], batch["frames"], cfg)
+        x = _tok_embed(params, batch["tokens"])
+        x = encdec_mod.decode_train(params["encdec"], x, memory, cfg)
+        c = min(cfg.xent_chunk, x.shape[1])
+        return _logits(params["head"]["w"], x[:, -c:], cfg)
+
+    def decode_step(params, caches, batch):
+        x = _tok_embed(params, batch["tokens"])
+        win = cfg.sliding_window
+        x, caches = encdec_mod.decode_step(
+            params["encdec"], x, caches, batch["pos"], cfg, window=win
+        )
+        return _logits(params["head"]["w"], x, cfg), caches
+
+    def init_caches(batch, max_len):
+        return encdec_mod.dec_caches(
+            None, cfg, batch, max_len, cfg.frontend_tokens,
+            window=cfg.sliding_window,
+        )
+
+    def cache_specs(batch, max_len):
+        return encdec_mod.dec_caches(
+            None, cfg, batch, max_len, cfg.frontend_tokens,
+            window=cfg.sliding_window, specs_only=True,
+        )
+
+    def input_specs(shape: InputShape):
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.kind in ("train", "prefill"):
+            batch = {
+                "frames": multimodal.frontend_embed_specs(cfg, B),
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            }
+            if shape.kind == "train":
+                batch["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+            return batch
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+            "pos": jax.ShapeDtypeStruct((B,), i32),
+        }
+
+    return Model(
+        cfg=cfg,
+        init=init,
+        loss_fn=loss_fn,
+        prefill=prefill,
+        decode_step=decode_step,
+        init_caches=init_caches,
+        cache_specs=cache_specs,
+        param_specs=lambda model_axis=16, axis_name="model": build_param_specs(
+            cfg, init, model_axis, axis_name
+        ),
+        input_specs=input_specs,
+    )
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.is_encdec:
+        return _encdec_model(cfg)
+    return _decoder_model(cfg)
+
+
+# ---------------------------------------------------------------------------
+# tensor-parallel PartitionSpecs (name-based rules, divisibility-checked)
+# ---------------------------------------------------------------------------
+
+_SHARD_LAST = {
+    "wq", "wk", "wv", "w_gate", "w_up", "wz", "wx", "up_x", "up_z",
+    "conv_x", "head_w",
+}
+_SHARD_IN = {"wo", "w_down", "down", "out_proj"}
+
+
+def _leaf_spec(path: tuple[str, ...], shape, model_axis: int, axis_name: str,
+               axis_sizes: tuple[int, ...] = ()):
+    name = path[-1]
+    joined = "/".join(path)
+    ndim = len(shape)
+
+    def spec_with(axis_from_end: int):
+        ax = ndim - axis_from_end
+        if ax < 0 or shape[ax] % model_axis != 0:
+            return P()
+        s = [None] * ndim
+        s[ax] = axis_name
+        return P(*s)
+
+    if "moe" in joined and name in ("w_gate", "w_up", "w_down") and ndim >= 3:
+        e_ax = ndim - 3
+        # multi-axis serve sharding: E over axis 0, ff over the rest
+        # (E and ff are rarely divisible by the combined 256-way product)
+        if (
+            isinstance(axis_name, tuple)
+            and len(axis_name) >= 2
+            and len(axis_sizes) == len(axis_name)
+        ):
+            ff_ax = ndim - 1 if name in ("w_gate", "w_up") else ndim - 2
+            rest = 1
+            for sz in axis_sizes[1:]:
+                rest *= sz
+            if shape[e_ax] % axis_sizes[0] == 0 and shape[ff_ax] % rest == 0:
+                s = [None] * ndim
+                s[e_ax] = axis_name[0]
+                s[ff_ax] = axis_name[1:] if len(axis_name) > 2 else axis_name[1]
+                return P(*s)
+        # expert-parallel on E when divisible, else shard the ff dim
+        if shape[e_ax] % model_axis == 0:
+            s = [None] * ndim
+            s[e_ax] = axis_name
+            return P(*s)
+        return spec_with(1) if name in ("w_gate", "w_up") else spec_with(2)
+    if name == "table":  # input embedding: shard d_model
+        return spec_with(1)
+    if path[-2:] == ("head", "w") or (len(path) >= 2 and path[-2] == "head"):
+        return spec_with(1)  # vocab-sharded output head
+    if name in _SHARD_LAST:
+        return spec_with(1)
+    if name in _SHARD_IN:
+        return spec_with(2)
+    return P()
+
+
+def _path_names(path) -> tuple[str, ...]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return tuple(out)
+
+
+def build_param_specs(cfg, init_fn, model_axis: int, axis_name: str,
+                      axis_sizes: tuple[int, ...] = ()):
+    shapes = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    specs = [
+        _leaf_spec(_path_names(p), l.shape, model_axis, axis_name, axis_sizes)
+        for p, l in leaves
+    ]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# parameter counting (roofline MODEL_FLOPS)
+# ---------------------------------------------------------------------------
+
+def count_params(cfg: ArchConfig, active_only: bool = False) -> int:
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    total = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(shapes):
+        n = int(np.prod(leaf.shape, dtype=np.int64))
+        joined = "/".join(_path_names(path))
+        if (
+            active_only
+            and cfg.is_moe
+            and "moe" in joined
+            and any(k in joined for k in ("w_gate", "w_up", "w_down"))
+            and "shared" not in joined
+        ):
+            n = int(n * cfg.experts_per_token / cfg.num_experts)
+        total += n
+    return total
+
+
+def model_flops(cfg: ArchConfig, tokens: int, kind: str = "train") -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N = active params."""
+    n = count_params(cfg, active_only=True)
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens

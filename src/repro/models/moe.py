@@ -1,0 +1,97 @@
+"""Mixture-of-Experts FFN: top-k router + shared experts (DeepSeekMoE-style
+fine-grained experts; also covers Grok-1's 8e top-2).
+
+Dispatch is capacity-based gather/scatter (TPU-friendly: static shapes,
+expert-parallel shardable on the expert axis):
+
+    tokens -> router top-k -> position-in-expert via cumsum ->
+    scatter into (E, C, d) buffers -> batched expert matmuls ->
+    gather back weighted by router probs.
+
+Overflow beyond capacity C = ceil(N*k/E * capacity_factor) is dropped
+(standard Switch/GShard semantics); the aux load-balance loss keeps the
+router near-uniform so drops stay rare.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import mlp, mlp_init, truncated_normal_init
+
+
+def moe_init(key, cfg, dtype) -> dict:
+    E, d, ff = cfg.num_experts, cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": truncated_normal_init(ks[0], (d, E), jnp.float32, scale=0.1),
+        "w_gate": truncated_normal_init(ks[1], (E, d, ff), dtype),
+        "w_up": truncated_normal_init(ks[2], (E, d, ff), dtype),
+        "w_down": truncated_normal_init(ks[3], (E, ff, d), dtype),
+    }
+    if cfg.num_shared_experts > 0:
+        p["shared"] = mlp_init(ks[4], d, ff * cfg.num_shared_experts, dtype)
+    return p
+
+
+def moe_apply(params, x, cfg):
+    """x: (B, S, d) -> (y, aux_loss)."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    cd = jnp.dtype(cfg.compute_dtype)
+    N = B * S
+    xt = x.reshape(N, d)
+
+    logits = jnp.einsum(
+        "nd,de->ne", xt.astype(jnp.float32), params["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)  # (N, E)
+    top_p, top_e = jax.lax.top_k(probs, k)   # (N, k)
+    top_p = top_p / (jnp.sum(top_p, axis=-1, keepdims=True) + 1e-9)
+
+    # load-balance aux loss (Switch-style)
+    me = jnp.mean(probs, axis=0)                                  # (E,)
+    ce = jnp.mean(
+        jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32), axis=0
+    )
+    aux = cfg.aux_loss_coef * E * jnp.sum(me * ce)
+
+    C = int(math.ceil(N * k / E * cfg.moe_capacity_factor))
+    eid = top_e.reshape(-1)                                        # (N*k,)
+    w = top_p.reshape(-1).astype(cd)
+    # position of each assignment within its expert
+    onehot = jax.nn.one_hot(eid, E, dtype=jnp.int32)               # (N*k, E)
+    pos = (jnp.cumsum(onehot, axis=0) - 1)[jnp.arange(N * k), eid]
+    keep = pos < C
+    slot = jnp.where(keep, eid * C + pos, E * C)                   # OOB -> drop
+
+    tok = jnp.repeat(jnp.arange(N), k)
+    buf = jnp.zeros((E * C, d), cd).at[slot].set(
+        xt.astype(cd)[tok], mode="drop"
+    )
+    buf = buf.reshape(E, C, d)
+
+    # batched expert MLP (E-parallel)
+    g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"].astype(cd))
+    u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"].astype(cd))
+    h = jax.nn.silu(g) * u
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(cd))
+    out_buf = out_buf.reshape(E * C, d)
+
+    gathered = jnp.take(out_buf, jnp.where(keep, slot, E * C - 1), axis=0)
+    gathered = gathered * keep[:, None].astype(cd) * w[:, None]
+    y = jnp.zeros((N, d), cd).at[tok].add(gathered)
+
+    if cfg.num_shared_experts > 0:
+        y = y + mlp(params["shared"], xt, cfg.mlp_act, cd)
+    return y.reshape(B, S, d), aux
+
+
+def moe_flops_per_token(cfg) -> int:
+    """Active FLOPs per token in the MoE FFN (for MODEL_FLOPS)."""
+    per_expert = 6 * cfg.d_model * cfg.d_ff  # 3 matmuls, fwd only (x2 for mults/adds)
+    routed = cfg.experts_per_token * per_expert
+    shared = cfg.num_shared_experts * per_expert
+    return routed + shared + 2 * cfg.d_model * cfg.num_experts

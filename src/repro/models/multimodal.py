@@ -1,0 +1,39 @@
+"""Modality frontend STUBS — the one allowed carve-out (DESIGN.md SS5).
+
+VLM (pixtral):  ``input_specs`` provides precomputed ViT patch embeddings
+``(B, n_patches, d_model)``; the backbone prepends them to the text-token
+embeddings.  Audio (seamless): precomputed mel+conv frame embeddings
+``(B, n_frames, d_model)`` feed the encoder.
+
+A tiny learned projection is still applied (as real VLM projectors are), so
+the frontend embeddings participate in training and gradient sync.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import truncated_normal_init
+
+
+def projector_init(key, d_in: int, d_model: int, dtype) -> dict:
+    return {"w": truncated_normal_init(key, (d_in, d_model), dtype)}
+
+
+def project(params: dict, embeds: jax.Array, compute_dtype) -> jax.Array:
+    return jnp.einsum(
+        "bpd,dk->bpk", embeds.astype(compute_dtype), params["w"].astype(compute_dtype)
+    )
+
+
+def frontend_embed_specs(cfg, batch: int) -> jax.ShapeDtypeStruct:
+    """ShapeDtypeStruct stand-in for the stub frontend output."""
+    n = cfg.frontend_tokens
+    return jax.ShapeDtypeStruct((batch, n, cfg.d_model), jnp.dtype(cfg.compute_dtype))
+
+
+def synth_frontend_embeds(key, cfg, batch: int) -> jax.Array:
+    n = cfg.frontend_tokens
+    return jax.random.normal(
+        key, (batch, n, cfg.d_model), jnp.dtype(cfg.compute_dtype)
+    ) * 0.02

@@ -1,0 +1,215 @@
+"""Mamba2 (SSD) block — chunked parallel scan for train/prefill, O(1)-state
+recurrence for decode.  Used by zamba2 (hybrid) and available standalone.
+
+State space (per head h, scalar decay a_t = exp(dt_t * A_h)):
+
+    H_t = a_t * H_{t-1} + dt_t * x_t (x) B_t        H: (hd, ds)
+    y_t = C_t . H_t + D * x_t
+
+Train uses the standard SSD chunk decomposition: intra-chunk attention-like
+term through the decay matrix L, inter-chunk through the carried state.
+
+TP note: the reference fused ``in_proj`` emits a mixed [z|x|B|C|dt] layout
+that cannot be sharded cleanly on the 'model' axis; we split it into
+separate projections (wz/wx/wB/wC/wdt) and give each channel group its own
+depthwise conv — mathematically identical (depthwise convs don't mix
+channels) and cleanly shardable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import rmsnorm, rmsnorm_init, truncated_normal_init
+
+
+def ssm_dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = d_in // cfg.ssm_head_dim
+    ds = cfg.ssm_state
+    return d_in, H, ds
+
+
+def ssm_init(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    d_in, H, ds = ssm_dims(cfg)
+    k = cfg.ssm_conv
+    ks = jax.random.split(key, 7)
+    conv = lambda kk, ch: (jax.random.normal(kk, (k, ch)) * 0.1).astype(dtype)
+    return {
+        "wz": truncated_normal_init(ks[0], (d, d_in), dtype),
+        "wx": truncated_normal_init(ks[1], (d, d_in), dtype),
+        "wB": truncated_normal_init(ks[2], (d, ds), dtype),
+        "wC": truncated_normal_init(ks[3], (d, ds), dtype),
+        "wdt": truncated_normal_init(ks[4], (d, H), jnp.float32, scale=0.1),
+        "conv_x": conv(ks[5], d_in),
+        "conv_x_b": jnp.zeros((d_in,), dtype),
+        "conv_B": conv(ks[6], ds),
+        "conv_B_b": jnp.zeros((ds,), dtype),
+        "conv_C": conv(jax.random.fold_in(key, 7), ds),
+        "conv_C_b": jnp.zeros((ds,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": rmsnorm_init(d_in, dtype),
+        "out_proj": truncated_normal_init(
+            jax.random.fold_in(key, 8), (d_in, d), dtype
+        ),
+    }
+
+
+def _causal_conv(x, w, b):
+    """x: (B,S,ch) depthwise causal conv, width k."""
+    k, ch = w.shape
+    kernel = w.astype(x.dtype).reshape(k, 1, ch)
+    y = lax.conv_general_dilated(
+        x,
+        kernel,
+        window_strides=(1,),
+        padding=[(k - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=ch,
+    )
+    return y + b.astype(x.dtype)
+
+
+def _proj(params, name, x, cd):
+    return jnp.einsum("bsd,dk->bsk", x.astype(cd), params[name].astype(cd))
+
+
+def ssm_train(params, x, cfg, *, chunk: int = 128) -> jax.Array:
+    B, S, d = x.shape
+    d_in, H, ds = ssm_dims(cfg)
+    hd = cfg.ssm_head_dim
+    cd = jnp.dtype(cfg.compute_dtype)
+
+    z = _proj(params, "wz", x, cd)
+    xs = jax.nn.silu(
+        _causal_conv(_proj(params, "wx", x, cd), params["conv_x"], params["conv_x_b"])
+    )
+    Bv = jax.nn.silu(
+        _causal_conv(_proj(params, "wB", x, cd), params["conv_B"], params["conv_B_b"])
+    ).astype(jnp.float32)
+    Cv = jax.nn.silu(
+        _causal_conv(_proj(params, "wC", x, cd), params["conv_C"], params["conv_C_b"])
+    ).astype(jnp.float32)
+    dt = _proj(params, "wdt", x, jnp.float32)
+
+    xs = xs.reshape(B, S, H, hd)
+    dt = jax.nn.softplus(dt + params["dt_bias"])       # (B,S,H)
+    A = -jnp.exp(params["A_log"])                      # (H,)
+    dA = dt * A[None, None, :]                         # log-decay
+
+    c = min(chunk, S)
+    if S % c != 0:
+        c = S
+    n = S // c
+
+    def chop(t):
+        return t.reshape((B, n, c) + t.shape[2:]).transpose(
+            (1, 0, 2) + tuple(range(3, t.ndim + 1))
+        )
+
+    xs_c, B_c, C_c, dt_c, dA_c = map(
+        chop, (xs.astype(jnp.float32), Bv, Cv, dt, dA)
+    )
+
+    def body(h, inp):
+        xsk, Bk, Ck, dtk, dAk = inp                 # (B,c,...)
+        cum = jnp.cumsum(dAk, axis=1)               # (B,c,H)
+        # intra-chunk: L_ij = exp(cum_i - cum_j), i >= j
+        diff = cum[:, :, None, :] - cum[:, None, :, :]       # (B,c,c,H)
+        mask = jnp.tril(jnp.ones((c, c), bool))
+        L = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+        G = jnp.einsum("bin,bjn->bij", Ck, Bk)               # (B,c,c)
+        dtx = dtk[..., None] * xsk                           # (B,c,H,hd)
+        y_intra = jnp.einsum("bij,bijh,bjhp->bihp", G, L, dtx)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bin,bhpn->bihp", Ck, h) * jnp.exp(cum)[..., None]
+        # state update
+        tail = jnp.exp(cum[:, -1:, :] - cum)                 # (B,c,H)
+        h_new = (
+            jnp.exp(cum[:, -1])[:, :, None, None] * h
+            + jnp.einsum("bjhp,bjn,bjh->bhpn", dtx, Bk, tail)
+        )
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((B, H, hd, ds), jnp.float32)
+    _, ys = lax.scan(body, h0, (xs_c, B_c, C_c, dt_c, dA_c))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+    y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, S, d_in).astype(cd)
+
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps)
+    return jnp.einsum("bsk,kd->bsd", y, params["out_proj"].astype(cd))
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def ssm_state_init(cfg, batch: int, specs_only: bool = False) -> dict:
+    d_in, H, ds = ssm_dims(cfg)
+    k = cfg.ssm_conv
+    mk = (
+        (lambda s, d: jax.ShapeDtypeStruct(s, d))
+        if specs_only
+        else (lambda s, d: jnp.zeros(s, d))
+    )
+    return {
+        "h": mk((batch, H, cfg.ssm_head_dim, ds), jnp.float32),
+        "conv_x": mk((batch, k - 1, d_in), jnp.float32),
+        "conv_B": mk((batch, k - 1, ds), jnp.float32),
+        "conv_C": mk((batch, k - 1, ds), jnp.float32),
+    }
+
+
+def ssm_state_specs(cfg, batch: int) -> dict:
+    return ssm_state_init(cfg, batch, specs_only=True)
+
+
+def _conv_step(state_buf, new, w, b):
+    """state_buf: (B,k-1,ch); new: (B,ch) -> (out (B,ch), new_buf)."""
+    window = jnp.concatenate([state_buf, new[:, None, :]], axis=1)  # (B,k,ch)
+    out = jnp.einsum("bkc,kc->bc", window, w.astype(jnp.float32)) + b.astype(
+        jnp.float32
+    )
+    return out, window[:, 1:, :]
+
+
+def ssm_decode(params, x, state, cfg):
+    """x: (B,1,d) -> (y (B,1,d), new_state)."""
+    B = x.shape[0]
+    d_in, H, ds = ssm_dims(cfg)
+    hd = cfg.ssm_head_dim
+    cd = jnp.dtype(cfg.compute_dtype)
+
+    z = _proj(params, "wz", x, cd)
+    x_new = _proj(params, "wx", x, jnp.float32)[:, 0]
+    B_new = _proj(params, "wB", x, jnp.float32)[:, 0]
+    C_new = _proj(params, "wC", x, jnp.float32)[:, 0]
+    dt = _proj(params, "wdt", x, jnp.float32)[:, 0]
+
+    xo, conv_x = _conv_step(state["conv_x"], x_new, params["conv_x"], params["conv_x_b"])
+    Bo, conv_B = _conv_step(state["conv_B"], B_new, params["conv_B"], params["conv_B_b"])
+    Co, conv_C = _conv_step(state["conv_C"], C_new, params["conv_C"], params["conv_C_b"])
+    xs = jax.nn.silu(xo).reshape(B, H, hd)
+    Bv = jax.nn.silu(Bo)
+    Cv = jax.nn.silu(Co)
+
+    dtv = jax.nn.softplus(dt + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dtv * A[None, :])                             # (B,H)
+
+    h_new = a[:, :, None, None] * state["h"] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dtv, xs, Bv
+    )
+    y = jnp.einsum("bn,bhpn->bhp", Cv, h_new)
+    y = y + params["D"][None, :, None] * xs
+    y = y.reshape(B, 1, d_in).astype(cd)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps)
+    y = jnp.einsum("bsk,kd->bsd", y, params["out_proj"].astype(cd))
+    return y, {"h": h_new, "conv_x": conv_x, "conv_B": conv_B, "conv_C": conv_C}

@@ -1,0 +1,288 @@
+"""Decoder-only stack: superblock scan over heterogeneous block patterns.
+
+A *superblock* is the repeating unit of the architecture (1 block for plain
+dense/MoE; a (local, global) pair for gemma2; (k x mamba) + shared-attn for
+zamba2; (k x mLSTM) + sLSTM for xlstm).  Parameters are stacked over
+superblocks and consumed by ``lax.scan`` so HLO size is O(superblock) even
+for 88-layer models (DESIGN.md SS7).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from . import xlstm as xlstm_mod
+from .layers import mlp, mlp_init, rmsnorm, rmsnorm_init
+
+
+# ---------------------------------------------------------------------------
+# superblock structure
+# ---------------------------------------------------------------------------
+
+def superblock_kinds(cfg) -> list[tuple[str, int]]:
+    """[(kind, window)] per block inside one superblock."""
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        if cfg.local_global:
+            local_w = cfg.sliding_window or 4096
+            return [("attn", local_w), ("attn", 0)]
+        return [("attn", cfg.sliding_window)]
+    if fam == "ssm":  # xlstm
+        if cfg.slstm_every and cfg.slstm_every > 1:
+            return [("mlstm", 0)] * (cfg.slstm_every - 1) + [("slstm", 0)]
+        return [("mlstm", 0)]
+    if fam == "hybrid":  # zamba2: k mamba blocks + one shared attn block
+        k = cfg.attn_every or 6
+        return [("mamba", 0)] * k
+    raise ValueError(fam)
+
+
+def num_superblocks(cfg) -> int:
+    kinds = superblock_kinds(cfg)
+    n, r = divmod(cfg.num_layers, len(kinds))
+    if r:
+        raise ValueError(
+            f"{cfg.name}: num_layers={cfg.num_layers} not divisible by "
+            f"superblock size {len(kinds)}"
+        )
+    return n
+
+
+def has_shared_block(cfg) -> bool:
+    return cfg.family == "hybrid" and (cfg.attn_every or 0) > 0
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _attn_block_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attn.attn_init(k1, cfg, dtype),
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if cfg.is_moe:
+        p["moe"] = moe_mod.moe_init(k2, cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _block_init(key, cfg, kind, dtype):
+    if kind == "attn":
+        return _attn_block_init(key, cfg, dtype)
+    if kind == "mamba":
+        return {
+            "ln": rmsnorm_init(cfg.d_model, dtype),
+            "ssm": ssm_mod.ssm_init(key, cfg, dtype),
+        }
+    if kind == "mlstm":
+        return xlstm_mod.mlstm_init(key, cfg, dtype)
+    if kind == "slstm":
+        return xlstm_mod.slstm_init(key, cfg, dtype)
+    raise ValueError(kind)
+
+
+def superblock_init(key, cfg, dtype):
+    kinds = superblock_kinds(cfg)
+    keys = jax.random.split(key, len(kinds))
+    return {
+        f"b{j}": _block_init(k, cfg, kind, dtype)
+        for j, (k, (kind, _)) in enumerate(zip(keys, kinds))
+    }
+
+
+def _shared_sub_cfg(cfg):
+    d_ff = cfg.d_ff if cfg.d_ff > 0 else 4 * cfg.d_model
+    return cfg.with_(num_experts=0, d_ff=d_ff)
+
+
+def shared_block_init(key, cfg, dtype):
+    """zamba2's weight-shared full transformer block (attn + MLP).
+
+    Adaptation note: the reference model concatenates the original embedding
+    into the shared block input; we use a standard residual block with shared
+    weights (same compute/communication shape, simpler composition)."""
+    sub = _shared_sub_cfg(cfg)
+    return _attn_block_init(key, sub, dtype), sub
+
+
+def stack_init(key, cfg) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    n = num_superblocks(cfg)
+    k_blocks, k_shared, k_final = jax.random.split(key, 3)
+    keys = jax.random.split(k_blocks, n)
+    blocks = jax.vmap(lambda k: superblock_init(k, cfg, dtype))(keys)
+    params = {"blocks": blocks, "final_norm": rmsnorm_init(cfg.d_model, dtype)}
+    if has_shared_block(cfg):
+        shared, _ = shared_block_init(k_shared, cfg, dtype)
+        params["shared"] = shared
+    return params
+
+
+# ---------------------------------------------------------------------------
+# train / prefill apply
+# ---------------------------------------------------------------------------
+
+def _attn_block_train(p, x, cfg, window):
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    x = x + attn.attn_train(p["attn"], h, cfg, window=window)
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.is_moe:
+        y, aux = moe_mod.moe_apply(p["moe"], h, cfg)
+        return x + y, aux
+    return x + mlp(p["mlp"], h, cfg.mlp_act, jnp.dtype(cfg.compute_dtype)), 0.0
+
+
+def _block_train(p, x, cfg, kind, window):
+    if kind == "attn":
+        return _attn_block_train(p, x, cfg, window)
+    if kind == "mamba":
+        h = rmsnorm(p["ln"], x, cfg.norm_eps)
+        return x + ssm_mod.ssm_train(p["ssm"], h, cfg), 0.0
+    if kind == "mlstm":
+        return x + xlstm_mod.mlstm_train(p, x, cfg), 0.0
+    if kind == "slstm":
+        return x + xlstm_mod.slstm_train(p, x, cfg), 0.0
+    raise ValueError(kind)
+
+
+def stack_train(params, x, cfg):
+    """x: (B, S, d) -> (y, aux_loss)."""
+    kinds = superblock_kinds(cfg)
+    shared = params.get("shared")
+    sub_cfg = _shared_sub_cfg(cfg) if shared is not None else None
+
+    def body(carry, block_params):
+        x, aux = carry
+        for j, (kind, window) in enumerate(kinds):
+            x, a = _block_train(block_params[f"b{j}"], x, cfg, kind, window)
+            aux = aux + a
+        if shared is not None:
+            x, a = _attn_block_train(shared, x, sub_cfg, 0)
+            aux = aux + a
+        return (x, aux), ()
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = lax.scan(body, (x, jnp.float32(0.0)), params["blocks"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# decode apply (one token, stacked caches scanned alongside params)
+# ---------------------------------------------------------------------------
+
+def _cache_one(cfg, kind, window, batch, max_len, specs_only):
+    if kind == "attn":
+        fn = attn.cache_specs if specs_only else attn.init_cache
+        return fn(cfg, batch, max_len, window=window)
+    if kind == "mamba":
+        fn = ssm_mod.ssm_state_specs if specs_only else ssm_mod.ssm_state_init
+        return fn(cfg, batch)
+    if kind == "mlstm":
+        st = xlstm_mod.mlstm_state_init(cfg, batch)
+    elif kind == "slstm":
+        st = xlstm_mod.slstm_state_init(cfg, batch)
+    else:
+        raise ValueError(kind)
+    if specs_only:
+        return jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), st)
+    return st
+
+
+def init_caches(cfg, batch: int, max_len: int, specs_only: bool = False):
+    """Stacked-over-superblocks cache pytree (+ shared-block cache)."""
+    n = num_superblocks(cfg)
+    kinds = superblock_kinds(cfg)
+
+    def stack_leaf(leaf):
+        if specs_only:
+            return jax.ShapeDtypeStruct((n,) + leaf.shape, leaf.dtype)
+        return jnp.zeros((n,) + leaf.shape, leaf.dtype)
+
+    caches = {
+        f"b{j}": jax.tree.map(
+            stack_leaf, _cache_one(cfg, kind, window, batch, max_len, specs_only)
+        )
+        for j, (kind, window) in enumerate(kinds)
+    }
+    out = {"blocks": caches}
+    if has_shared_block(cfg):
+        # weight-shared block, but one KV cache per application (per superblock)
+        out["shared"] = jax.tree.map(
+            stack_leaf, _cache_one(cfg, "attn", 0, batch, max_len, specs_only)
+        )
+    return out
+
+
+def _block_decode(p, x, cache, pos, cfg, kind, window):
+    if kind == "attn":
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        y, cache = attn.attn_decode(p["attn"], h, cache, pos, cfg, window=window)
+        x = x + y
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if cfg.is_moe:
+            y, _ = moe_mod.moe_apply(p["moe"], h, cfg)
+        else:
+            y = mlp(p["mlp"], h, cfg.mlp_act, jnp.dtype(cfg.compute_dtype))
+        return x + y, cache
+    if kind == "mamba":
+        h = rmsnorm(p["ln"], x, cfg.norm_eps)
+        y, cache = ssm_mod.ssm_decode(p["ssm"], h, cache, cfg)
+        return x + y, cache
+    if kind == "mlstm":
+        y, cache = xlstm_mod.mlstm_decode(p, x, cache, cfg)
+        return x + y, cache
+    if kind == "slstm":
+        y, cache = xlstm_mod.slstm_decode(p, x, cache, cfg)
+        return x + y, cache
+    raise ValueError(kind)
+
+
+def stack_decode(params, x, caches, pos, cfg):
+    """x: (B, 1, d); pos: (B,).  Returns (y, new_caches)."""
+    kinds = superblock_kinds(cfg)
+    shared = params.get("shared")
+    sub_cfg = _shared_sub_cfg(cfg) if shared is not None else None
+
+    def body(x, scanned):
+        if shared is not None:
+            block_params, block_caches, shared_cache = scanned
+        else:
+            block_params, block_caches = scanned
+        new_caches = {}
+        for j, (kind, window) in enumerate(kinds):
+            x, c = _block_decode(
+                block_params[f"b{j}"], x, block_caches[f"b{j}"], pos, cfg, kind, window
+            )
+            new_caches[f"b{j}"] = c
+        if shared is not None:
+            h = rmsnorm(shared["ln1"], x, cfg.norm_eps)
+            y, sc = attn.attn_decode(shared["attn"], h, shared_cache, pos, sub_cfg)
+            x = x + y
+            h = rmsnorm(shared["ln2"], x, cfg.norm_eps)
+            x = x + mlp(shared["mlp"], h, sub_cfg.mlp_act, jnp.dtype(cfg.compute_dtype))
+            return x, (new_caches, sc)
+        return x, new_caches
+
+    if shared is not None:
+        x, (new_block_caches, new_shared) = lax.scan(
+            body, x, (params["blocks"], caches["blocks"], caches["shared"])
+        )
+        out_caches = {"blocks": new_block_caches, "shared": new_shared}
+    else:
+        x, new_block_caches = lax.scan(body, x, (params["blocks"], caches["blocks"]))
+        out_caches = {"blocks": new_block_caches}
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, out_caches

@@ -1,0 +1,223 @@
+"""xLSTM blocks (Beck et al., arXiv:2405.04517): mLSTM (matrix memory,
+parallelizable) and sLSTM (scalar memory, true recurrence with block-diagonal
+recurrent weights).  Exponential gating with the max-stabilizer state m.
+
+Train/prefill run a per-token ``lax.scan`` (compile-size O(1) in sequence
+length); decode carries (C, n, m) / (c, n, m, h) states — O(1) per token,
+which is why xlstm runs ``long_500k`` natively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import rmsnorm, rmsnorm_init, truncated_normal_init
+
+
+def _dims(cfg):
+    d = cfg.d_model
+    d_in = 2 * d               # mLSTM expansion 2 (paper)
+    H = cfg.num_heads
+    hd = d_in // H
+    return d, d_in, H, hd
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg, dtype) -> dict:
+    d, d_in, H, hd = _dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": rmsnorm_init(d, dtype),
+        "up_x": truncated_normal_init(ks[0], (d, d_in), dtype),
+        "up_z": truncated_normal_init(ks[7], (d, d_in), dtype),
+        "wq": truncated_normal_init(ks[1], (d_in, d_in), dtype),
+        "wk": truncated_normal_init(ks[2], (d_in, d_in), dtype),
+        "wv": truncated_normal_init(ks[3], (d_in, d_in), dtype),
+        "wi": truncated_normal_init(ks[4], (d_in, H), jnp.float32, scale=0.1),
+        "wf": truncated_normal_init(ks[5], (d_in, H), jnp.float32, scale=0.1),
+        "bi": jnp.zeros((H,), jnp.float32),
+        "bf": jnp.ones((H,), jnp.float32) * 3.0,  # open forget gates at init
+        "out_norm": rmsnorm_init(d_in, dtype),
+        "down": truncated_normal_init(ks[6], (d_in, d), dtype),
+    }
+
+
+def _mlstm_precompute(params, x, cfg):
+    d, d_in, H, hd = _dims(cfg)
+    cd = jnp.dtype(cfg.compute_dtype)
+    xn = rmsnorm(params["norm"], x, cfg.norm_eps).astype(cd)
+    xm = jnp.einsum("bsd,dk->bsk", xn, params["up_x"].astype(cd))
+    z = jnp.einsum("bsd,dk->bsk", xn, params["up_z"].astype(cd))
+    q = jnp.einsum("bsk,kj->bsj", xm, params["wq"].astype(cd))
+    k = jnp.einsum("bsk,kj->bsj", xm, params["wk"].astype(cd))
+    v = jnp.einsum("bsk,kj->bsj", xm, params["wv"].astype(cd))
+    B, S = x.shape[:2]
+    q = q.reshape(B, S, H, hd).astype(jnp.float32)
+    k = k.reshape(B, S, H, hd).astype(jnp.float32) * (hd ** -0.5)
+    v = v.reshape(B, S, H, hd).astype(jnp.float32)
+    ig = jnp.einsum("bsk,kh->bsh", xm.astype(jnp.float32), params["wi"]) + params["bi"]
+    fg = jnp.einsum("bsk,kh->bsh", xm.astype(jnp.float32), params["wf"]) + params["bf"]
+    return q, k, v, ig, fg, z
+
+
+def _mlstm_cell(state, qkvif):
+    """One token of the stabilized mLSTM recurrence."""
+    C, n, m = state                       # (B,H,hd,hd), (B,H,hd), (B,H)
+    q, k, v, ig, fg = qkvif               # (B,H,hd) x3, (B,H) x2
+    m_new = jnp.maximum(fg + m, ig)
+    fp = jnp.exp(fg + m - m_new)[..., None]
+    ip = jnp.exp(ig - m_new)[..., None]
+    C_new = fp[..., None] * C + ip[..., None] * (v[..., :, None] * k[..., None, :])
+    n_new = fp * n + ip * k
+    num = jnp.einsum("bhij,bhj->bhi", C_new, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n_new, q)), 1.0)
+    h = num / den[..., None]
+    return (C_new, n_new, m_new), h
+
+
+def mlstm_train(params, x, cfg) -> jax.Array:
+    d, d_in, H, hd = _dims(cfg)
+    cd = jnp.dtype(cfg.compute_dtype)
+    B, S = x.shape[:2]
+    q, k, v, ig, fg, z = _mlstm_precompute(params, x, cfg)
+
+    def body(state, inp):
+        return _mlstm_cell(state, inp)
+
+    init = (
+        jnp.zeros((B, H, hd, hd), jnp.float32),
+        jnp.zeros((B, H, hd), jnp.float32),
+        jnp.zeros((B, H), jnp.float32),
+    )
+    seq = (
+        q.transpose(1, 0, 2, 3),
+        k.transpose(1, 0, 2, 3),
+        v.transpose(1, 0, 2, 3),
+        ig.transpose(1, 0, 2),
+        fg.transpose(1, 0, 2),
+    )
+    _, hs = lax.scan(body, init, seq)
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, d_in).astype(cd)
+    h = rmsnorm(params["out_norm"], h, cfg.norm_eps)
+    h = h * jax.nn.silu(z)
+    return jnp.einsum("bsk,kd->bsd", h, params["down"].astype(cd))
+
+
+def mlstm_state_init(cfg, batch):
+    d, d_in, H, hd = _dims(cfg)
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.zeros((batch, H), jnp.float32),
+    }
+
+
+def mlstm_decode(params, x, state, cfg):
+    d, d_in, H, hd = _dims(cfg)
+    cd = jnp.dtype(cfg.compute_dtype)
+    B = x.shape[0]
+    q, k, v, ig, fg, z = _mlstm_precompute(params, x, cfg)
+    st = (state["C"], state["n"], state["m"])
+    st, h = _mlstm_cell(st, (q[:, 0], k[:, 0], v[:, 0], ig[:, 0], fg[:, 0]))
+    h = h.reshape(B, 1, d_in).astype(cd)
+    h = rmsnorm(params["out_norm"], h, cfg.norm_eps)
+    h = h * jax.nn.silu(z)
+    y = jnp.einsum("bsk,kd->bsd", h, params["down"].astype(cd))
+    return y, {"C": st[0], "n": st[1], "m": st[2]}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    H = cfg.num_heads
+    hd = d // H
+    ks = jax.random.split(key, 9)
+    p = {"norm": rmsnorm_init(d, dtype)}
+    for i, g in enumerate(("i", "f", "z", "o")):
+        p[f"w{g}"] = truncated_normal_init(ks[i], (d, d), dtype)
+        p[f"r{g}"] = truncated_normal_init(ks[4 + i], (H, hd, hd), dtype, scale=0.5)
+        p[f"b{g}"] = (
+            jnp.ones((d,), jnp.float32) * 3.0 if g == "f" else jnp.zeros((d,), jnp.float32)
+        )
+    p["down"] = truncated_normal_init(ks[8], (d, d), dtype)
+    return p
+
+
+def _slstm_cell(params, state, xg, cfg):
+    """xg: dict of per-token gate pre-activations from the input side."""
+    H = cfg.num_heads
+    c, n, m, h = state                    # (B,H,hd) x2, (B,H,hd), (B,H,hd)
+
+    def rec(g):
+        r = params[f"r{g}"].astype(jnp.float32)
+        return xg[g] + jnp.einsum("bhi,hij->bhj", h, r)
+
+    it, ft = rec("i"), rec("f")
+    zt = jnp.tanh(rec("z"))
+    ot = jax.nn.sigmoid(rec("o"))
+    m_new = jnp.maximum(ft + m, it)
+    ip = jnp.exp(it - m_new)
+    fp = jnp.exp(ft + m - m_new)
+    c_new = fp * c + ip * zt
+    n_new = fp * n + ip
+    h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def _slstm_inputs(params, x, cfg):
+    d = cfg.d_model
+    H = cfg.num_heads
+    hd = d // H
+    cd = jnp.dtype(cfg.compute_dtype)
+    B, S = x.shape[:2]
+    xn = rmsnorm(params["norm"], x, cfg.norm_eps).astype(cd)
+    out = {}
+    for g in ("i", "f", "z", "o"):
+        v = jnp.einsum("bsd,dk->bsk", xn, params[f"w{g}"].astype(cd))
+        v = v.astype(jnp.float32) + params[f"b{g}"]
+        out[g] = v.reshape(B, S, H, hd)
+    return out
+
+
+def slstm_train(params, x, cfg) -> jax.Array:
+    d = cfg.d_model
+    H = cfg.num_heads
+    hd = d // H
+    cd = jnp.dtype(cfg.compute_dtype)
+    B, S = x.shape[:2]
+    xg = _slstm_inputs(params, x, cfg)
+
+    def body(state, tok):
+        return _slstm_cell(params, state, tok, cfg)
+
+    init = tuple(jnp.zeros((B, H, hd), jnp.float32) for _ in range(4))
+    seq = {g: xg[g].transpose(1, 0, 2, 3) for g in xg}
+    _, hs = lax.scan(body, init, seq)
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, d).astype(cd)
+    return jnp.einsum("bsd,dk->bsk", h, params["down"].astype(cd))
+
+
+def slstm_state_init(cfg, batch):
+    H = cfg.num_heads
+    hd = cfg.d_model // H
+    z = lambda: jnp.zeros((batch, H, hd), jnp.float32)
+    return {"c": z(), "n": z(), "m": z(), "h": z()}
+
+
+def slstm_decode(params, x, state, cfg):
+    cd = jnp.dtype(cfg.compute_dtype)
+    B = x.shape[0]
+    xg = _slstm_inputs(params, x, cfg)
+    tok = {g: xg[g][:, 0] for g in xg}
+    st = (state["c"], state["n"], state["m"], state["h"])
+    st, h = _slstm_cell(params, st, tok, cfg)
+    h = h.reshape(B, 1, cfg.d_model).astype(cd)
+    y = jnp.einsum("bsd,dk->bsk", h, params["down"].astype(cd))
+    return y, {"c": st[0], "n": st[1], "m": st[2], "h": st[3]}

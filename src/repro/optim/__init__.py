@@ -1,0 +1,19 @@
+"""Optimizers (pure-pytree, no optax): SGD+momentum, Adam/AdamW, LR
+schedules, global-norm clipping.  Matches the paper's setups: SGD(1e-3) for
+CV models, Adam(5e-5 / 1.5e-4) for Bert/GPT-2.
+"""
+from .optimizers import Optimizer, adamw, apply_updates, sgd
+from .schedules import constant, cosine_warmup, linear_warmup
+from .clip import clip_by_global_norm, global_norm
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "sgd",
+    "apply_updates",
+    "constant",
+    "cosine_warmup",
+    "linear_warmup",
+    "clip_by_global_norm",
+    "global_norm",
+]

@@ -1,0 +1,110 @@
+"""Pytree optimizers.  ``Optimizer`` is an (init, update) pair:
+
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+Moment dtype is configurable (bf16 moments for the 100B+ archs, DESIGN SS8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]
+
+
+def _sched(lr):
+    return lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+
+
+def sgd(lr, momentum: float = 0.9, nesterov: bool = False) -> Optimizer:
+    lr_fn = _sched(lr)
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(jnp.zeros_like, params) if momentum else (),
+        }
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        if momentum:
+            mu = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(m.dtype), state["mu"], grads
+            )
+            if nesterov:
+                upd = jax.tree.map(lambda m, g: momentum * m + g.astype(m.dtype), mu, grads)
+            else:
+                upd = mu
+            new_state = {"step": step, "mu": mu}
+        else:
+            upd = grads
+            new_state = {"step": step, "mu": ()}
+        lr = lr_fn(step)
+        upd = jax.tree.map(lambda u: (-lr * u.astype(jnp.float32)), upd)
+        return upd, new_state
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    moment_dtype: str | None = None,
+) -> Optimizer:
+    lr_fn = _sched(lr)
+
+    def _mdtype(p):
+        return jnp.dtype(moment_dtype) if moment_dtype else p.dtype
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, _mdtype(p)), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, _mdtype(p)), params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        m = jax.tree.map(
+            lambda m, g: (b1 * m.astype(jnp.float32) + (1 - b1) * g.astype(jnp.float32)).astype(m.dtype),
+            state["m"], grads,
+        )
+        v = jax.tree.map(
+            lambda v, g: (b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g.astype(jnp.float32))).astype(v.dtype),
+            state["v"], grads,
+        )
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+        lr = lr_fn(step)
+
+        def upd(m, v, p):
+            mh = m.astype(jnp.float32) / bc1
+            vh = v.astype(jnp.float32) / bc2
+            u = mh / (jnp.sqrt(vh) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return -lr * u
+
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), params, updates
+    )

@@ -1,0 +1,29 @@
+"""Learning-rate schedules (step -> lr, traceable)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(lr: float, warmup_steps: int):
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        return lr * jnp.minimum(1.0, s / max(warmup_steps, 1))
+
+    return fn
+
+
+def cosine_warmup(lr: float, warmup_steps: int, total_steps: int, min_ratio: float = 0.1):
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, s / max(warmup_steps, 1))
+        frac = jnp.clip(
+            (s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return lr * warm * cos
+
+    return fn

@@ -1,0 +1,4 @@
+"""Serving substrate: batched KV-cache engine (prefill + decode steps)."""
+from .engine import Engine, ServeConfig, greedy_sample
+
+__all__ = ["Engine", "ServeConfig", "greedy_sample"]

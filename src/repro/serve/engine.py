@@ -1,0 +1,154 @@
+"""Batched serving engine with slot-based continuous batching.
+
+Fixed ``batch_slots`` decode slots; each slot holds one request at its own
+position (the decode step takes a per-slot ``pos`` vector).  Prompts are
+prefilled token-by-token through the decode path (exact cache semantics for
+every family: attention KV, SSM state, xLSTM state, enc-dec cross-attn).
+Finished slots are immediately refilled from the queue.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch_slots: int = 4
+    max_len: int = 256
+    max_new_tokens: int = 32
+    eos_token: int = -1          # -1 = never stop on eos
+    temperature: float = 0.0     # 0 = greedy
+
+
+def greedy_sample(logits: jax.Array, key=None, temperature: float = 0.0):
+    """logits: (B, 1, V) -> (B,) int32."""
+    if temperature and temperature > 0:
+        return jax.random.categorical(key, logits[:, 0, :] / temperature, axis=-1)
+    return jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class _Slot:
+    request_id: int | None = None
+    prompt: list[int] | None = None
+    generated: list[int] = dataclasses.field(default_factory=list)
+    pos: int = 0
+    prefill_cursor: int = 0
+
+    @property
+    def active(self) -> bool:
+        return self.request_id is not None
+
+    @property
+    def prefilling(self) -> bool:
+        return self.active and self.prefill_cursor < len(self.prompt)
+
+
+class Engine:
+    def __init__(self, model, params, sc: ServeConfig, *, sample=greedy_sample):
+        self.model = model
+        self.params = params
+        self.sc = sc
+        self.sample = sample
+        B = sc.batch_slots
+        self.caches = model.init_caches(B, sc.max_len)
+        self.slots = [_Slot() for _ in range(B)]
+        self.queue: deque = deque()
+        self.results: dict[int, list[int]] = {}
+        self._next_id = 0
+        self._step_fn = jax.jit(model.decode_step)
+        self._key = jax.random.PRNGKey(0)
+
+    # ---- request API -------------------------------------------------------
+    def submit(self, prompt_tokens: Sequence[int]) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self.queue.append((rid, list(prompt_tokens)))
+        return rid
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or any(s.active for s in self.slots)
+
+    # ---- scheduling -------------------------------------------------------
+    def _reset_slot_cache(self, i: int):
+        """Zero slot i's cache rows (SSM/xLSTM states are not position-masked,
+        so stale state from the previous request must be cleared)."""
+        self.caches = jax.tree.map(
+            lambda c: c.at[:, i].set(jnp.zeros_like(c[:, i])) if c.ndim >= 2 else c,
+            self.caches,
+        )
+
+    def _fill_slots(self):
+        for i, s in enumerate(self.slots):
+            if not s.active and self.queue:
+                rid, prompt = self.queue.popleft()
+                s.request_id = rid
+                s.prompt = prompt
+                s.generated = []
+                s.pos = 0
+                s.prefill_cursor = 0
+                self._reset_slot_cache(i)
+
+    def step(self) -> int:
+        """One engine iteration: every active slot advances one token
+        (prefill consumes a prompt token; decode emits a new one).
+        Returns the number of active slots."""
+        self._fill_slots()
+        B = self.sc.batch_slots
+        tokens = np.zeros((B, 1), np.int32)
+        pos = np.zeros((B,), np.int32)
+        active = []
+        for i, s in enumerate(self.slots):
+            if not s.active:
+                continue
+            active.append(i)
+            pos[i] = s.pos
+            if s.prefilling:
+                tokens[i, 0] = s.prompt[s.prefill_cursor]
+            else:
+                tokens[i, 0] = s.generated[-1]
+        if not active:
+            return 0
+
+        batch = {"tokens": jnp.asarray(tokens), "pos": jnp.asarray(pos)}
+        logits, self.caches = self._step_fn(self.params, self.caches, batch)
+        self._key, sub = jax.random.split(self._key)
+        next_tok = np.asarray(self.sample(logits, sub, self.sc.temperature))
+
+        for i in active:
+            s = self.slots[i]
+            fed_last_prompt = (
+                s.prefilling and s.prefill_cursor == len(s.prompt) - 1
+            )
+            was_decode = not s.prefilling
+            s.pos += 1
+            if s.prefilling:
+                s.prefill_cursor += 1
+            if fed_last_prompt or was_decode:
+                # the logits of this step predict the next token
+                t = int(next_tok[i])
+                s.generated.append(t)
+                done = (
+                    len(s.generated) >= self.sc.max_new_tokens
+                    or t == self.sc.eos_token
+                    or s.pos >= self.sc.max_len - 1
+                )
+                if done:
+                    self.results[s.request_id] = list(s.generated)
+                    s.request_id = None
+                    s.prompt = None
+        return len(active)
+
+    def run_until_done(self, max_steps: int = 100_000) -> dict[int, list[int]]:
+        steps = 0
+        while self.busy and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.results

@@ -1,0 +1,5 @@
+"""Training substrate: DP step builder with COVAP phase-specialised
+executables, host loop, metrics."""
+from .trainer import TrainConfig, Trainer, build_train_step, make_train_state
+
+__all__ = ["TrainConfig", "Trainer", "build_train_step", "make_train_state"]

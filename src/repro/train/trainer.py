@@ -1,0 +1,311 @@
+"""DP train-step builder: COVAP (or any registered GC scheme) wired into the
+gradient synchronisation of a ``shard_map``-manual data-parallel step.
+
+Key structural points (DESIGN.md SS2):
+
+* ``shard_map`` is **manual over the DP axes** ('pod','data') so each
+  worker's gradients exist un-reduced and the compressor controls exactly
+  which bytes cross the interconnect (one ``psum`` per selected bucket);
+  the 'model' axis stays **auto** so tensor-parallel sharding of the model
+  math is compiler-managed.
+* The coarse filter's bucket selection must be static in XLA, so the step
+  is specialised per ``phase = step % I`` -> ``I`` executables, compiled
+  lazily on first use.
+* Loss/grad math is unchanged across compressors — swapping schemes swaps
+  only the sync stage (the paper's DDP-communication-hook shape).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import build_plan, get_compressor
+from repro.core.bucketing import BucketPlan
+from repro.core.compressors.base import Compressor, dense_bytes
+from repro.optim import Optimizer, apply_updates, clip_by_global_norm, global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    compressor: str = "covap"
+    compressor_options: dict = dataclasses.field(default_factory=dict)
+    interval: int = 4                      # COVAP I = ceil(CCR); 1 = no filter
+    pod_interval: int = 1                  # hierarchical COVAP across pods
+    bucket_bytes: int = 25 * 1024 * 1024
+    max_buckets: int = 128
+    clip_norm: float = 0.0                 # 0 = off
+    steps: int = 100
+    log_every: int = 10
+
+
+def make_compressor(tc: TrainConfig) -> Compressor:
+    opts = dict(tc.compressor_options)
+    if tc.compressor == "covap":
+        opts.setdefault("interval", tc.interval)
+    return get_compressor(tc.compressor, **opts)
+
+
+def _loss_and_grads(model, params, batch):
+    def lf(p):
+        loss, metrics = model.loss_fn(p, batch)
+        return loss, metrics
+
+    (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+    return loss, metrics, grads
+
+
+def pod_reconcile(params, plan: BucketPlan, *, pod_phase: int,
+                  pod_interval: int, pod_axes: Sequence[str],
+                  reconcile_helper_axes: Sequence[str] = ()):
+    """Hierarchical COVAP's cross-pod level (beyond-paper, DESIGN SS7b):
+    instead of sending every gradient across the slow DCN pod links, each
+    step pmean-reconciles only the PARAMETER segments of the buckets with
+    ``(b + step) % I_pod == 0`` — the coarse filter applied at the pod
+    level, where CCR > 1 genuinely holds.  Local-SGD-style drift between
+    reconciliations, bounded to I_pod steps per bucket by the round-robin.
+
+    The pmean runs over the pod axis PLUS the intra-pod data axes: params
+    are data-replicated so the result is identical, but XLA then lowers the
+    collective hierarchically (reduce-scatter across the 16 data rows ->
+    thin DCN crossing -> all-gather), cutting the cross-pod volume 16x vs a
+    naive per-row pod exchange (EXPERIMENTS SSPerf Pair D follow-up).
+
+    Returns (params, bytes_sent_across_pods)."""
+    from repro.core import bucketing as bk
+    from repro.core.filter import selected_buckets
+
+    treedef = jax.tree_util.tree_structure(params)
+    leaves = jax.tree_util.tree_leaves(params)
+    sent = 0
+    axes = tuple(pod_axes) + tuple(reconcile_helper_axes)
+    for b in selected_buckets(plan.num_buckets, pod_phase, pod_interval):
+        bucket = plan.buckets[b]
+        for seg in bucket.segments:
+            li = seg.leaf_idx
+            x = bk._slice_segment(leaves[li], seg)
+            xm = lax.pmean(x.astype(jnp.float32), axes).astype(x.dtype)
+            leaves[li] = bk._update_segment(leaves[li], seg, xm)
+            sent += x.size * x.dtype.itemsize
+    return jax.tree_util.tree_unflatten(treedef, leaves), sent
+
+
+def build_step_fn(
+    model,
+    optimizer: Optimizer,
+    compressor: Compressor,
+    plan: BucketPlan,
+    *,
+    phase: int,
+    dp_axes: Sequence[str] = (),
+    clip_norm: float = 0.0,
+    pod_interval: int = 1,
+) -> Callable:
+    """The un-jitted per-phase step (runs inside shard_map when dp_axes).
+
+    With ``pod_interval > 1`` (hierarchical mode) gradient sync runs only
+    over the intra-pod axes; the 'pod' axis is reconciled by
+    ``pod_reconcile`` and the state carries a leading pod-block axis."""
+    pod_axes = tuple(a for a in dp_axes if a == "pod") if pod_interval > 1 else ()
+    grad_axes = tuple(a for a in dp_axes if a not in pod_axes)
+
+    def step_fn(params, opt_state, comp_state, batch, step):
+        hier = bool(pod_axes)
+        if hier:
+            # strip the per-pod block axis (local block size 1)
+            params, opt_state, comp_state = jax.tree.map(
+                lambda a: a[0], (params, opt_state, comp_state)
+            )
+        loss, metrics, grads = _loss_and_grads(model, params, batch)
+        if dp_axes:
+            loss = lax.pmean(loss, tuple(dp_axes))
+            metrics = jax.tree.map(
+                lambda m: lax.pmean(m, tuple(dp_axes)), metrics
+            )
+        synced, comp_state, stats = compressor.sync(
+            grads, comp_state,
+            plan=plan, phase=phase % max(compressor.num_phases(0), 1),
+            step=step, axis_names=grad_axes,
+        )
+        if clip_norm > 0:
+            synced, gnorm = clip_by_global_norm(synced, clip_norm)
+        else:
+            gnorm = global_norm(synced)
+        updates, opt_state = optimizer.update(synced, opt_state, params)
+        params = apply_updates(params, updates)
+        if hier:
+            params, _ = pod_reconcile(
+                params, plan, pod_phase=phase % pod_interval,
+                pod_interval=pod_interval, pod_axes=pod_axes,
+                reconcile_helper_axes=grad_axes,
+            )
+            params, opt_state, comp_state = jax.tree.map(
+                lambda a: a[None], (params, opt_state, comp_state)
+            )
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["total_loss"] = loss
+        return params, opt_state, comp_state, metrics
+
+    return step_fn
+
+
+def build_train_step(
+    model,
+    optimizer: Optimizer,
+    compressor: Compressor,
+    plan: BucketPlan,
+    *,
+    phase: int,
+    mesh=None,
+    dp_axes: Sequence[str] = (),
+    param_shardings=None,
+    clip_norm: float = 0.0,
+    donate: bool = True,
+    pod_interval: int = 1,
+):
+    """jit (+ shard_map over DP axes) the per-phase step.
+
+    Single-process CPU path: ``mesh=None`` -> plain jit, no collectives.
+    Production path: manual over ``dp_axes``, auto over everything else.
+    Hierarchical mode (``pod_interval > 1``): state carries a leading
+    per-pod axis (P('pod')) so pods may drift between reconciliations.
+    """
+    hier = pod_interval > 1 and "pod" in dp_axes
+    step_fn = build_step_fn(
+        model, optimizer, compressor, plan,
+        phase=phase, dp_axes=dp_axes if mesh is not None else (),
+        clip_norm=clip_norm, pod_interval=pod_interval if hier else 1,
+    )
+    if mesh is None:
+        return jax.jit(step_fn, donate_argnums=(0, 1, 2) if donate else ())
+
+    state_spec = P("pod") if hier else P()
+    batch_spec = P(tuple(dp_axes))
+    mapped = jax.shard_map(
+        step_fn,
+        mesh=mesh,
+        in_specs=(
+            state_spec,                           # params
+            state_spec,                           # opt_state
+            state_spec,                           # comp_state (residuals)
+            batch_spec,                           # batch (sharded on dim 0)
+            P(),                                  # step
+        ),
+        out_specs=(state_spec, state_spec, state_spec, P()),
+        axis_names=set(dp_axes),
+        check_vma=False,
+    )
+    kw = {}
+    if param_shardings is not None:
+        like = lambda tree: jax.tree.map(
+            lambda s: NamedSharding(mesh, s), tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+        kw["in_shardings"] = (
+            like(param_shardings["params"]),
+            like(param_shardings["opt"]),
+            like(param_shardings["comp"]),
+            like(param_shardings["batch"]),
+            NamedSharding(mesh, P()),
+        )
+    return jax.jit(mapped, donate_argnums=(0, 1, 2) if donate else (), **kw)
+
+
+def make_train_state(model, optimizer, compressor, plan, key):
+    params = model.init(key)
+    return {
+        "params": params,
+        "opt": optimizer.init(params),
+        "comp": compressor.init_state(params, plan),
+        "step": 0,
+    }
+
+
+class Trainer:
+    """Host loop: lazily compiles one executable per COVAP phase, logs
+    metrics, exposes measured step timing for the CCR profiler."""
+
+    def __init__(self, model, optimizer, tc: TrainConfig, *, mesh=None,
+                 dp_axes: Sequence[str] = (), param_specs=None):
+        self.model = model
+        self.optimizer = optimizer
+        self.tc = tc
+        self.mesh = mesh
+        self.dp_axes = tuple(dp_axes)
+        self.compressor = make_compressor(tc)
+        shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        self.plan = build_plan(
+            shapes,
+            bucket_bytes=tc.bucket_bytes,
+            max_buckets=tc.max_buckets,
+            interval=tc.interval,
+        )
+        self._steps: dict[int, Callable] = {}
+        self.history: list[dict] = []
+
+    @property
+    def num_phases(self) -> int:
+        base = self.compressor.num_phases(self.tc.interval)
+        if self.tc.pod_interval > 1 and "pod" in self.dp_axes:
+            import math as _m
+            return _m.lcm(base, self.tc.pod_interval)
+        return base
+
+    def _phase_fn(self, phase: int) -> Callable:
+        if phase not in self._steps:
+            self._steps[phase] = build_train_step(
+                self.model, self.optimizer, self.compressor, self.plan,
+                phase=phase, mesh=self.mesh, dp_axes=self.dp_axes,
+                clip_norm=self.tc.clip_norm, donate=False,
+                pod_interval=self.tc.pod_interval,
+            )
+        return self._steps[phase]
+
+    @property
+    def hierarchical(self) -> bool:
+        return self.tc.pod_interval > 1 and "pod" in self.dp_axes
+
+    def init_state(self, key):
+        state = make_train_state(self.model, self.optimizer, self.compressor,
+                                 self.plan, key)
+        if self.hierarchical:
+            n_pods = self.mesh.shape["pod"]
+            for k in ("params", "opt", "comp"):
+                state[k] = jax.tree.map(
+                    lambda a: jnp.broadcast_to(a[None], (n_pods,) + a.shape),
+                    state[k],
+                )
+        return state
+
+    def run(self, state, batches, steps: int | None = None, log=print):
+        steps = steps if steps is not None else self.tc.steps
+        it = iter(batches)
+        t0 = time.perf_counter()
+        for i in range(steps):
+            batch = next(it)
+            phase = state["step"] % self.num_phases
+            fn = self._phase_fn(phase)
+            params, opt, comp, metrics = fn(
+                state["params"], state["opt"], state["comp"], batch,
+                jnp.asarray(state["step"], jnp.int32),
+            )
+            state = {"params": params, "opt": opt, "comp": comp,
+                     "step": state["step"] + 1}
+            if (i + 1) % self.tc.log_every == 0 or i == 0:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = state["step"]
+                m["wall_s"] = time.perf_counter() - t0
+                self.history.append(m)
+                if log:
+                    log(
+                        f"step {state['step']:>5d}  loss {m['loss']:.4f}  "
+                        f"gnorm {m['grad_norm']:.3f}  t {m['wall_s']:.1f}s"
+                    )
+        return state

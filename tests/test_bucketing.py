@@ -1,0 +1,116 @@
+"""Property tests for the bucket plan (coverage, sharding balance,
+gather/scatter roundtrip)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build_plan
+from repro.core import bucketing as bk
+
+
+def make_tree(shapes):
+    return {
+        f"leaf{i}": jnp.zeros(s, jnp.float32) for i, s in enumerate(shapes)
+    }
+
+
+shape_strategy = st.lists(
+    st.one_of(
+        st.tuples(st.integers(1, 40)),
+        st.tuples(st.integers(1, 12), st.integers(1, 64)),
+        st.tuples(st.integers(1, 6), st.integers(1, 16), st.integers(1, 32)),
+    ),
+    min_size=1,
+    max_size=8,
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(shapes=shape_strategy, interval=st.integers(1, 6),
+       bucket_kb=st.sampled_from([1, 4, 16]))
+def test_plan_covers_every_element_exactly_once(shapes, interval, bucket_kb):
+    tree = make_tree(shapes)
+    plan = build_plan(tree, bucket_bytes=bucket_kb * 1024, max_buckets=64,
+                      interval=interval)
+    total = sum(int(np.prod(s)) for s in shapes)
+    assert plan.total_numel() == total
+    # exact coverage: mark every element via scatter of ones
+    leaves = [jnp.zeros(s, jnp.float32) for s in plan.leaf_shapes]
+    for b in plan.buckets:
+        ones = jnp.ones((b.numel,), jnp.float32)
+        leaves = bk.scatter_bucket(plan, leaves, b, ones)
+    for leaf in leaves:
+        np.testing.assert_array_equal(np.asarray(leaf), 1.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shapes=shape_strategy, interval=st.integers(1, 6))
+def test_gather_scatter_roundtrip(shapes, interval):
+    tree = make_tree(shapes)
+    plan = build_plan(tree, bucket_bytes=2048, max_buckets=64, interval=interval)
+    key = jax.random.PRNGKey(0)
+    vals = [
+        jax.random.normal(jax.random.fold_in(key, i), s)
+        for i, s in enumerate(plan.leaf_shapes)
+    ]
+    rebuilt = [jnp.zeros(s, jnp.float32) for s in plan.leaf_shapes]
+    for b in plan.buckets:
+        flat = bk.gather_bucket(plan, vals, b)
+        assert flat.shape == (b.numel,)
+        rebuilt = bk.scatter_bucket(plan, rebuilt, b, flat)
+    for a, c in zip(vals, rebuilt):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c))
+
+
+def test_tensor_sharding_splits_oversized_bucket():
+    """Paper SS III.C: a VGG-FC1-like oversized *layer* (one row bigger than
+    the bucket target) must be sliced into min(numel//median, I) parts."""
+    tree = {
+        "convs": jnp.zeros((64, 64, 64)),       # many small rows (16 KiB each)
+        "fc1": jnp.zeros((2, 1024, 1024)),      # 4 MiB rows >> 64 KiB target
+    }
+    plan = build_plan(tree, bucket_bytes=64 * 1024, max_buckets=512, interval=4)
+    numels = plan.bucket_numels()
+    med = np.median(numels)
+    origins = {}
+    for b in plan.buckets:
+        origins.setdefault(b.origin, 0)
+        origins[b.origin] += 1
+    assert max(origins.values()) > 1, "expected at least one split bucket"
+    # split count capped by the interval I=4
+    assert max(origins.values()) <= 4
+    # each oversized row was reduced 4x
+    assert max(numels) == 1024 * 1024 // 4
+
+
+def test_interval_caps_split_count():
+    tree = {"big": jnp.zeros((4096, 512)), "small": jnp.zeros((4, 128))}
+    for interval in (2, 3):
+        plan = build_plan(tree, bucket_bytes=16 * 1024 * 1024,
+                          max_buckets=256, interval=interval)
+        origins = {}
+        for b in plan.buckets:
+            origins.setdefault(b.origin, 0)
+            origins[b.origin] += 1
+        assert max(origins.values()) <= max(interval, 1)
+
+
+def test_plan_deterministic():
+    tree = make_tree([(8, 32), (100,), (3, 5, 7)])
+    p1 = build_plan(tree, bucket_bytes=1024, interval=4)
+    p2 = build_plan(tree, bucket_bytes=1024, interval=4)
+    assert p1.buckets == p2.buckets
+
+
+def test_sub_axis_avoids_sharded_axis():
+    from jax.sharding import PartitionSpec as P
+
+    tree = {"w": jnp.zeros((1, 256, 512))}
+    specs = {"w": P(None, None, "model")}
+    plan = build_plan(tree, bucket_bytes=1024, max_buckets=4, interval=4,
+                      param_specs=specs)
+    for b in plan.buckets:
+        for seg in b.segments:
+            assert seg.sub_axis != 2, "split must avoid the sharded axis"

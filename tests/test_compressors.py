@@ -1,0 +1,135 @@
+"""Single-worker behaviour of every registered GC scheme."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build_plan, get_compressor
+from repro.core.compressors import available, dense_bytes
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = {
+        "emb": jnp.zeros((128, 16)),
+        "w1": jnp.zeros((4, 16, 32)),
+        "b1": jnp.zeros((4, 32)),
+        "scalar": jnp.zeros(()),
+    }
+    plan = build_plan(params, bucket_bytes=2048, max_buckets=16, interval=4)
+    key = jax.random.PRNGKey(0)
+    grads = {
+        k: jax.random.normal(jax.random.fold_in(key, i), v.shape)
+        for i, (k, v) in enumerate(params.items())
+    }
+    return params, plan, grads
+
+
+@pytest.mark.parametrize("name", available())
+def test_sync_preserves_structure_and_is_finite(name, setup):
+    params, plan, grads = setup
+    comp = get_compressor(name)
+    state = comp.init_state(params, plan)
+    out, state2, stats = comp.sync(
+        grads, state, plan=plan, phase=0, step=0, axis_names=()
+    )
+    assert jax.tree_util.tree_structure(out) == jax.tree_util.tree_structure(grads)
+    for k in grads:
+        assert out[k].shape == grads[k].shape
+        assert out[k].dtype == grads[k].dtype
+        assert bool(jnp.all(jnp.isfinite(out[k])))
+    assert stats.bytes_per_worker <= stats.dense_bytes
+    assert stats.dense_bytes == dense_bytes(plan)
+
+
+@pytest.mark.parametrize("name", available())
+def test_sync_is_jittable(name, setup):
+    params, plan, grads = setup
+    comp = get_compressor(name)
+    state = comp.init_state(params, plan)
+
+    @jax.jit
+    def f(g, s, step):
+        out, s2, _ = comp.sync(g, s, plan=plan, phase=0, step=step,
+                               axis_names=())
+        return out, s2
+
+    out, _ = f(grads, state, jnp.int32(3))
+    assert out["emb"].shape == grads["emb"].shape
+
+
+def test_none_is_identity_single_worker(setup):
+    params, plan, grads = setup
+    comp = get_compressor("none")
+    out, _, stats = comp.sync(grads, (), plan=plan, phase=0, step=0,
+                              axis_names=())
+    for k in grads:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(grads[k]))
+    assert stats.volume_ratio == 1.0
+
+
+def test_fp16_close_to_identity(setup):
+    params, plan, grads = setup
+    comp = get_compressor("fp16")
+    out, _, stats = comp.sync(grads, (), plan=plan, phase=0, step=0,
+                              axis_names=())
+    for k in grads:
+        np.testing.assert_allclose(
+            np.asarray(out[k]), np.asarray(grads[k]), rtol=2e-2, atol=2e-2
+        )
+    assert 1.9 < stats.volume_ratio < 2.1
+
+
+def test_fp8wire_better_than_sign(setup):
+    params, plan, grads = setup
+    fp8 = get_compressor("fp8wire", ef=False)
+    sgn = get_compressor("efsignsgd", ef=False)
+    out8, _, s8 = fp8.sync(grads, (), plan=plan, phase=0, step=0, axis_names=())
+    outs, _, ss = sgn.sync(grads, (), plan=plan, phase=0, step=0, axis_names=())
+
+    def err(a):
+        return sum(
+            float(jnp.sum((a[k] - grads[k]) ** 2)) for k in grads
+        )
+
+    assert err(out8) < err(outs)
+    assert s8.volume_ratio > 3.5  # ~4x
+
+
+def test_covap_phase_volume(setup):
+    params, plan, grads = setup
+    comp = get_compressor("covap", interval=4)
+    state = comp.init_state(params, plan)
+    ratios = []
+    for phase in range(4):
+        _, _, stats = comp.sync(grads, state, plan=plan, phase=phase, step=phase,
+                                axis_names=())
+        ratios.append(stats.dense_bytes / max(stats.bytes_per_worker, 1))
+    avg = len(ratios) / sum(1 / r for r in ratios)
+    assert 3.0 < avg < 5.5  # ~interval on average
+
+
+def test_powersgd_reduces_error_with_rank(setup):
+    params, plan, grads = setup
+    errs = []
+    for rank in (1, 4):
+        comp = get_compressor("powersgd", rank=rank, ef=False)
+        state = comp.init_state(params, plan)
+        # a few warm-start iterations improve the subspace
+        for step in range(3):
+            out, state, _ = comp.sync(grads, state, plan=plan, phase=0,
+                                      step=step, axis_names=())
+        errs.append(
+            sum(float(jnp.sum((out[k] - grads[k]) ** 2)) for k in grads)
+        )
+    assert errs[1] < errs[0]
+
+
+def test_randomk_same_seed_is_deterministic(setup):
+    params, plan, grads = setup
+    comp = get_compressor("randomk", ratio=0.05)
+    st1 = comp.init_state(params, plan)
+    o1, _, _ = comp.sync(grads, st1, plan=plan, phase=0, step=7, axis_names=())
+    o2, _, _ = comp.sync(grads, st1, plan=plan, phase=0, step=7, axis_names=())
+    for k in grads:
+        np.testing.assert_array_equal(np.asarray(o1[k]), np.asarray(o2[k]))

@@ -1,0 +1,76 @@
+"""Error-feedback invariants (paper SS III.D, Algorithm 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build_plan, get_compressor
+from repro.core.error_feedback import EFSchedule
+
+
+def test_coefficient_schedule_matches_paper_formula():
+    s = EFSchedule(init_value=0.3, ascend_steps=200, ascend_range=0.1)
+    for step in [0, 1, 199, 200, 399, 400, 1399, 1400, 10_000]:
+        expected = min(0.3 + (step // 200) * 0.1, 1.0)
+        assert abs(float(s.coefficient(step)) - expected) < 1e-6
+
+
+def test_coefficient_caps_at_one():
+    s = EFSchedule(0.5, 10, 0.25)
+    assert float(s.coefficient(10_000)) == 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    sizes=st.lists(st.integers(4, 64), min_size=1, max_size=4),
+    phase=st.integers(0, 3),
+    step_val=st.integers(0, 500),
+)
+def test_covap_conservation(sizes, phase, step_val):
+    """t = g + coeff*r is exactly partitioned between the communicated part
+    and the new residual: out + r' == t (single worker => pmean identity)."""
+    params = {f"p{i}": jnp.zeros((n,)) for i, n in enumerate(sizes)}
+    plan = build_plan(params, bucket_bytes=64, max_buckets=16, interval=4)
+    comp = get_compressor("covap", interval=4)
+    key = jax.random.PRNGKey(step_val)
+    grads = {
+        k: jax.random.normal(jax.random.fold_in(key, i), v.shape)
+        for i, (k, v) in enumerate(params.items())
+    }
+    residual = {
+        k: jax.random.normal(jax.random.fold_in(key, 100 + i), v.shape)
+        for i, (k, v) in enumerate(params.items())
+    }
+    out, new_r, stats = comp.sync(
+        grads, residual, plan=plan, phase=phase, step=step_val, axis_names=()
+    )
+    coeff = comp.schedule.coefficient(step_val)
+    for k in grads:
+        t = grads[k] + coeff * residual[k]
+        np.testing.assert_allclose(
+            np.asarray(out[k] + new_r[k]), np.asarray(t), rtol=1e-5, atol=1e-6
+        )
+        # disjointness: out and r' never overlap
+        np.testing.assert_array_equal(
+            np.asarray(out[k] * new_r[k]), 0.0
+        )
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(32, 256), step_val=st.integers(0, 100))
+def test_bucket_ef_conservation_topk(n, step_val):
+    """Classic EF (Algorithm 1): sent_local + residual' == g + residual."""
+    params = {"w": jnp.zeros((n,))}
+    plan = build_plan(params, bucket_bytes=64, max_buckets=8, interval=4)
+    comp = get_compressor("topk", ratio=0.1)
+    key = jax.random.PRNGKey(step_val)
+    g = {"w": jax.random.normal(key, (n,))}
+    r = {"w": jax.random.normal(jax.random.fold_in(key, 1), (n,))}
+    out, new_r, _ = comp.sync(g, r, plan=plan, phase=0, step=step_val,
+                              axis_names=())
+    # single worker: out == sent_local
+    np.testing.assert_allclose(
+        np.asarray(out["w"] + new_r["w"]),
+        np.asarray(g["w"] + r["w"]),
+        rtol=1e-5, atol=1e-6,
+    )

@@ -1,0 +1,52 @@
+"""The coarse-grained filter schedule (paper SS III.A)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.filter import (
+    compression_ratio,
+    is_selected,
+    schedule_table,
+    selected_buckets,
+)
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(1, 64), interval=st.integers(1, 8))
+def test_every_bucket_exactly_once_per_period(n, interval):
+    table = schedule_table(n, interval, interval)
+    counts = np.zeros(n, int)
+    for sel in table:
+        for b in sel:
+            counts[b] += 1
+    assert (counts == 1).all()
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(1, 64), interval=st.integers(2, 8), step=st.integers(0, 100))
+def test_phase_specialisation_matches_paper_rule(n, interval, step):
+    """Static per-phase selection (XLA adaptation) == the paper's runtime
+    modulo rule for every step."""
+    phase = step % interval
+    assert selected_buckets(n, phase, interval) == tuple(
+        b for b in range(n) if is_selected(b, step, interval)
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(interval=st.integers(1, 8), mult=st.integers(1, 8))
+def test_volume_compression_equals_interval_when_divisible(interval, mult):
+    import jax.numpy as jnp
+
+    from repro.core import build_plan
+
+    tree = {"w": jnp.zeros((interval * mult * 64,))}
+    plan = build_plan(tree, bucket_bytes=256, max_buckets=interval * mult,
+                      interval=interval)
+    if plan.num_buckets % interval == 0:
+        assert abs(compression_ratio(plan, interval) - interval) < 1e-9
+
+
+def test_per_step_selection_size_balanced():
+    for n, interval in [(16, 4), (17, 4), (5, 2), (64, 8)]:
+        sizes = [len(s) for s in schedule_table(n, interval, interval)]
+        assert max(sizes) - min(sizes) <= 1

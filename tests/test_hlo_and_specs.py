@@ -1,0 +1,108 @@
+"""HLO collective parsing + tensor-parallel param-spec rules."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, get_reduced, list_archs
+from repro.launch.hlo_analysis import (
+    collective_summary,
+    parse_collectives,
+    roofline_terms,
+)
+from repro.models import build_model, build_param_specs
+
+FAKE_HLO = """
+HloModule test
+ENTRY main {
+  %p0 = f32[1024]{0} parameter(0)
+  %ar = f32[1024]{0} all-reduce(%p0), replica_groups={}, to_apply=%add
+  %ag = (f32[256]{0}, f32[256]{0}) all-gather-start(%p0), dimensions={0}
+  %agd = f32[2048]{0} all-gather-done(%ag)
+  %a2a = bf16[64,32]{1,0} all-to-all(%p0), dimensions={0}
+  %cp = f32[16]{0} collective-permute(%p0), source_target_pairs={{0,1}}
+  %rs = f32[128]{0} reduce-scatter(%p0), dimensions={0}, to_apply=%add
+}
+"""
+
+
+def test_parse_collectives_counts_and_bytes():
+    ops = parse_collectives(FAKE_HLO)
+    kinds = sorted(o.kind for o in ops)
+    assert kinds == sorted([
+        "all-reduce", "all-gather", "all-to-all", "collective-permute",
+        "reduce-scatter",
+    ])
+    by = {o.kind: o.result_bytes for o in ops}
+    assert by["all-reduce"] == 4096
+    assert by["all-gather"] == 2048  # start tuple counted once, done skipped
+    assert by["all-to-all"] == 64 * 32 * 2
+    assert by["reduce-scatter"] == 512
+
+
+def test_collective_summary_wire_factor():
+    s = collective_summary(FAKE_HLO)
+    raw = s["buffer_bytes"]
+    assert s["wire_bytes_est"] == raw + 4096  # all-reduce double-counted
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms(flops_per_device=197e12, hbm_bytes_per_device=0,
+                       wire_bytes_per_device=0)
+    assert t.dominant == "compute" and abs(t.compute_s - 1.0) < 1e-9
+    t = roofline_terms(flops_per_device=0, hbm_bytes_per_device=819e9,
+                       wire_bytes_per_device=100)
+    assert t.dominant == "memory"
+
+
+# ---- param specs -------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_param_specs_cover_all_leaves(arch):
+    cfg = get_reduced(arch)
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = build_param_specs(cfg, model.init, 2, "model")
+    s_leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    p_leaves = jax.tree.leaves(shapes)
+    assert len(s_leaves) == len(p_leaves)
+    for spec, leaf in zip(s_leaves, p_leaves):
+        assert isinstance(spec, P)
+        # divisibility respected
+        for ax, name in enumerate(spec):
+            if name is not None and ax < len(leaf.shape):
+                assert leaf.shape[ax] % 2 == 0
+
+
+def test_param_specs_shard_big_matrices_full_config():
+    cfg = get_config("mistral-large-123b")
+    model = build_model(cfg)
+    specs = build_param_specs(cfg, model.init, 16, "model")
+    flat = {
+        "/".join(str(getattr(k, "key", k)) for k in path): s
+        for path, s in jax.tree_util.tree_flatten_with_path(
+            specs, is_leaf=lambda x: isinstance(x, P)
+        )[0]
+    }
+    sharded = [k for k, s in flat.items() if any(a is not None for a in s)]
+    assert any("wq" in k for k in sharded)
+    assert any("w_down" in k for k in sharded)
+    assert any("head" in k for k in sharded)
+
+
+def test_moe_expert_parallel_spec():
+    cfg = get_config("deepseek-moe-16b")  # 64 experts % 16 == 0
+    model = build_model(cfg)
+    specs = build_param_specs(cfg, model.init, 16, "model")
+    flat = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P)
+    )[0]
+    moe_specs = [
+        s for p, s in flat
+        if "moe" in (jp := "/".join(str(getattr(k, "key", k)) for k in p))
+        and "w_gate" in jp and "shared" not in jp
+    ]
+    assert moe_specs, "expected MoE expert leaves"
+    for s in moe_specs:
+        # stacked (n_super, E, d, ff): expert axis sharded
+        assert s[-3] == "model"

@@ -1,0 +1,85 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret mode on CPU; the kernels target TPU BlockSpecs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SIZES = [1, 127, 4096, 33333, 100_000]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def rnd(n, dtype, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n,)).astype(dtype)
+
+
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("selected", [True, False])
+def test_ef_update(n, dtype, selected):
+    g, r = rnd(n, dtype, 0), rnd(n, dtype, 1)
+    s1, r1 = ops.ef_update(g, r, 0.7, selected=selected, block=4096)
+    s2, r2 = ref.ef_update_ref(g, r, 0.7, selected=selected)
+    np.testing.assert_allclose(
+        np.asarray(s1, np.float32), np.asarray(s2, np.float32), rtol=1e-2
+    )
+    np.testing.assert_allclose(
+        np.asarray(r1, np.float32), np.asarray(r2, np.float32), rtol=1e-2
+    )
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_quantize_roundtrip(n):
+    x = rnd(n, jnp.float32)
+    q, s = ops.quantize_fp8(x, block=2048)
+    q2, s2 = ref.quantize_fp8_ref(x, block=2048)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s2), rtol=1e-6)
+    np.testing.assert_array_equal(
+        np.asarray(q, np.float32), np.asarray(q2, np.float32)
+    )
+    xd = ops.dequantize_fp8(q, s, block=2048)
+    # fp8 e4m3 relative error ~2^-3
+    np.testing.assert_allclose(np.asarray(xd), np.asarray(x), atol=0.2, rtol=0.13)
+
+
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_sign_compress(n, dtype):
+    x = rnd(n, dtype)
+    s1, sc1 = ops.sign_compress(x, block=4096)
+    s2, sc2 = ref.sign_compress_ref(x)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_allclose(float(sc1), float(sc2), rtol=1e-3)
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_threshold_filter(n):
+    x = rnd(n, jnp.float32)
+    t = ops.sample_threshold(x, 0.05)
+    y1, c1 = ops.threshold_filter(x, t, block=4096)
+    y2, c2 = ref.threshold_filter_ref(x, t, block=4096)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2))
+    assert int(c1.sum()) == int(c2.sum())
+
+
+@pytest.mark.parametrize(
+    "m,k,n", [(8, 8, 8), (128, 128, 128), (300, 257, 2), (64, 1000, 4)]
+)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_matmul(m, k, n, dtype):
+    a = jax.random.normal(jax.random.PRNGKey(0), (m, k)).astype(dtype)
+    b = jax.random.normal(jax.random.PRNGKey(1), (k, n)).astype(dtype)
+    c1 = ops.matmul(a, b, bm=128, bn=128, bk=128)
+    c2 = ref.matmul_ref(a, b)
+    tol = 2e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), rtol=tol, atol=tol)
+
+
+def test_sample_threshold_keeps_roughly_ratio():
+    x = rnd(100_000, jnp.float32)
+    for ratio in (0.01, 0.1):
+        t = ops.sample_threshold(x, ratio)
+        kept = float(jnp.mean(jnp.abs(x) >= t))
+        assert 0.3 * ratio < kept < 3.0 * ratio

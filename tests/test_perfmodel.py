@@ -1,0 +1,98 @@
+"""The paper's performance model (eqs 1-6) + CCR estimation properties."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import perfmodel as pm
+from repro.core.ccr import (
+    HardwareSpec,
+    align_comm_times,
+    allreduce_bytes_on_wire,
+    analytic_times,
+    select_interval,
+)
+
+pos = st.floats(0.001, 10.0)
+
+
+@settings(max_examples=50, deadline=None)
+@given(P=st.integers(2, 512), tb=pos, tc=pos, tm=pos)
+def test_speedup_dp_bounded_by_linear_scaling(P, tb, tc, tm):
+    s = pm.speedup_dp(P, tb, tc, tm)
+    assert 0 < s <= P + 1e-9
+
+
+@settings(max_examples=50, deadline=None)
+@given(tb=pos, comp=st.lists(pos, min_size=1, max_size=10),
+       comm=st.lists(pos, min_size=1, max_size=10))
+def test_overlap_simulator_bounds(tb, comp, comm):
+    n = min(len(comp), len(comm))
+    comp, comm = comp[:n], comm[:n]
+    r = pm.simulate_overlap(tb, comp, comm)
+    lo = tb + max(sum(comp), sum(comm))
+    hi = tb + sum(comp) + sum(comm)
+    assert lo - 1e-9 <= r["total"] <= hi + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(tb=pos, tc=pos, tm=pos, tcomp=pos)
+def test_data_dependency_never_faster(tb, tc, tm, tcomp):
+    with_dep = pm.t_gc_ovlp(tb, tc, tm, tcomp, data_dependency=True)
+    without = pm.t_gc_ovlp(tb, tc, tm, tcomp, data_dependency=False)
+    assert with_dep >= without - 1e-9
+
+
+def test_full_overlap_when_ccr_below_one():
+    """Paper claim: compressing to CCR<=1 hides all communication."""
+    tb, tc = 0.1, 0.2
+    t = pm.t_gc_ovlp(tb, tc, tc * 0.9, 0.0, n_buckets=16)
+    assert t < (tb + tc) * 1.1
+
+
+def test_table_iii_reproduction():
+    """Table III: ResNet-101 CCR 2.1 -> GC+ovlp near linear scaling."""
+    tb, tc = 0.055, 0.135
+    tm = 2.1 * tc
+    s_plain = pm.speedup_dp(64, tb, tc, tm)
+    s_gc_ovlp = pm.speedup_gc_ovlp(64, tb, tc, tm, volume_ratio=2.1)
+    s_ls = 64.0
+    assert s_plain < s_gc_ovlp <= s_ls
+    assert s_gc_ovlp > 0.85 * s_ls
+
+
+# ---- ccr --------------------------------------------------------------------
+
+def test_align_comm_times_removes_rendezvous_wait():
+    # worker 0 arrives early (waits), worker 1 late; true transfer = 2
+    starts = np.array([[0.0], [3.0]])
+    ends = np.array([[5.0], [5.0]])
+    out = align_comm_times(starts, ends)
+    np.testing.assert_allclose(out, [2.0])
+
+
+def test_select_interval_is_ceil():
+    assert select_interval(0.1) == 1
+    assert select_interval(1.0) == 1
+    assert select_interval(2.1) == 3
+    assert select_interval(4.0) == 4
+    assert select_interval(1e9) == 64  # capped
+
+
+def test_allreduce_wire_bytes():
+    assert allreduce_bytes_on_wire(100.0, 1) == 0
+    assert abs(allreduce_bytes_on_wire(100.0, 2) - 100.0) < 1e-9
+    assert allreduce_bytes_on_wire(100.0, 64) < 200.0
+
+
+def test_analytic_times_paper_environment():
+    """In the paper's 30Gbps/V100 environment, VGG-19-like models must show
+    CCR > 1 (the communication bottleneck the paper attacks)."""
+    hw = HardwareSpec.cloud_v100_30gbps()
+    # VGG-19: 143.6M params fp32, ~20 GFLOPs/sample * 32 batch
+    r = analytic_times(
+        step_flops_per_chip=3 * 20e9 * 32,
+        grad_bytes=143.6e6 * 4,
+        dp_world=64,
+        hw=hw,
+    )
+    assert r["ccr"] > 1.0
+    assert select_interval(r["ccr"]) >= 2

@@ -1,0 +1,75 @@
+"""End-to-end training on learnable synthetic data: COVAP must converge
+like the uncompressed baseline (the paper's central accuracy claim)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.data import DataConfig, make_loader
+from repro.models import build_model
+from repro.optim import adamw
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def run_training(compressor, steps=30, interval=2, **copts):
+    cfg = get_reduced("gpt2-paper").with_(vocab_size=256)
+    model = build_model(cfg)
+    tc = TrainConfig(
+        compressor=compressor, compressor_options=copts, interval=interval,
+        bucket_bytes=1 << 14, max_buckets=32, log_every=1000,
+    )
+    tr = Trainer(model, adamw(3e-3), tc)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8,
+                    corpus_tokens=1 << 14)
+    loader = iter(make_loader(dc))
+    losses = []
+    for _ in range(steps):
+        batch = next(loader)
+        phase = state["step"] % tr.num_phases
+        fn = tr._phase_fn(phase)
+        p, o, c, m = fn(state["params"], state["opt"], state["comp"], batch,
+                        jnp.int32(state["step"]))
+        state = {"params": p, "opt": o, "comp": c, "step": state["step"] + 1}
+        losses.append(float(m["loss"]))
+    return losses
+
+
+def test_baseline_converges():
+    losses = run_training("none")
+    assert losses[-1] < losses[0] * 0.8
+
+
+def test_covap_converges_close_to_baseline():
+    base = run_training("none")
+    cov = run_training("covap", interval=2)
+    assert cov[-1] < cov[0] * 0.85
+    # within a modest factor of the baseline at equal step count
+    assert cov[-1] < base[-1] * 1.6 + 0.3
+
+
+def test_covap_without_ef_worse_or_equal():
+    with_ef = run_training("covap", interval=4)
+    without = run_training("covap", interval=4, ef=False)
+    # EF should not hurt; usually helps (allow small noise margin)
+    assert with_ef[-1] <= without[-1] * 1.15
+
+
+def test_fp16_converges():
+    losses = run_training("fp16")
+    assert losses[-1] < losses[0] * 0.8
+
+
+def test_trainer_run_loop_and_history():
+    cfg = get_reduced("qwen1.5-0.5b").with_(vocab_size=256)
+    model = build_model(cfg)
+    tc = TrainConfig(compressor="covap", interval=2, bucket_bytes=1 << 14,
+                     max_buckets=16, log_every=2, steps=4)
+    tr = Trainer(model, adamw(1e-3), tc)
+    state = tr.init_state(jax.random.PRNGKey(1))
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=4,
+                    corpus_tokens=1 << 12)
+    state = tr.run(state, iter(make_loader(dc)), steps=4, log=None)
+    assert state["step"] == 4
+    assert len(tr.history) >= 2
