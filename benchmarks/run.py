@@ -1,8 +1,10 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only table2,fig5]
+    PYTHONPATH=src python -m benchmarks.run [--only table2,fig5] [--smoke]
 
 Prints ``name,us_per_call,derived`` CSV (one line per measurement).
+``--smoke`` runs only the fast analytic/plan-level modules (sub-second
+each, no training, no heavy jit) — the CI gate used by scripts/ci.sh.
 """
 from __future__ import annotations
 
@@ -34,12 +36,23 @@ MODULES = {
     "kernels": kernel_bench,
 }
 
+# analytic / plan-level modules only: sub-second each, no training loops,
+# no heavy jit — suitable as a CI smoke gate
+SMOKE_MODULES = ("table1", "table3", "table5", "fig5", "fig11")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast analytic subset for CI")
     args = ap.parse_args()
-    names = args.only.split(",") if args.only else list(MODULES)
+    if args.only:
+        names = args.only.split(",")
+    elif args.smoke:
+        names = list(SMOKE_MODULES)
+    else:
+        names = list(MODULES)
 
     print("name,us_per_call,derived")
     ok = True

@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 tests + smoke benchmarks.
+#
+#   scripts/ci.sh            # whole gate
+#   scripts/ci.sh tests      # tests only
+#   scripts/ci.sh bench      # smoke benchmarks only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+what="${1:-all}"
+
+if [[ "$what" == "all" || "$what" == "tests" ]]; then
+    echo "== tier-1 tests =="
+    python -m pytest -q
+fi
+
+if [[ "$what" == "all" || "$what" == "bench" ]]; then
+    echo "== smoke benchmarks =="
+    python -m benchmarks.run --smoke > /dev/null
+    echo "smoke benchmarks OK"
+fi

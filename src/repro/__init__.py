@@ -1,0 +1,36 @@
+"""COVAP reproduction: overlapping-aware gradient compression in JAX.
+
+``repro.api`` is the front door (``fit`` / ``tune`` / ``plan_report``);
+the subpackages are importable directly (``repro.core``, ``repro.train``,
+``repro.launch``, ...).  Submodules are loaded lazily so ``import repro``
+stays cheap.
+"""
+from __future__ import annotations
+
+import importlib
+
+__version__ = "0.1.0"
+
+_SUBMODULES = (
+    "api",
+    "checkpoint",
+    "configs",
+    "core",
+    "data",
+    "kernels",
+    "launch",
+    "models",
+    "optim",
+    "serve",
+    "train",
+)
+
+
+def __getattr__(name: str):
+    if name in _SUBMODULES:
+        return importlib.import_module(f"{__name__}.{name}")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_SUBMODULES))

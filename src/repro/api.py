@@ -1,0 +1,350 @@
+"""Top-level facade: ``repro.api.fit / tune / plan_report``.
+
+One import, three verbs, all built on the plan/execute split
+(DESIGN.md SS6):
+
+* :func:`fit` — train an architecture with any registered GC scheme.
+  ``interval="auto"`` resolves the paper's adaptive rule
+  ``I = ceil(analytic_ccr)`` (SS III.B) before a single step is traced.
+* :func:`plan_report` — the full static story of a run: resolved interval,
+  per-phase ``CommSchedule`` summaries, analytic step times and the
+  residual (post-compression) CCR — **no compilation, no tracing**.
+* :func:`tune` — rank candidate compressors for a workload with the
+  schedule-driven overlap timeline (eq (6) with real planned volumes).
+
+    import repro.api as api
+    result = api.fit("gpt2-paper", reduced=True, interval="auto", steps=20)
+    print(result.interval, result.ccr)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+
+from repro.configs import get_config, get_reduced
+from repro.core import build_plan, get_compressor
+from repro.core.ccr import (
+    HardwareSpec,
+    analytic_ccr,
+    analytic_times,
+    compressed_ccr,
+    select_interval,
+)
+from repro.core.perfmodel import cycle_speedup
+from repro.core.schedule import CommSchedule, mean_bytes_per_step, plan_all_phases
+from repro.data import DataConfig, make_loader
+from repro.models import build_model, count_params
+from repro.optim import adamw, cosine_warmup, sgd
+from repro.train.trainer import TrainConfig, Trainer
+
+
+@dataclasses.dataclass(frozen=True)
+class IntervalChoice:
+    """How ``interval="auto"`` was resolved."""
+
+    interval: int
+    ccr: float | None          # None when the interval was given explicitly
+    auto: bool
+    dp_world: int
+    grad_bytes: int
+    step_flops_per_chip: float
+
+
+def resolve_interval(
+    interval,
+    cfg,
+    *,
+    global_batch: int,
+    seq_len: int,
+    dp_world: int,
+    hw: HardwareSpec | None = None,
+) -> IntervalChoice:
+    """The paper's adaptive compression ratio, as a library call: with
+    ``interval="auto"`` pick ``I = ceil(analytic_ccr)``.  The default
+    hardware model is the paper's environment (V100 + 30 Gbps Ethernet) so
+    CPU-local runs reproduce the paper's interval choices."""
+    hw = hw or HardwareSpec.cloud_v100_30gbps()
+    n_active = count_params(cfg, active_only=True)
+    tokens = global_batch * seq_len
+    flops = 6.0 * n_active * tokens / max(dp_world, 1)
+    grad_bytes = count_params(cfg) * 4
+    if interval != "auto":
+        return IntervalChoice(
+            int(interval), None, False, dp_world, grad_bytes, flops
+        )
+    ccr = analytic_ccr(
+        step_flops_per_chip=flops,
+        grad_bytes=grad_bytes,
+        dp_world=max(dp_world, 1),
+        hw=hw,
+    )
+    return IntervalChoice(
+        select_interval(ccr), ccr, True, dp_world, grad_bytes, flops
+    )
+
+
+def _config(arch: str, *, reduced: bool, vocab_size: int | None = None):
+    cfg = get_reduced(arch) if reduced else get_config(arch)
+    if vocab_size is not None:
+        cfg = cfg.with_(vocab_size=vocab_size)
+    return cfg
+
+
+def _compressor_opts(name: str, opts: dict | None, interval: int) -> dict:
+    opts = dict(opts or {})
+    if name == "covap":
+        opts.setdefault("interval", interval)
+    return opts
+
+
+def _static_setup(
+    arch: str,
+    *,
+    reduced: bool,
+    interval,
+    seq_len: int,
+    global_batch: int,
+    dp_workers: int,
+    bucket_bytes: int,
+    max_buckets: int,
+    hw: HardwareSpec,
+):
+    """Shared no-tracing-needed setup of plan_report/tune: config, interval
+    resolution, bucket plan and analytic step times."""
+    cfg = _config(arch, reduced=reduced)
+    model = build_model(cfg)
+    choice = resolve_interval(
+        interval, cfg, global_batch=global_batch, seq_len=seq_len,
+        dp_world=dp_workers, hw=hw,
+    )
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    plan = build_plan(
+        shapes, bucket_bytes=bucket_bytes, max_buckets=max_buckets,
+        interval=choice.interval,
+    )
+    times = analytic_times(
+        step_flops_per_chip=choice.step_flops_per_chip,
+        grad_bytes=choice.grad_bytes,
+        dp_world=max(dp_workers, 1),
+        hw=hw,
+    )
+    return cfg, choice, plan, times
+
+
+def _optimizer(name: str, lr: float, steps: int):
+    if name == "adam":
+        return adamw(cosine_warmup(lr, steps // 10 + 1, steps))
+    if name == "sgd":
+        return sgd(lr, momentum=0.9)
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+@dataclasses.dataclass
+class FitResult:
+    trainer: Trainer
+    state: Any
+    history: list[dict]
+    interval: int
+    ccr: float | None
+    schedules: list[CommSchedule]
+
+    @property
+    def final_loss(self) -> float | None:
+        if not self.history:
+            return None
+        m = self.history[-1]
+        return m.get("loss", m.get("total_loss"))
+
+
+def fit(
+    arch: str = "gpt2-paper",
+    *,
+    reduced: bool = True,
+    compressor: str = "covap",
+    compressor_options: dict | None = None,
+    interval: int | str = "auto",
+    steps: int = 20,
+    seq_len: int = 32,
+    global_batch: int = 8,
+    dp_workers: int = 8,
+    optimizer: str = "adam",
+    lr: float = 1.5e-4,
+    bucket_bytes: int = 1 << 14,
+    max_buckets: int = 32,
+    vocab_size: int | None = None,
+    hw: HardwareSpec | None = None,
+    mesh=None,
+    dp_axes: Sequence[str] = (),
+    seed: int = 0,
+    log=None,
+    log_every: int = 10,
+    batches=None,
+) -> FitResult:
+    """Train ``arch`` with a GC scheme; ``interval="auto"`` applies the
+    paper's ``I = ceil(CCR)`` from the analytic profiler end-to-end.
+
+    ``dp_workers`` is the modelled DP world size for CCR selection on
+    single-process runs; with a real ``mesh`` the mesh's DP extent wins.
+    ``batches`` overrides the synthetic data loader."""
+    cfg = _config(arch, reduced=reduced, vocab_size=vocab_size)
+    model = build_model(cfg)
+    dp_world = dp_workers
+    if mesh is not None and dp_axes:
+        dp_world = 1
+        for a in dp_axes:
+            dp_world *= mesh.shape[a]
+    choice = resolve_interval(
+        interval, cfg, global_batch=global_batch, seq_len=seq_len,
+        dp_world=dp_world, hw=hw,
+    )
+    tc = TrainConfig(
+        compressor=compressor,
+        compressor_options=dict(compressor_options or {}),
+        interval=choice.interval,
+        bucket_bytes=bucket_bytes,
+        max_buckets=max_buckets,
+        steps=steps,
+        log_every=log_every,
+    )
+    tr = Trainer(
+        model, _optimizer(optimizer, lr, steps), tc,
+        mesh=mesh, dp_axes=dp_axes,
+    )
+    state = tr.init_state(jax.random.PRNGKey(seed))
+    if batches is None:
+        dc = DataConfig(
+            vocab_size=cfg.vocab_size, seq_len=seq_len,
+            global_batch=global_batch,
+        )
+        batches = make_loader(dc)
+    state = tr.run(state, iter(batches), steps=steps, log=log)
+    return FitResult(
+        trainer=tr,
+        state=state,
+        history=tr.history,
+        interval=choice.interval,
+        ccr=choice.ccr,
+        schedules=tr.schedules(),
+    )
+
+
+def plan_report(
+    arch: str = "gpt2-paper",
+    *,
+    reduced: bool = True,
+    compressor: str = "covap",
+    compressor_options: dict | None = None,
+    interval: int | str = "auto",
+    seq_len: int = 32,
+    global_batch: int = 8,
+    dp_workers: int = 8,
+    bucket_bytes: int = 1 << 14,
+    max_buckets: int = 32,
+    hw: HardwareSpec | None = None,
+) -> dict:
+    """Everything static about a run — interval resolution, per-phase
+    ``CommSchedule``s, analytic step times, residual CCR — computed without
+    tracing or compiling anything."""
+    hw = hw or HardwareSpec.cloud_v100_30gbps()
+    cfg, choice, plan, times = _static_setup(
+        arch, reduced=reduced, interval=interval, seq_len=seq_len,
+        global_batch=global_batch, dp_workers=dp_workers,
+        bucket_bytes=bucket_bytes, max_buckets=max_buckets, hw=hw,
+    )
+    comp = get_compressor(
+        compressor, **_compressor_opts(compressor, compressor_options,
+                                       choice.interval)
+    )
+    schedules = plan_all_phases(comp, plan, world=dp_workers)
+    return {
+        "arch": cfg.name,
+        "compressor": compressor,
+        "interval": choice.interval,
+        "interval_auto": choice.auto,
+        "analytic_ccr": choice.ccr if choice.auto else times["ccr"],
+        "dense_ccr": times["ccr"],
+        "residual_ccr": compressed_ccr(
+            schedules, t_comp=times["t_comp"], world=dp_workers, hw=hw,
+            link_bw=hw.ici_bw,
+        ),
+        "t_before": times["t_before"],
+        "t_comp": times["t_comp"],
+        "t_comm_dense": times["t_comm"],
+        "num_buckets": plan.num_buckets,
+        "phases": [s.summary() for s in schedules],
+    }
+
+
+_TUNE_CANDIDATES = (
+    ("covap", {}),
+    ("none", {}),
+    ("fp16", {}),
+    ("topk", {"ratio": 0.01}),
+    ("randomk", {"ratio": 0.01}),
+    ("efsignsgd", {}),
+    ("powersgd", {"rank": 2}),
+    ("oktopk", {"ratio": 0.01}),
+    ("fp8wire", {}),
+)
+
+
+def tune(
+    arch: str = "gpt2-paper",
+    *,
+    reduced: bool = True,
+    candidates: Sequence[tuple[str, dict]] = _TUNE_CANDIDATES,
+    interval: int | str = "auto",
+    seq_len: int = 32,
+    global_batch: int = 8,
+    dp_workers: int = 8,
+    bucket_bytes: int = 1 << 14,
+    max_buckets: int = 32,
+    hw: HardwareSpec | None = None,
+) -> list[dict]:
+    """Rank GC schemes for a workload by the schedule-driven overlap
+    timeline (eq (6) with each scheme's real planned volumes).  Data-
+    dependent exchanges (all-to-all based) lose their overlap, as in the
+    paper's Fig. 1(e)."""
+    hw = hw or HardwareSpec.cloud_v100_30gbps()
+    cfg, choice, plan, times = _static_setup(
+        arch, reduced=reduced, interval=interval, seq_len=seq_len,
+        global_batch=global_batch, dp_workers=dp_workers,
+        bucket_bytes=bucket_bytes, max_buckets=max_buckets, hw=hw,
+    )
+    rows = []
+    for name, opts in candidates:
+        opts = _compressor_opts(name, opts, choice.interval)
+        comp = get_compressor(name, **opts)
+        schedules = plan_all_phases(comp, plan, world=dp_workers)
+        data_dep = any(
+            c.op == "all_to_all" for s in schedules for c in s.calls
+        )
+        speedup = cycle_speedup(
+            dp_workers, times["t_before"], times["t_comp"], schedules,
+            world=dp_workers, link_bw=hw.ici_bw, data_dependency=data_dep,
+        )
+        mean_bytes = mean_bytes_per_step(schedules)
+        rows.append({
+            "compressor": name,
+            "options": opts,
+            "speedup": speedup,
+            "efficiency": speedup / max(dp_workers, 1),
+            "mean_bytes_per_step": mean_bytes,
+            "volume_ratio": schedules[0].dense_bytes / max(mean_bytes, 1),
+            "data_dependency": data_dep,
+            "num_phases": len(schedules),
+        })
+    rows.sort(key=lambda r: -r["speedup"])
+    return rows
+
+
+__all__ = [
+    "FitResult",
+    "IntervalChoice",
+    "fit",
+    "plan_report",
+    "resolve_interval",
+    "tune",
+]

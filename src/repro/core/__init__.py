@@ -1,26 +1,55 @@
-"""COVAP core: the paper's contribution as composable JAX modules."""
-from . import bucketing, ccr, compressors, error_feedback, filter, perfmodel
+"""COVAP core: the paper's contribution as composable JAX modules.
+
+The compressor subsystem is organised around the plan/execute split:
+``schedule.CommSchedule`` (static per-phase comm plans), ``stages``
+(reusable sync stages + the ``SyncPipeline`` combinator) and ``comm``
+(the ``Compressor`` contract, registry, and manual-collective helpers).
+"""
+from . import (
+    bucketing,
+    ccr,
+    comm,
+    compressors,
+    error_feedback,
+    filter,
+    perfmodel,
+    schedule,
+    stages,
+)
 from .bucketing import BucketPlan, build_plan
-from .ccr import HardwareSpec, analytic_times, select_interval
+from .ccr import HardwareSpec, analytic_ccr, analytic_times, select_interval
+from .comm import Compressor, SyncStats
 from .compressors import available, get_compressor
 from .error_feedback import EFSchedule
 from .filter import compression_ratio, selected_buckets
+from .schedule import CollectiveCall, CommSchedule, plan_all_phases
+from .stages import SyncPipeline
 
 __all__ = [
     "bucketing",
     "ccr",
+    "comm",
     "compressors",
     "error_feedback",
     "filter",
     "perfmodel",
+    "schedule",
+    "stages",
     "BucketPlan",
     "build_plan",
     "HardwareSpec",
+    "analytic_ccr",
     "analytic_times",
     "select_interval",
+    "Compressor",
+    "SyncStats",
     "available",
     "get_compressor",
     "EFSchedule",
     "compression_ratio",
     "selected_buckets",
+    "CollectiveCall",
+    "CommSchedule",
+    "plan_all_phases",
+    "SyncPipeline",
 ]

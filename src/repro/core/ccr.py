@@ -83,9 +83,65 @@ def analytic_times(
     }
 
 
+def analytic_ccr(
+    *,
+    step_flops_per_chip: float,
+    grad_bytes: float,
+    dp_world: int,
+    hw: HardwareSpec | None = None,
+    fwd_fraction: float = 1.0 / 3.0,
+) -> float:
+    """The analytic profiler's CCR (paper SS III.B) — ``repro.api``'s
+    ``interval='auto'`` rule is ``I = ceil(analytic_ccr(...))``."""
+    hw = hw or HardwareSpec.v5e()
+    return analytic_times(
+        step_flops_per_chip=step_flops_per_chip,
+        grad_bytes=grad_bytes,
+        dp_world=dp_world,
+        hw=hw,
+        fwd_fraction=fwd_fraction,
+    )["ccr"]
+
+
 def select_interval(ccr: float, max_interval: int = 64) -> int:
     """The paper's adaptive compression ratio: I = ceil(CCR), floored at 1."""
     return int(min(max(1, math.ceil(ccr)), max_interval))
+
+
+# ---------------------------------------------------------------------------
+# schedule-aware accounting (plan/execute split: no tracing required)
+# ---------------------------------------------------------------------------
+
+def schedule_comm_seconds(
+    schedules: Sequence, *, world: int, hw: HardwareSpec | None = None,
+    link_bw: float | None = None,
+) -> float:
+    """Mean per-step communication time of a compressor's phase cycle,
+    straight from its static ``CommSchedule``s — the executed-volume
+    counterpart of ``analytic_times``'s dense estimate."""
+    hw = hw or HardwareSpec.v5e()
+    bw = link_bw or hw.ici_bw
+    schedules = tuple(schedules)
+    if not schedules:
+        return 0.0
+    wire = sum(s.wire_bytes(world) for s in schedules) / len(schedules)
+    return wire / bw
+
+
+def compressed_ccr(
+    schedules: Sequence,
+    *,
+    t_comp: float,
+    world: int,
+    hw: HardwareSpec | None = None,
+    link_bw: float | None = None,
+) -> float:
+    """Residual CCR after compression: planned wire seconds / backward-pass
+    seconds.  COVAP targets < 1 (communication fully hidden)."""
+    t_comm = schedule_comm_seconds(
+        schedules, world=world, hw=hw, link_bw=link_bw
+    )
+    return t_comm / max(t_comp, 1e-12)
 
 
 # ---------------------------------------------------------------------------

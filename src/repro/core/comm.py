@@ -1,0 +1,195 @@
+"""Compressor interface + registry, built on the plan/execute split.
+
+Every GC scheme from the paper's Table II is a ``Compressor`` with two
+halves (DESIGN.md SS3):
+
+    schedule = comp.plan_phase(plan, phase)          # static, no tracing
+    synced, new_state, stats = comp.execute(
+        schedule, grads, state, step=step, axis_names=('data',))
+
+``plan_phase`` emits a :class:`~repro.core.schedule.CommSchedule` — the
+exact per-phase communication contract (selected buckets, collective op,
+wire dtype, bytes per worker) — computable before any XLA graph exists.
+``execute`` is a pure function of the schedule that runs inside
+``shard_map``.  The legacy one-call ``sync`` remains as a thin wrapper.
+
+``axis_names`` are the *manual* mesh axes of the enclosing ``shard_map`` over
+which gradients are reduced (the data-parallel axes).  With
+``axis_names=()`` the compressor runs in single-worker mode (unit tests,
+compression-overhead benchmarks) — all collectives become identities.
+
+``stats.bytes_per_worker`` always equals ``schedule.bytes_per_worker`` — the
+statically-known number of bytes each worker injects into the interconnect
+per call; tests cross-check it against the collective bytes parsed from
+compiled HLO.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .bucketing import BucketPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncStats:
+    bytes_per_worker: int
+    dense_bytes: int
+
+    @property
+    def volume_ratio(self) -> float:
+        return self.dense_bytes / max(self.bytes_per_worker, 1)
+
+
+def _promote_bf16() -> bool:
+    """XLA's CPU AllReducePromotion pass CHECK-fails on bf16 all-reduce
+    (hlo_instruction.cc 'Invalid binary instruction opcode copy').  On the
+    CPU dry-run backend we promote bf16 collectives to f32; on TPU (the
+    target) bf16 goes on the wire directly.  Collective-byte accounting in
+    the dry-run notes the 2x inflation for bf16-param archs."""
+    mode = os.environ.get("REPRO_PSUM_PROMOTE_BF16", "auto")
+    if mode == "never":
+        return False
+    if mode == "always":
+        return True
+    return jax.default_backend() == "cpu"
+
+
+def _reduce(op, x: jax.Array, axis_names: Sequence[str]) -> jax.Array:
+    if not axis_names:
+        return x
+    if x.dtype == jnp.bfloat16 and _promote_bf16():
+        return op(x.astype(jnp.float32), tuple(axis_names)).astype(jnp.bfloat16)
+    return op(x, tuple(axis_names))
+
+
+def pmean(x: jax.Array, axis_names: Sequence[str]) -> jax.Array:
+    return _reduce(lax.pmean, x, axis_names)
+
+
+def psum(x: jax.Array, axis_names: Sequence[str]) -> jax.Array:
+    return _reduce(lax.psum, x, axis_names)
+
+
+def world_size(axis_names: Sequence[str]) -> int | jax.Array:
+    if not axis_names:
+        return 1
+    return lax.psum(1, tuple(axis_names))
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a manual mesh axis inside shard_map — via
+    ``lax.axis_size`` where available, ``jax.core.axis_frame`` on older
+    releases."""
+    if hasattr(lax, "axis_size"):
+        return int(lax.axis_size(axis_name))
+    import jax.core as _jc
+
+    return int(_jc.axis_frame(axis_name))
+
+
+def all_gather(x: jax.Array, axis_names: Sequence[str]) -> jax.Array:
+    """Gather along a new leading axis; identity (adds axis of 1) if local."""
+    if not axis_names:
+        return x[None]
+    g = x
+    for ax in reversed(tuple(axis_names)):
+        g = lax.all_gather(g, ax)
+        g = g.reshape((-1,) + x.shape)
+    return g
+
+
+class Compressor:
+    """Base class.  Subclasses set ``name`` and implement the plan/execute
+    pair (``plan_phase`` + ``execute``); ``sync`` composes the two."""
+
+    name: str = "base"
+
+    def __init__(self, **kw):
+        self.options = dict(kw)
+
+    # ---- lifecycle -------------------------------------------------------
+    def init_state(self, params_like: Any, plan: BucketPlan) -> Any:
+        return ()
+
+    def num_phases(self, interval: int) -> int:
+        """How many step-specialised executables the trainer must build."""
+        return 1
+
+    # ---- plan: static, computable without tracing -------------------------
+    def plan_phase(self, plan: BucketPlan, phase: int, *, world: int = 1):
+        """Static communication plan for one phase -> ``CommSchedule``."""
+        raise NotImplementedError
+
+    # ---- execute: pure, runs inside shard_map -----------------------------
+    def execute(
+        self,
+        schedule,
+        grads: Any,
+        state: Any,
+        *,
+        step=0,
+        axis_names: Sequence[str] = (),
+    ) -> tuple[Any, Any, SyncStats]:
+        raise NotImplementedError
+
+    # ---- legacy one-call wrapper ------------------------------------------
+    def sync(
+        self,
+        grads: Any,
+        state: Any,
+        *,
+        plan: BucketPlan,
+        phase: int,
+        step,
+        axis_names: Sequence[str] = (),
+    ) -> tuple[Any, Any, SyncStats]:
+        # inside a shard_map trace the axis sizes are static, so the plan
+        # can be built for the real world size (world-dependent planners
+        # like oktopk report wrong bytes otherwise)
+        world = 1
+        for a in axis_names:
+            try:
+                world *= axis_size(a)
+            except Exception:  # not inside a mapping over `a`
+                world = 1
+                break
+        schedule = self.plan_phase(plan, phase, world=world)
+        return self.execute(
+            schedule, grads, state, step=step, axis_names=axis_names
+        )
+
+    def __repr__(self):
+        opts = ", ".join(f"{k}={v}" for k, v in self.options.items())
+        return f"{type(self).__name__}({opts})"
+
+
+_REGISTRY: dict[str, Callable[..., Compressor]] = {}
+
+
+def register(name: str):
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def get_compressor(name: str, **kw) -> Compressor:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown compressor {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**kw)
+
+
+def available() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def dense_bytes(plan: BucketPlan) -> int:
+    return sum(b.nbytes for b in plan.buckets)

@@ -1,145 +1,36 @@
-"""Compressor interface + registry.
+"""Compressor interface + registry — re-exported from ``repro.core.comm``.
 
-Every GC scheme from the paper's Table II is a ``Compressor``:
-
-    synced_grads, new_state, stats = comp.sync(grads, state, plan=plan,
-                                               phase=phase, step=step,
-                                               axis_names=('data',))
-
-``axis_names`` are the *manual* mesh axes of the enclosing ``shard_map`` over
-which gradients are reduced (the data-parallel axes).  With
-``axis_names=()`` the compressor runs in single-worker mode (unit tests,
-compression-overhead benchmarks) — all collectives become identities.
-
-``stats.bytes_per_worker`` is the statically-known number of bytes each
-worker injects into the interconnect per call; tests cross-check it against
-the collective bytes parsed from compiled HLO.
+The primitives (``Compressor``, ``SyncStats``, the registry, and the
+manual-collective helpers) live in :mod:`repro.core.comm` so that
+:mod:`repro.core.stages` can build on them without a circular import
+through this package.  This module keeps the historical import surface
+(``repro.core.compressors.base``) stable.
 """
 from __future__ import annotations
 
-import dataclasses
-import os
-from typing import Any, Callable, Sequence
+from ..comm import (  # noqa: F401
+    Compressor,
+    SyncStats,
+    _promote_bf16,
+    all_gather,
+    available,
+    dense_bytes,
+    get_compressor,
+    pmean,
+    psum,
+    register,
+    world_size,
+)
 
-import jax
-import jax.numpy as jnp
-from jax import lax
-
-from ..bucketing import BucketPlan
-
-
-@dataclasses.dataclass(frozen=True)
-class SyncStats:
-    bytes_per_worker: int
-    dense_bytes: int
-
-    @property
-    def volume_ratio(self) -> float:
-        return self.dense_bytes / max(self.bytes_per_worker, 1)
-
-
-def _promote_bf16() -> bool:
-    """XLA's CPU AllReducePromotion pass CHECK-fails on bf16 all-reduce
-    (hlo_instruction.cc 'Invalid binary instruction opcode copy').  On the
-    CPU dry-run backend we promote bf16 collectives to f32; on TPU (the
-    target) bf16 goes on the wire directly.  Collective-byte accounting in
-    the dry-run notes the 2x inflation for bf16-param archs."""
-    mode = os.environ.get("REPRO_PSUM_PROMOTE_BF16", "auto")
-    if mode == "never":
-        return False
-    if mode == "always":
-        return True
-    return jax.default_backend() == "cpu"
-
-
-def _reduce(op, x: jax.Array, axis_names: Sequence[str]) -> jax.Array:
-    if not axis_names:
-        return x
-    if x.dtype == jnp.bfloat16 and _promote_bf16():
-        return op(x.astype(jnp.float32), tuple(axis_names)).astype(jnp.bfloat16)
-    return op(x, tuple(axis_names))
-
-
-def pmean(x: jax.Array, axis_names: Sequence[str]) -> jax.Array:
-    return _reduce(lax.pmean, x, axis_names)
-
-
-def psum(x: jax.Array, axis_names: Sequence[str]) -> jax.Array:
-    return _reduce(lax.psum, x, axis_names)
-
-
-def world_size(axis_names: Sequence[str]) -> int | jax.Array:
-    if not axis_names:
-        return 1
-    return lax.psum(1, tuple(axis_names))
-
-
-def all_gather(x: jax.Array, axis_names: Sequence[str]) -> jax.Array:
-    """Gather along a new leading axis; identity (adds axis of 1) if local."""
-    if not axis_names:
-        return x[None]
-    g = x
-    for ax in reversed(tuple(axis_names)):
-        g = lax.all_gather(g, ax)
-        g = g.reshape((-1,) + x.shape)
-    return g
-
-
-class Compressor:
-    """Base class.  Subclasses set ``name`` and implement ``sync``."""
-
-    name: str = "base"
-
-    def __init__(self, **kw):
-        self.options = dict(kw)
-
-    # ---- lifecycle -------------------------------------------------------
-    def init_state(self, params_like: Any, plan: BucketPlan) -> Any:
-        return ()
-
-    def num_phases(self, interval: int) -> int:
-        """How many step-specialised executables the trainer must build."""
-        return 1
-
-    # ---- the per-step hook ------------------------------------------------
-    def sync(
-        self,
-        grads: Any,
-        state: Any,
-        *,
-        plan: BucketPlan,
-        phase: int,
-        step,
-        axis_names: Sequence[str] = (),
-    ) -> tuple[Any, Any, SyncStats]:
-        raise NotImplementedError
-
-    def __repr__(self):
-        opts = ", ".join(f"{k}={v}" for k, v in self.options.items())
-        return f"{type(self).__name__}({opts})"
-
-
-_REGISTRY: dict[str, Callable[..., Compressor]] = {}
-
-
-def register(name: str):
-    def deco(cls):
-        cls.name = name
-        _REGISTRY[name] = cls
-        return cls
-
-    return deco
-
-
-def get_compressor(name: str, **kw) -> Compressor:
-    if name not in _REGISTRY:
-        raise KeyError(f"unknown compressor {name!r}; have {sorted(_REGISTRY)}")
-    return _REGISTRY[name](**kw)
-
-
-def available() -> list[str]:
-    return sorted(_REGISTRY)
-
-
-def dense_bytes(plan: BucketPlan) -> int:
-    return sum(b.nbytes for b in plan.buckets)
+__all__ = [
+    "Compressor",
+    "SyncStats",
+    "all_gather",
+    "available",
+    "dense_bytes",
+    "get_compressor",
+    "pmean",
+    "psum",
+    "register",
+    "world_size",
+]

@@ -1,6 +1,8 @@
-"""COVAP: the paper's contribution (SS III.A-D), as a composable compressor.
+"""COVAP: the paper's contribution (SS III.A-D), as a stage composition.
 
-Per step with phase ``p = step % I``:
+COVAP is exactly ``CoarseFilter(I) ∘ ErrorFeedback(EFSchedule) ∘ WireCast``
+under the :class:`~repro.core.stages.SyncPipeline` combinator.  Per step
+with phase ``p = step % I``:
 
   1. ``t = g + coeff(step) * residual``           (error feedback, SS III.D)
   2. buckets with ``(b + p) % I == 0`` are all-reduced **segment-by-segment**
@@ -8,27 +10,24 @@ Per step with phase ``p = step % I``:
      whole-leaf case) — everything else is *not communicated at all*
   3. ``residual' = t`` at unselected positions, ``0`` at selected ones
 
-The bucket selection is static per phase, so the compiled executable for a
-phase contains only the collectives of that phase's buckets: the volume
-compression is visible in HLO, not simulated.  Compression cost is the
-elementwise EF update only — the "near-zero overhead" property.
+The bucket selection is static per phase — ``plan_phase`` returns the full
+``CommSchedule`` (selected buckets, wire dtype, exact bytes per worker)
+without tracing, and the compiled executable for a phase contains only that
+phase's collectives: the volume compression is visible in HLO, not
+simulated.  Compression cost is the elementwise EF update only — the
+"near-zero overhead" property.
 """
 from __future__ import annotations
 
-from typing import Any, Sequence
-
-import jax
 import jax.numpy as jnp
 
-from .. import bucketing as bk
-from ..bucketing import BucketPlan
-from ..error_feedback import EFSchedule, compensate, init_residual
-from ..filter import selected_buckets
-from .base import Compressor, SyncStats, dense_bytes, pmean, register
+from ..error_feedback import EFSchedule
+from ..stages import CoarseFilter, ErrorFeedback, SyncPipeline, WireCast
+from .base import register
 
 
 @register("covap")
-class COVAP(Compressor):
+class COVAP(SyncPipeline):
     def __init__(
         self,
         interval: int = 4,
@@ -41,80 +40,20 @@ class COVAP(Compressor):
         """``wire_dtype='bfloat16'`` additionally halves the wire volume of
         the selected buckets (beyond-paper: composes 2x with the filter's
         Ix; quantisation error lands in the EF residual)."""
-        super().__init__(interval=interval, ef=ef, wire_dtype=wire_dtype)
-        self.interval = int(interval)
+        interval = int(interval)
+        schedule = EFSchedule(ef_init, ef_ascend_steps, ef_ascend_range)
+        # interval <= 1 (CCR <= 1): no filter, no EF state — but an
+        # explicitly requested wire cast is still honored
+        filtered = interval > 1
+        super().__init__(
+            wire=WireCast(wire_dtype or None),
+            filter=CoarseFilter(interval) if filtered else None,
+            ef=ErrorFeedback(schedule) if (ef and filtered) else None,
+            interval=interval,
+            ef_flag=bool(ef),
+            wire_dtype=wire_dtype,
+        )
+        self.interval = interval
         self.use_ef = bool(ef)
         self.wire_dtype = jnp.dtype(wire_dtype) if wire_dtype else None
-        self.schedule = EFSchedule(ef_init, ef_ascend_steps, ef_ascend_range)
-
-    def num_phases(self, interval: int | None = None) -> int:
-        return self.interval if self.interval > 1 else 1
-
-    def init_state(self, params_like: Any, plan: BucketPlan) -> Any:
-        if not self.use_ef or self.interval <= 1:
-            return ()
-        return init_residual(params_like)
-
-    def sync(
-        self,
-        grads: Any,
-        state: Any,
-        *,
-        plan: BucketPlan,
-        phase: int,
-        step,
-        axis_names: Sequence[str] = (),
-    ):
-        interval = self.interval
-        if interval <= 1:
-            # degenerate case (CCR <= 1): plain per-bucket all-reduce
-            leaves = jax.tree_util.tree_leaves(grads)
-            out = [pmean(l, axis_names) for l in leaves]
-            tree = jax.tree_util.tree_unflatten(
-                jax.tree_util.tree_structure(grads), out
-            )
-            d = dense_bytes(plan)
-            return tree, state, SyncStats(d, d)
-
-        ef_on = self.use_ef and state != ()
-        if ef_on:
-            coeff = self.schedule.coefficient(step)
-            t = compensate(grads, state, coeff)
-        else:
-            t = grads
-
-        treedef = jax.tree_util.tree_structure(t)
-        leaves = jax.tree_util.tree_leaves(t)
-        out_leaves = [jnp.zeros(l.shape, l.dtype) for l in leaves]
-        resid_leaves = list(leaves) if ef_on else None
-
-        sel = selected_buckets(plan.num_buckets, phase, interval)
-        sent_bytes = 0
-        for b in sel:
-            bucket = plan.buckets[b]
-            for seg in bucket.segments:
-                li = seg.leaf_idx
-                x = bk._slice_segment(leaves[li], seg)
-                if self.wire_dtype is not None and x.dtype != self.wire_dtype:
-                    xw = x.astype(self.wire_dtype)
-                    xm = pmean(xw, axis_names).astype(x.dtype)
-                    sent_bytes += x.size * self.wire_dtype.itemsize
-                    if ef_on:
-                        # quantisation error stays in the residual
-                        resid_leaves[li] = bk._update_segment(
-                            resid_leaves[li], seg, x - xw.astype(x.dtype)
-                        )
-                else:
-                    xm = pmean(x, axis_names)
-                    sent_bytes += x.size * x.dtype.itemsize
-                    if ef_on:
-                        resid_leaves[li] = bk._update_segment(
-                            resid_leaves[li], seg, jnp.zeros_like(x)
-                        )
-                out_leaves[li] = bk._update_segment(out_leaves[li], seg, xm)
-
-        out = jax.tree_util.tree_unflatten(treedef, out_leaves)
-        new_state = (
-            jax.tree_util.tree_unflatten(treedef, resid_leaves) if ef_on else state
-        )
-        return out, new_state, SyncStats(sent_bytes, dense_bytes(plan))
+        self.schedule = schedule

@@ -1,6 +1,7 @@
 """Beyond-paper compressor: block-scaled FP8 gradient exchange.
 
-4x wire compression (vs fp32) with per-8192-block amax scaling — far better
+``SyncPipeline(ef=ErrorFeedback(), wire=FP8Block(block))``: 4x wire
+compression (vs fp32) with per-8192-block amax scaling — far better
 fidelity than naive fp16 casting at 2x the compression.  Workers' payloads
 differ, so the exchange is an all-gather of (fp8 payload, fp32 scales),
 decoded as the mean of the dequantised contributions.  With error feedback
@@ -13,35 +14,18 @@ the compressor backend-agnostic.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
-from ...kernels import ref as kref
-from .base import SyncStats, all_gather, register
-from .sparsify import _BucketEFCompressor
+from ..stages import ErrorFeedback, FP8Block, SyncPipeline
+from .base import register
 
 
 @register("fp8wire")
-class FP8Wire(_BucketEFCompressor):
+class FP8Wire(SyncPipeline):
     def __init__(self, block: int = 8192, seed: int = 0, ef: bool = True):
-        super().__init__(block=block, seed=seed)
+        super().__init__(
+            wire=FP8Block(block),
+            ef=ErrorFeedback() if ef else None,
+            seed=seed,
+            block=block,
+        )
         self.block = int(block)
         self.use_ef = ef
-
-    def _bucket_sync(self, flat, key, axis_names):
-        n = flat.shape[0]
-        q, scales = kref.quantize_fp8_ref(flat, block=self.block)
-        q_all = all_gather(q, axis_names)            # (W, n) fp8
-        s_all = all_gather(scales, axis_names)       # (W, nb)
-        W = q_all.shape[0]
-        dec = jnp.stack(
-            [
-                kref.dequantize_fp8_ref(q_all[w], s_all[w], block=self.block)
-                for w in range(W)
-            ]
-        ).mean(axis=0).astype(flat.dtype)
-        local_sent = kref.dequantize_fp8_ref(q, scales, block=self.block).astype(
-            flat.dtype
-        )
-        nbytes = n * 1 + scales.shape[0] * 4
-        return dec, local_sent, nbytes

@@ -1,6 +1,7 @@
 """Ok-topk (Li & Hoefler [13]): near-optimal sparse all-reduce, simplified.
 
-The reference scheme partitions the index space into per-worker *regions*;
+``SyncPipeline(ef=ErrorFeedback(), wire=OkTopKRoute(ratio))``.  The
+reference scheme partitions the index space into per-worker *regions*;
 each worker (1) selects its local top-k, (2) routes entries to their region
 owner via all-to-all with a fixed capacity, (3) the owner reduces and keeps
 the regional top-(k/W), and (4) the survivors are all-gathered.  Traffic is
@@ -11,100 +12,24 @@ identifies as hostile to overlapping.
 Simplifications vs. the reference (noted for fidelity): fixed all-to-all
 capacity 2k/W with magnitude-ordered overflow drop, and EF counts an entry
 as "sent" once routed (region-level drops land in the error term rather
-than the residual).
+than the residual).  The planned byte accounting counts the routing mask at
+its true wire width (the bucket dtype) so ``CommSchedule.bytes_per_worker``
+matches the HLO collectives bit-for-bit.
 """
 from __future__ import annotations
 
-import math
-
-import jax
-import jax.numpy as jnp
-from jax import lax
-
-from .base import SyncStats, all_gather, register
-from .sparsify import _BucketEFCompressor
-
-
-def _flat_axis_index(axis_names):
-    idx = lax.axis_index(axis_names[0])
-    for ax in axis_names[1:]:
-        idx = idx * lax.axis_size(ax) + lax.axis_index(ax)
-    return idx
-
-
-def _all_to_all(x, axis_names):
-    """all-to-all over (possibly multiple) named axes; x: (W, ...)."""
-    if len(axis_names) == 1:
-        return lax.all_to_all(x, axis_names[0], split_axis=0, concat_axis=0)
-    return lax.all_to_all(x, tuple(axis_names), split_axis=0, concat_axis=0)
+from ..stages import ErrorFeedback, OkTopKRoute, SyncPipeline
+from .base import register
 
 
 @register("oktopk")
-class OkTopK(_BucketEFCompressor):
+class OkTopK(SyncPipeline):
     def __init__(self, ratio: float = 0.01, seed: int = 0, ef: bool = True):
-        super().__init__(ratio=ratio, seed=seed)
+        super().__init__(
+            wire=OkTopKRoute(ratio),
+            ef=ErrorFeedback() if ef else None,
+            seed=seed,
+            ratio=ratio,
+        )
         self.ratio = float(ratio)
         self.use_ef = ef
-
-    def _bucket_sync(self, flat, key, axis_names):
-        n = flat.shape[0]
-        itemsize = jnp.dtype(flat.dtype).itemsize
-        if not axis_names:
-            # single worker: reduces to local top-k
-            m = max(1, int(math.ceil(n * self.ratio)))
-            _, idx = lax.top_k(jnp.abs(flat), m)
-            vals = flat[idx]
-            out = jnp.zeros(n, flat.dtype).at[idx].set(vals)
-            return out, out, m * (itemsize + 4)
-
-        W = int(lax.axis_size(axis_names[0]))
-        for ax in axis_names[1:]:
-            W *= int(lax.axis_size(ax))
-        m = max(W, int(math.ceil(n * self.ratio)))
-        m = int(math.ceil(m / W) * W)
-        region_size = int(math.ceil(n / W))
-        n_pad = region_size * W
-        cap = min(2 * m // W + 1, region_size)
-
-        _, idx = lax.top_k(jnp.abs(flat), m)
-        vals = flat[idx]
-        region = idx // region_size  # (m,) destination worker
-
-        # position of each entry within its destination's capacity window
-        onehot = (region[:, None] == jnp.arange(W)[None, :]).astype(jnp.int32)
-        pos = (jnp.cumsum(onehot, axis=0) - 1)[jnp.arange(m), region]
-
-        send_vals = jnp.zeros((W, cap), flat.dtype).at[region, pos].set(
-            vals, mode="drop"
-        )
-        send_idx = jnp.zeros((W, cap), jnp.int32).at[region, pos].set(
-            (idx - region * region_size).astype(jnp.int32), mode="drop"
-        )
-        send_mask = jnp.zeros((W, cap), flat.dtype).at[region, pos].set(
-            1.0, mode="drop"
-        )
-
-        recv_vals = _all_to_all(send_vals, axis_names)
-        recv_idx = _all_to_all(send_idx, axis_names)
-        recv_mask = _all_to_all(send_mask, axis_names)
-
-        dense = jnp.zeros(region_size, flat.dtype).at[recv_idx.reshape(-1)].add(
-            (recv_vals * recv_mask).reshape(-1)
-        )
-        k_r = m // W
-        _, ridx = lax.top_k(jnp.abs(dense), k_r)
-        rvals = dense[ridx]
-        offset = _flat_axis_index(tuple(axis_names)) * region_size
-        gidx = ridx + offset
-
-        vals_all = all_gather(rvals, axis_names).reshape(-1)
-        gidx_all = all_gather(gidx, axis_names).reshape(-1)
-        out = jnp.zeros(n_pad, flat.dtype).at[gidx_all].set(vals_all) / W
-        out = out[:n]
-
-        kept = pos < cap
-        local_sent = jnp.zeros(n, flat.dtype).at[idx].set(
-            jnp.where(kept, vals, 0.0)
-        )
-        nbytes = W * cap * (itemsize + 4 + 1) + k_r * (itemsize + 4)
-        return out, local_sent, nbytes

@@ -1,6 +1,8 @@
 """PowerSGD (Vogels et al. [26]): rank-r low-rank gradient compression.
 
-Per >=2-D leaf (batched over any leading stack/layer axes):
+``SyncPipeline(ef=ErrorFeedback(), wire=LowRank(rank))`` — the one
+leaf-granularity pipeline.  Per >=2-D leaf (batched over any leading
+stack/layer axes):
 
     M  = t reshaped to (B, a, b)
     P  = M @ Q        ; all-reduce(P) ; P <- orthonormalize(P)
@@ -15,73 +17,18 @@ Fig. 11 yet still loses to COVAP on compression overhead (two matmuls + QR).
 """
 from __future__ import annotations
 
-from typing import Any, Sequence
-
-import jax
-import jax.numpy as jnp
-
-from ..bucketing import BucketPlan
-from .base import Compressor, SyncStats, dense_bytes, pmean, register
-
-
-def _as_batched_matrix(x: jax.Array) -> jax.Array:
-    if x.ndim == 2:
-        return x[None]
-    return x.reshape((-1,) + x.shape[-2:])
+from ..stages import ErrorFeedback, LowRank, SyncPipeline
+from .base import register
 
 
 @register("powersgd")
-class PowerSGD(Compressor):
+class PowerSGD(SyncPipeline):
     def __init__(self, rank: int = 2, seed: int = 0, ef: bool = True):
-        super().__init__(rank=rank, seed=seed)
+        super().__init__(
+            wire=LowRank(rank, seed=seed),
+            ef=ErrorFeedback() if ef else None,
+            seed=seed,
+            rank=rank,
+        )
         self.rank = int(rank)
         self.use_ef = bool(ef)
-
-    def init_state(self, params_like: Any, plan: BucketPlan) -> Any:
-        key = jax.random.PRNGKey(self.options.get("seed", 0))
-        qs, resid = [], []
-        for i, leaf in enumerate(jax.tree_util.tree_leaves(params_like)):
-            if leaf.ndim >= 2:
-                m = _as_batched_matrix(jnp.zeros(leaf.shape, leaf.dtype))
-                b = m.shape[-1]
-                k = jax.random.fold_in(key, i)
-                qs.append(
-                    jax.random.normal(k, (m.shape[0], b, self.rank), leaf.dtype)
-                )
-            else:
-                qs.append(None)
-            resid.append(jnp.zeros(leaf.shape, leaf.dtype) if self.use_ef else None)
-        return {"q": qs, "residual": resid}
-
-    def sync(self, grads, state, *, plan, phase, step, axis_names=()):
-        treedef = jax.tree_util.tree_structure(grads)
-        leaves = jax.tree_util.tree_leaves(grads)
-        qs, resid = state["q"], state["residual"]
-        out_leaves, new_qs, new_resid = [], [], []
-        sent = 0
-        itemsize = 4
-        for leaf, q, r in zip(leaves, qs, resid):
-            t = leaf + r.astype(leaf.dtype) if r is not None else leaf
-            if q is None:
-                out = pmean(t, axis_names)
-                out_leaves.append(out)
-                new_qs.append(None)
-                new_resid.append(jnp.zeros_like(t) if r is not None else None)
-                sent += t.size * itemsize
-                continue
-            m = _as_batched_matrix(t)
-            p = pmean(jnp.einsum("bij,bjk->bik", m, q), axis_names)
-            p, _ = jnp.linalg.qr(p)  # orthonormalize columns
-            qn = pmean(jnp.einsum("bij,bik->bjk", m, p), axis_names)
-            approx = jnp.einsum("bik,bjk->bij", p, qn).reshape(leaf.shape)
-            out_leaves.append(approx)
-            new_qs.append(qn)
-            new_resid.append(t - approx if r is not None else None)
-            B, a, b = m.shape
-            sent += B * (a + b) * self.rank * itemsize
-        out = jax.tree_util.tree_unflatten(treedef, out_leaves)
-        return (
-            out,
-            {"q": new_qs, "residual": new_resid},
-            SyncStats(sent, dense_bytes(plan)),
-        )

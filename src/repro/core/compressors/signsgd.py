@@ -1,34 +1,23 @@
 """EFsignSGD (Karimireddy et al. [11]): sign compression with error feedback.
 
-Wire format per bucket: int8 signs (1 byte/elem, 4x vs fp32) + one fp32
-scale = mean(|t|).  Workers' signs differ, so the exchange is an all-gather
-(the paper's Fig. 11 notes AllGather-based schemes scale worse — reproduced
-here structurally).  Decode: mean_w(scale_w * sign_w).
+``SyncPipeline(ef=ErrorFeedback(), wire=SignCompress())``.  Wire format per
+bucket: int8 signs (1 byte/elem, 4x vs fp32) + one fp32 scale = mean(|t|).
+Workers' signs differ, so the exchange is an all-gather (the paper's Fig. 11
+notes AllGather-based schemes scale worse — reproduced here structurally).
+Decode: mean_w(scale_w * sign_w).
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
-from .base import SyncStats, all_gather, register
-from .sparsify import _BucketEFCompressor
+from ..stages import ErrorFeedback, SignCompress, SyncPipeline
+from .base import register
 
 
 @register("efsignsgd")
-class EFSignSGD(_BucketEFCompressor):
+class EFSignSGD(SyncPipeline):
     def __init__(self, seed: int = 0, ef: bool = True):
-        super().__init__(seed=seed)
+        super().__init__(
+            wire=SignCompress(),
+            ef=ErrorFeedback() if ef else None,
+            seed=seed,
+        )
         self.use_ef = ef
-
-    def _bucket_sync(self, flat, key, axis_names):
-        n = flat.shape[0]
-        scale = jnp.mean(jnp.abs(flat))
-        signs = jnp.where(flat >= 0, 1, -1).astype(jnp.int8)
-        signs_all = all_gather(signs, axis_names)          # (W, n) int8
-        scales_all = all_gather(scale[None], axis_names)   # (W, 1)
-        W = signs_all.shape[0]
-        decoded = (
-            signs_all.astype(flat.dtype) * scales_all.astype(flat.dtype)
-        ).mean(axis=0)
-        local_sent = scale * signs.astype(flat.dtype)
-        return decoded, local_sent, n * 1 + 4

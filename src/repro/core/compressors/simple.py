@@ -1,53 +1,30 @@
 """Baseline compressors: no-compression DDP and FP16/BF16 quantization.
 
-``none``  — per-bucket dense all-reduce (= DDPovlp, the paper's baseline);
-            one psum per bucket gives the latency-hiding scheduler the same
-            overlap units DDP's bucket hooks give NCCL.
-``fp16``  — cast-to-half, all-reduce in half precision, cast back (Table II
-            row FP16).  On TPU ``bf16`` is the native half type; the wire
-            format is selectable.
+``none``  — per-bucket dense all-reduce (= DDPovlp, the paper's baseline):
+            ``SyncPipeline(wire=WireCast(None))``; one psum per bucket gives
+            the latency-hiding scheduler the same overlap units DDP's bucket
+            hooks give NCCL.
+``fp16``  — cast-to-half on the wire, all-reduce, cast back (Table II row
+            FP16): ``SyncPipeline(wire=WireCast('bfloat16'))``; on TPU
+            ``bf16`` is the native half type; the wire format is selectable.
 """
 from __future__ import annotations
 
-from typing import Any, Sequence
-
-import jax
 import jax.numpy as jnp
 
-from ..bucketing import BucketPlan
-from .base import Compressor, SyncStats, dense_bytes, pmean, register
+from ..stages import SyncPipeline, WireCast
+from .base import register
 
 
 @register("none")
-class NoCompression(Compressor):
+class NoCompression(SyncPipeline):
     def __init__(self, per_bucket: bool = True):
-        super().__init__(per_bucket=per_bucket)
+        super().__init__(wire=WireCast(None), per_bucket=per_bucket)
         self.per_bucket = per_bucket
-
-    def sync(self, grads, state, *, plan, phase, step, axis_names=()):
-        leaves = jax.tree_util.tree_leaves(grads)
-        out = [pmean(l, axis_names) for l in leaves]
-        tree = jax.tree_util.tree_unflatten(
-            jax.tree_util.tree_structure(grads), out
-        )
-        d = dense_bytes(plan)
-        return tree, state, SyncStats(d, d)
 
 
 @register("fp16")
-class HalfPrecision(Compressor):
+class HalfPrecision(SyncPipeline):
     def __init__(self, wire_dtype: str = "bfloat16"):
-        super().__init__(wire_dtype=wire_dtype)
+        super().__init__(wire=WireCast(wire_dtype), wire_dtype=wire_dtype)
         self.wire_dtype = jnp.dtype(wire_dtype)
-
-    def sync(self, grads, state, *, plan, phase, step, axis_names=()):
-        def one(l):
-            lo = l.astype(self.wire_dtype)
-            lo = pmean(lo, axis_names)
-            return lo.astype(l.dtype)
-
-        out = jax.tree.map(one, grads)
-        d = dense_bytes(plan)
-        itemsize = jnp.dtype(self.wire_dtype).itemsize
-        sent = sum(b.numel * itemsize for b in plan.buckets)
-        return out, state, SyncStats(sent, d)

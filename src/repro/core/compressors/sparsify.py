@@ -1,8 +1,9 @@
 """Sparsification baselines: Top-k [3], Random-k [23], DGC [16].
 
-All three operate per communication bucket on the flat gradient vector,
-carry classic error feedback (residual accumulation, coefficient 1), and use
-the collective pattern of their reference implementations:
+All three are ``SyncPipeline(ef=ErrorFeedback(), wire=<stage>)`` with a
+per-bucket wire stage from :mod:`repro.core.stages`, the classic EF rule
+(residual accumulation, coefficient 1), and the collective pattern of their
+reference implementations:
 
 * Top-k / DGC: worker-local indices differ -> all-gather of (values, indices).
 * Random-k: the index set is derived from a PRNG key shared by construction
@@ -11,131 +12,57 @@ the collective pattern of their reference implementations:
 """
 from __future__ import annotations
 
-import math
-from typing import Any, Sequence
-
-import jax
-import jax.numpy as jnp
-
-from .. import bucketing as bk
-from ..bucketing import BucketPlan
-from .base import Compressor, SyncStats, all_gather, dense_bytes, pmean, register
-
-
-class _BucketEFCompressor(Compressor):
-    """Shared scaffolding: EF + per-bucket gather/compress/scatter."""
-
-    use_ef = True
-
-    def init_state(self, params_like: Any, plan: BucketPlan) -> Any:
-        if not self.use_ef:
-            return ()
-        return jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params_like)
-
-    def _bucket_sync(self, flat, key, axis_names):
-        """-> (synced_flat, local_sent_flat, bytes_per_worker)"""
-        raise NotImplementedError
-
-    def sync(self, grads, state, *, plan, phase, step, axis_names=()):
-        ef_on = self.use_ef and state != ()
-        if ef_on:
-            t = jax.tree.map(lambda g, r: g + r.astype(g.dtype), grads, state)
-        else:
-            t = grads
-        treedef = jax.tree_util.tree_structure(t)
-        leaves = jax.tree_util.tree_leaves(t)
-        out_leaves = [jnp.zeros(l.shape, l.dtype) for l in leaves]
-        sent_leaves = [jnp.zeros(l.shape, l.dtype) for l in leaves]
-
-        base_key = jax.random.PRNGKey(self.options.get("seed", 0))
-        base_key = jax.random.fold_in(base_key, jnp.asarray(step, jnp.int32))
-        total_sent = 0
-        for bucket in plan.buckets:
-            flat = bk.gather_bucket(plan, leaves, bucket)
-            key = jax.random.fold_in(base_key, bucket.index)
-            synced, local_sent, nbytes = self._bucket_sync(flat, key, axis_names)
-            total_sent += nbytes
-            out_leaves = bk.scatter_bucket(plan, out_leaves, bucket, synced)
-            if ef_on:
-                sent_leaves = bk.scatter_bucket(
-                    plan, sent_leaves, bucket, local_sent
-                )
-        out = jax.tree_util.tree_unflatten(treedef, out_leaves)
-        if ef_on:
-            new_state = jax.tree.map(
-                lambda a, b: a - b,
-                jax.tree_util.tree_unflatten(treedef, leaves),
-                jax.tree_util.tree_unflatten(treedef, sent_leaves),
-            )
-        else:
-            new_state = state
-        return out, new_state, SyncStats(total_sent, dense_bytes(plan))
+from .. import stages
+from ..stages import ErrorFeedback, SyncPipeline
+from .base import register
 
 
 @register("topk")
-class TopK(_BucketEFCompressor):
+class TopK(SyncPipeline):
     """Aji & Heafield sparse communication: largest-|g| k fraction."""
 
     def __init__(self, ratio: float = 0.01, seed: int = 0, ef: bool = True):
-        super().__init__(ratio=ratio, seed=seed)
+        super().__init__(
+            wire=stages.TopK(ratio),
+            ef=ErrorFeedback() if ef else None,
+            seed=seed,
+            ratio=ratio,
+        )
         self.ratio = float(ratio)
         self.use_ef = ef
 
-    def _select(self, flat):
-        n = flat.shape[0]
-        m = max(1, int(math.ceil(n * self.ratio)))
-        _, idx = jax.lax.top_k(jnp.abs(flat), m)
-        return idx, flat[idx]
-
-    def _bucket_sync(self, flat, key, axis_names):
-        n = flat.shape[0]
-        idx, vals = self._select(flat)
-        m = idx.shape[0]
-        vals_all = all_gather(vals, axis_names)  # (W, m)
-        idx_all = all_gather(idx, axis_names)
-        W = vals_all.shape[0]
-        out = jnp.zeros(n, flat.dtype)
-        out = out.at[idx_all.reshape(-1)].add(vals_all.reshape(-1)) / W
-        local_sent = jnp.zeros(n, flat.dtype).at[idx].set(vals)
-        itemsize = jnp.dtype(flat.dtype).itemsize
-        return out, local_sent, m * (itemsize + 4)
-
 
 @register("dgc")
-class DGC(TopK):
+class DGC(SyncPipeline):
     """Deep Gradient Compression: aggressive ratio (0.1%) + local gradient
     clipping before selection (momentum correction folded into EF)."""
 
     def __init__(
         self, ratio: float = 0.001, clip_norm: float = 1.0, seed: int = 0
     ):
-        super().__init__(ratio=ratio, seed=seed)
+        super().__init__(
+            wire=stages.TopK(ratio, clip_norm=clip_norm),
+            ef=ErrorFeedback(),
+            seed=seed,
+            ratio=ratio,
+            clip_norm=clip_norm,
+        )
+        self.ratio = float(ratio)
         self.clip_norm = float(clip_norm)
-        self.options["clip_norm"] = clip_norm
-
-    def _bucket_sync(self, flat, key, axis_names):
-        norm = jnp.linalg.norm(flat) + 1e-12
-        scale = jnp.minimum(1.0, self.clip_norm / norm)
-        return super()._bucket_sync(flat * scale, key, axis_names)
+        self.use_ef = True
 
 
 @register("randomk")
-class RandomK(_BucketEFCompressor):
+class RandomK(SyncPipeline):
     """Stich et al. sparsified SGD: k uniformly random coordinates, shared
     PRNG -> dense psum of the selected values (no index traffic)."""
 
     def __init__(self, ratio: float = 0.01, seed: int = 0, ef: bool = True):
-        super().__init__(ratio=ratio, seed=seed)
+        super().__init__(
+            wire=stages.RandomK(ratio),
+            ef=ErrorFeedback() if ef else None,
+            seed=seed,
+            ratio=ratio,
+        )
         self.ratio = float(ratio)
         self.use_ef = ef
-
-    def _bucket_sync(self, flat, key, axis_names):
-        n = flat.shape[0]
-        m = max(1, int(math.ceil(n * self.ratio)))
-        idx = jax.random.randint(key, (m,), 0, n)
-        vals = flat[idx]
-        synced = pmean(vals, axis_names)
-        out = jnp.zeros(n, flat.dtype).at[idx].set(synced)
-        local_sent = jnp.zeros(n, flat.dtype).at[idx].set(vals)
-        itemsize = jnp.dtype(flat.dtype).itemsize
-        return out, local_sent, m * itemsize

@@ -120,6 +120,88 @@ def speedup_gc_ovlp(
     return P * ls / total
 
 
+# ---- schedule-driven timeline (plan/execute split) --------------------------
+
+def schedule_comm_times(
+    schedule, *, world: int, link_bw: float
+) -> list[float]:
+    """Per-bucket communication times of one phase, aligned with the
+    bucket order of the schedule's plan (0.0 for unselected buckets) —
+    straight from the static ``CommSchedule``, no tracing or measuring."""
+    plan = schedule.plan
+    if plan is None:
+        raise ValueError("schedule carries no BucketPlan")
+    times = [0.0] * plan.num_buckets
+    if schedule.granularity != "bucket":
+        # leaf-granularity schemes have no bucket timeline; spread evenly
+        total = schedule.wire_bytes(world) / link_bw
+        return [total / plan.num_buckets] * plan.num_buckets
+    for b, call in zip(schedule.selected, schedule.calls):
+        # += : a bucket may carry several calls (e.g. oktopk route+gather)
+        times[b] += call.wire_bytes(world) / link_bw
+    return times
+
+
+def simulate_schedule(
+    t_before: float,
+    t_comp: float,
+    schedule,
+    *,
+    world: int,
+    link_bw: float,
+    t_compress: float = 0.0,
+    data_dependency: bool = False,
+) -> dict:
+    """Eq (6) with *real* per-bucket volumes from a ``CommSchedule``:
+    compute time is spread over buckets proportionally to their numel
+    (backward-pass order), communication times come from the planned
+    collective bytes.  This is how the trainer's overlap headroom is
+    estimated without compiling a step."""
+    plan = schedule.plan
+    numels = plan.bucket_numels()
+    total = sum(numels) or 1
+    comp = [(t_comp + t_compress) * n / total for n in numels]
+    comm = schedule_comm_times(schedule, world=world, link_bw=link_bw)
+    if data_dependency:
+        t = t_before + sum(comp) + sum(comm)
+        return {
+            "total": t,
+            "compute_end": t_before + sum(comp),
+            "comm_end": t,
+            "bubbles": 0.0,
+            "exposed_comm": sum(comm),
+        }
+    return simulate_overlap(t_before, comp, comm)
+
+
+def cycle_speedup(
+    P: int,
+    t_before: float,
+    t_comp: float,
+    schedules,
+    *,
+    world: int | None = None,
+    link_bw: float,
+    t_compress: float = 0.0,
+    data_dependency: bool = False,
+) -> float:
+    """Mean speedup over one full phase cycle (period = num_phases steps),
+    each phase simulated with its own planned volumes."""
+    schedules = tuple(schedules)
+    ls = t_before + t_comp
+    totals = [
+        simulate_schedule(
+            t_before, t_comp, s,
+            world=world if world is not None else max(P, 1),
+            link_bw=link_bw, t_compress=t_compress,
+            data_dependency=data_dependency,
+        )["total"]
+        for s in schedules
+    ]
+    mean_total = sum(totals) / max(len(totals), 1)
+    return P * ls / mean_total
+
+
 @dataclasses.dataclass(frozen=True)
 class SchemeProfile:
     """What the timeline model needs to know about a GC scheme."""

@@ -1,0 +1,148 @@
+"""Static communication schedules: the *plan* half of the plan/execute split.
+
+The paper's coarse filter works because bucket selection is a **static**
+function of ``(phase, interval)`` — nothing about a step's communication
+depends on gradient values.  ``CommSchedule`` makes that property a
+first-class artifact: for one compressor phase it records which buckets are
+communicated, with which collective op, at which wire dtype, and exactly how
+many bytes each worker injects — all computable **without tracing** a single
+XLA graph (DESIGN.md SS3).
+
+Consumers:
+
+* ``train.trainer`` builds one schedule per phase and passes it to the pure
+  ``Compressor.execute`` that runs inside ``shard_map``;
+* ``core.ccr`` / ``core.perfmodel`` read ``bytes_per_worker`` /
+  ``wire_bytes`` for CCR estimation and overlap simulation;
+* ``launch.dryrun`` cross-checks the planned bytes against the collective
+  bytes parsed from compiled HLO — the plan is the spec, the HLO is the
+  proof.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+from .bucketing import BucketPlan, Segment
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveCall:
+    """One planned collective: what a single bucket (or leaf) puts on the
+    wire during this phase.
+
+    ``payload_bytes`` is the per-worker value traffic; ``index_bytes`` is
+    the sideband (sparse indices, block scales, routing masks).  Both count
+    bytes *injected by one worker once* — ring/gather wire amplification is
+    applied separately by :meth:`wire_bytes` so the raw numbers stay
+    comparable with single-participant HLO.
+    """
+
+    target: str                # "bucket:3" | "leaf:2" | "pod-bucket:1"
+    op: str                    # "all_reduce" | "all_gather" | "all_to_all"
+    wire_dtype: str            # numpy dtype name of the wire payload
+    payload_bytes: int
+    index_bytes: int = 0
+
+    @property
+    def bytes_per_worker(self) -> int:
+        return self.payload_bytes + self.index_bytes
+
+    def wire_bytes(self, world: int) -> float:
+        """Bytes one worker actually moves for this call under the standard
+        ring algorithms (paper SS II): all-reduce moves ``2(W-1)/W`` of the
+        buffer, an all-gather re-sends the local shard ``W-1`` times, an
+        all-to-all keeps ``1/W`` local."""
+        if world <= 1:
+            return 0.0
+        b = float(self.bytes_per_worker)
+        if self.op == "all_reduce":
+            return 2.0 * (world - 1) / world * b
+        if self.op == "all_gather":
+            return (world - 1) * b
+        if self.op == "all_to_all":
+            return (world - 1) / world * b
+        return b
+
+
+@dataclasses.dataclass(frozen=True)
+class CommSchedule:
+    """Per-phase static communication plan of one compressor.
+
+    ``selected`` are bucket indices (``granularity == "bucket"``) or leaf
+    indices (``granularity == "leaf"``), aligned 1:1 with ``calls``.  The
+    originating :class:`BucketPlan` rides along so the pure ``execute`` can
+    slice segments without re-deriving anything.
+    """
+
+    compressor: str
+    phase: int
+    num_phases: int
+    granularity: str                     # "bucket" | "leaf"
+    selected: tuple[int, ...]
+    calls: tuple[CollectiveCall, ...]
+    dense_bytes: int
+    world: int = 1
+    plan: BucketPlan | None = None
+
+    # ---- byte accounting --------------------------------------------------
+    @property
+    def bytes_per_worker(self) -> int:
+        """Exact bytes each worker injects this phase — the number the HLO
+        collective parser must reproduce (tests/test_hlo_and_specs.py)."""
+        return sum(c.bytes_per_worker for c in self.calls)
+
+    @property
+    def volume_ratio(self) -> float:
+        return self.dense_bytes / max(self.bytes_per_worker, 1)
+
+    def wire_bytes(self, world: int | None = None) -> float:
+        w = self.world if world is None else world
+        return sum(c.wire_bytes(w) for c in self.calls)
+
+    # ---- structure accessors ---------------------------------------------
+    def segments(self, index: int) -> tuple[Segment, ...]:
+        """Segments of selected entry ``index`` (bucket granularity only)."""
+        if self.plan is None or self.granularity != "bucket":
+            raise ValueError("schedule has no bucket-plan segments")
+        return self.plan.buckets[self.selected[index]].segments
+
+    def summary(self) -> dict:
+        """JSON-serialisable digest for dry-run reports and logs."""
+        ops: dict[str, int] = {}
+        for c in self.calls:
+            ops[c.op] = ops.get(c.op, 0) + c.bytes_per_worker
+        return {
+            "compressor": self.compressor,
+            "phase": self.phase,
+            "num_phases": self.num_phases,
+            "granularity": self.granularity,
+            "selected": list(self.selected),
+            "num_calls": len(self.calls),
+            "bytes_per_worker": self.bytes_per_worker,
+            "dense_bytes": self.dense_bytes,
+            "volume_ratio": round(self.volume_ratio, 3),
+            "bytes_by_op": ops,
+        }
+
+
+def plan_all_phases(
+    compressor, plan: BucketPlan, *, world: int = 1
+) -> tuple[CommSchedule, ...]:
+    """Every phase's schedule — the complete static comm description of one
+    training cycle (period = num_phases steps)."""
+    n = max(compressor.num_phases(plan.interval_hint), 1)
+    return tuple(
+        compressor.plan_phase(plan, p, world=world) for p in range(n)
+    )
+
+
+def cycle_bytes_per_worker(schedules: Iterable[CommSchedule]) -> int:
+    return sum(s.bytes_per_worker for s in schedules)
+
+
+def mean_bytes_per_step(schedules: Sequence[CommSchedule]) -> float:
+    schedules = tuple(schedules)
+    if not schedules:
+        return 0.0
+    return cycle_bytes_per_worker(schedules) / len(schedules)

@@ -1,0 +1,720 @@
+"""Reusable gradient-sync stages + the ``SyncPipeline`` combinator.
+
+Every GC scheme in this repo decomposes into at most three orthogonal
+stages (DESIGN.md SS4):
+
+* an optional :class:`ErrorFeedback` stage (compensate before, keep the
+  un-sent part as the residual after);
+* an optional :class:`CoarseFilter` (the paper's static bucket selection —
+  the only stage that makes a schedule phase-dependent);
+* exactly one *wire stage* that defines how a selected bucket (or leaf)
+  crosses the interconnect: :class:`WireCast` (dense, optionally
+  dtype-cast, segment-wise all-reduce), :class:`TopK`, :class:`RandomK`,
+  :class:`SignCompress`, :class:`FP8Block`, :class:`OkTopKRoute`
+  (bucket granularity) or :class:`LowRank` (leaf granularity, PowerSGD).
+
+``SyncPipeline`` composes them and implements the plan/execute split:
+``plan_phase`` emits a static :class:`CommSchedule` (no tracing), and
+``execute`` is a pure function of ``(schedule, grads, state)`` that runs
+inside ``shard_map``.  COVAP is literally::
+
+    SyncPipeline(filter=CoarseFilter(I), ef=ErrorFeedback(EFSchedule(...)),
+                 wire=WireCast())
+
+and beyond-paper hybrids (filter + fp8 wire + EF, GraVAC-style) are
+one-liners: ``SyncPipeline.of(CoarseFilter(8), ErrorFeedback(), FP8Block())``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from . import bucketing as bk
+from .bucketing import Bucket, BucketPlan
+from .error_feedback import EFSchedule, compensate, init_residual
+from .filter import selected_buckets
+from .schedule import CollectiveCall, CommSchedule
+from .comm import (
+    Compressor,
+    SyncStats,
+    all_gather,
+    axis_size,
+    dense_bytes,
+    pmean,
+)
+
+
+def _bucket_dtype(plan: BucketPlan, bucket: Bucket) -> np.dtype:
+    """Dtype of the flattened bucket vector (mixed buckets promote)."""
+    return np.result_type(
+        *[plan.leaf_dtypes[s.leaf_idx] for s in bucket.segments]
+    )
+
+
+# ---------------------------------------------------------------------------
+# filter + error-feedback stages
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CoarseFilter:
+    """The paper's coarse-grained filter (SS III.A): bucket ``b`` is
+    communicated in phase ``p`` iff ``(b + p) % interval == 0``."""
+
+    interval: int = 4
+
+    def num_phases(self) -> int:
+        return max(int(self.interval), 1)
+
+    def select(self, plan: BucketPlan, phase: int) -> tuple[int, ...]:
+        return selected_buckets(plan.num_buckets, phase, self.interval)
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorFeedback:
+    """Compensation + residual stage (SS III.D).  ``schedule=None`` is the
+    classic EF of the baselines (coefficient 1); COVAP passes its ascending
+    :class:`EFSchedule`."""
+
+    schedule: EFSchedule | None = None
+
+    def compensated(self, grads: Any, residual: Any, step) -> Any:
+        if self.schedule is None:
+            return jax.tree.map(
+                lambda g, r: g + r.astype(g.dtype), grads, residual
+            )
+        return compensate(grads, residual, self.schedule.coefficient(step))
+
+
+# ---------------------------------------------------------------------------
+# wire stages (bucket granularity)
+# ---------------------------------------------------------------------------
+
+class WireStage:
+    """How one selected bucket crosses the network.
+
+    ``plan_bucket`` is the static half (exact per-worker bytes, collective
+    op, wire dtype); ``execute_bucket`` / ``execute_segment`` the traced
+    half.  ``segmented=True`` stages work on sharding-preserving segment
+    slices (no gather/scatter copies); the rest see the flat bucket vector.
+    """
+
+    op: str = "all_reduce"
+    segmented: bool = False
+
+    def plan_bucket(
+        self, plan: BucketPlan, bucket: Bucket, world: int = 1
+    ) -> CollectiveCall:
+        raise NotImplementedError
+
+    def execute_bucket(self, flat, key, axis_names):
+        """-> (synced_flat, local_sent_flat)"""
+        raise NotImplementedError
+
+    def __repr__(self):
+        return f"{type(self).__name__}()"
+
+
+class WireCast(WireStage):
+    """Dense segment-wise all-reduce, optionally dtype-cast on the wire.
+
+    ``WireCast(None)`` is the DDP baseline (one psum per bucket segment);
+    ``WireCast('bfloat16')`` halves the wire volume, with the quantisation
+    error landing in the EF residual when an :class:`ErrorFeedback` stage is
+    present (beyond-paper COVAP x2 composition).
+    """
+
+    segmented = True
+
+    def __init__(self, wire_dtype: str | None = None):
+        self.wire_dtype = jnp.dtype(wire_dtype) if wire_dtype else None
+
+    def plan_bucket(self, plan, bucket, world=1):
+        if self.wire_dtype is not None:
+            payload = bucket.numel * self.wire_dtype.itemsize
+            name = self.wire_dtype.name
+        else:
+            payload = bucket.nbytes
+            name = _bucket_dtype(plan, bucket).name
+        return CollectiveCall(
+            f"bucket:{bucket.index}", "all_reduce", name, payload
+        )
+
+    def execute_segment(self, x, axis_names):
+        """-> (synced_segment, residual_segment)."""
+        if self.wire_dtype is not None and x.dtype != self.wire_dtype:
+            xw = x.astype(self.wire_dtype)
+            xm = pmean(xw, axis_names).astype(x.dtype)
+            return xm, x - xw.astype(x.dtype)
+        return pmean(x, axis_names), jnp.zeros_like(x)
+
+    def __repr__(self):
+        return f"WireCast({self.wire_dtype})"
+
+
+class TopK(WireStage):
+    """Aji & Heafield top-|g| selection; worker index sets differ, so the
+    exchange is an all-gather of (values, int32 indices).  ``clip_norm``
+    adds DGC's local gradient clipping before selection."""
+
+    op = "all_gather"
+
+    def __init__(self, ratio: float = 0.01, clip_norm: float = 0.0):
+        self.ratio = float(ratio)
+        self.clip_norm = float(clip_norm)
+
+    def _k(self, n: int) -> int:
+        return max(1, int(math.ceil(n * self.ratio)))
+
+    def plan_bucket(self, plan, bucket, world=1):
+        dt = _bucket_dtype(plan, bucket)
+        m = self._k(bucket.numel)
+        return CollectiveCall(
+            f"bucket:{bucket.index}", "all_gather", dt.name,
+            m * dt.itemsize, m * 4,
+        )
+
+    def execute_bucket(self, flat, key, axis_names):
+        if self.clip_norm > 0:
+            norm = jnp.linalg.norm(flat) + 1e-12
+            flat = flat * jnp.minimum(1.0, self.clip_norm / norm)
+        n = flat.shape[0]
+        m = self._k(n)
+        _, idx = lax.top_k(jnp.abs(flat), m)
+        vals = flat[idx]
+        vals_all = all_gather(vals, axis_names)  # (W, m)
+        idx_all = all_gather(idx, axis_names)
+        W = vals_all.shape[0]
+        out = jnp.zeros(n, flat.dtype)
+        out = out.at[idx_all.reshape(-1)].add(vals_all.reshape(-1)) / W
+        local_sent = jnp.zeros(n, flat.dtype).at[idx].set(vals)
+        return out, local_sent
+
+
+class RandomK(WireStage):
+    """Stich et al. sparsified SGD: the index set comes from a PRNG key
+    shared by construction (seed, step, bucket), so the exchange is a dense
+    psum over the selected values only — no index traffic."""
+
+    op = "all_reduce"
+
+    def __init__(self, ratio: float = 0.01):
+        self.ratio = float(ratio)
+
+    def plan_bucket(self, plan, bucket, world=1):
+        dt = _bucket_dtype(plan, bucket)
+        m = max(1, int(math.ceil(bucket.numel * self.ratio)))
+        return CollectiveCall(
+            f"bucket:{bucket.index}", "all_reduce", dt.name, m * dt.itemsize
+        )
+
+    def execute_bucket(self, flat, key, axis_names):
+        n = flat.shape[0]
+        m = max(1, int(math.ceil(n * self.ratio)))
+        idx = jax.random.randint(key, (m,), 0, n)
+        vals = flat[idx]
+        synced = pmean(vals, axis_names)
+        out = jnp.zeros(n, flat.dtype).at[idx].set(synced)
+        local_sent = jnp.zeros(n, flat.dtype).at[idx].set(vals)
+        return out, local_sent
+
+
+class SignCompress(WireStage):
+    """EFsignSGD wire format: int8 signs (1 byte/elem) + one fp32 scale
+    = mean(|t|); AllGather-based (scales worse with W — Fig. 11)."""
+
+    op = "all_gather"
+
+    def plan_bucket(self, plan, bucket, world=1):
+        return CollectiveCall(
+            f"bucket:{bucket.index}", "all_gather", "int8",
+            bucket.numel * 1, 4,
+        )
+
+    def execute_bucket(self, flat, key, axis_names):
+        scale = jnp.mean(jnp.abs(flat))
+        signs = jnp.where(flat >= 0, 1, -1).astype(jnp.int8)
+        signs_all = all_gather(signs, axis_names)          # (W, n) int8
+        scales_all = all_gather(scale[None], axis_names)   # (W, 1)
+        decoded = (
+            signs_all.astype(flat.dtype) * scales_all.astype(flat.dtype)
+        ).mean(axis=0)
+        local_sent = scale * signs.astype(flat.dtype)
+        return decoded, local_sent
+
+
+class FP8Block(WireStage):
+    """Block-scaled FP8 wire (4x vs fp32): fp8 payload + fp32 per-block
+    amax scales, exchanged by all-gather (payloads differ per worker)."""
+
+    op = "all_gather"
+
+    def __init__(self, block: int = 8192):
+        self.block = int(block)
+
+    def plan_bucket(self, plan, bucket, world=1):
+        nb = max(1, -(-bucket.numel // self.block))
+        return CollectiveCall(
+            f"bucket:{bucket.index}", "all_gather", "float8_e4m3fn",
+            bucket.numel * 1, nb * 4,
+        )
+
+    def execute_bucket(self, flat, key, axis_names):
+        from ..kernels import ref as kref
+
+        q, scales = kref.quantize_fp8_ref(flat, block=self.block)
+        q_all = all_gather(q, axis_names)            # (W, n) fp8
+        s_all = all_gather(scales, axis_names)       # (W, nb)
+        W = q_all.shape[0]
+        dec = jnp.stack(
+            [
+                kref.dequantize_fp8_ref(q_all[w], s_all[w], block=self.block)
+                for w in range(W)
+            ]
+        ).mean(axis=0).astype(flat.dtype)
+        local_sent = kref.dequantize_fp8_ref(
+            q, scales, block=self.block
+        ).astype(flat.dtype)
+        return dec, local_sent
+
+
+def _flat_axis_index(axis_names):
+    idx = lax.axis_index(axis_names[0])
+    for ax in axis_names[1:]:
+        idx = idx * axis_size(ax) + lax.axis_index(ax)
+    return idx
+
+
+def _all_to_all(x, axis_names):
+    """all-to-all over (possibly multiple) named axes; x: (W, ...)."""
+    if len(axis_names) == 1:
+        return lax.all_to_all(x, axis_names[0], split_axis=0, concat_axis=0)
+    return lax.all_to_all(x, tuple(axis_names), split_axis=0, concat_axis=0)
+
+
+class OkTopKRoute(WireStage):
+    """Ok-topk's region-routed sparse exchange (all-to-all with fixed
+    capacity + regional top-(k/W) + all-gather of survivors) — the
+    data-dependent multi-stage pattern the paper identifies as hostile to
+    overlapping (SS I, Fig. 1e)."""
+
+    op = "all_to_all"
+
+    def __init__(self, ratio: float = 0.01):
+        self.ratio = float(ratio)
+
+    @staticmethod
+    def _geometry(n: int, ratio: float, W: int):
+        m = max(W, int(math.ceil(n * ratio)))
+        m = int(math.ceil(m / W) * W)
+        region_size = int(math.ceil(n / W))
+        cap = min(2 * m // W + 1, region_size)
+        return m, region_size, cap
+
+    def plan_bucket(self, plan, bucket, world=1):
+        dt = _bucket_dtype(plan, bucket)
+        W = max(int(world), 1)
+        m, _, cap = self._geometry(bucket.numel, self.ratio, W)
+        k_r = m // W
+        # two physically different exchanges, priced separately so the
+        # wire model amplifies each correctly: the routed all-to-all
+        # ((vals, int32 idx, mask-at-wire-dtype) x W capacity windows) and
+        # the survivor all-gather ((vals, int32 global idx) x k_r)
+        return (
+            CollectiveCall(
+                f"bucket:{bucket.index}", "all_to_all", dt.name,
+                W * cap * dt.itemsize, W * cap * (4 + dt.itemsize),
+            ),
+            CollectiveCall(
+                f"bucket:{bucket.index}:survivors", "all_gather", dt.name,
+                k_r * dt.itemsize, k_r * 4,
+            ),
+        )
+
+    def execute_bucket(self, flat, key, axis_names):
+        n = flat.shape[0]
+        if not axis_names:
+            # single worker: reduces to local top-k
+            m = max(1, int(math.ceil(n * self.ratio)))
+            _, idx = lax.top_k(jnp.abs(flat), m)
+            vals = flat[idx]
+            out = jnp.zeros(n, flat.dtype).at[idx].set(vals)
+            return out, out
+
+        W = axis_size(axis_names[0])
+        for ax in axis_names[1:]:
+            W *= axis_size(ax)
+        m, region_size, cap = self._geometry(n, self.ratio, W)
+        n_pad = region_size * W
+
+        _, idx = lax.top_k(jnp.abs(flat), m)
+        vals = flat[idx]
+        region = idx // region_size  # (m,) destination worker
+
+        # position of each entry within its destination's capacity window
+        onehot = (region[:, None] == jnp.arange(W)[None, :]).astype(jnp.int32)
+        pos = (jnp.cumsum(onehot, axis=0) - 1)[jnp.arange(m), region]
+
+        send_vals = jnp.zeros((W, cap), flat.dtype).at[region, pos].set(
+            vals, mode="drop"
+        )
+        send_idx = jnp.zeros((W, cap), jnp.int32).at[region, pos].set(
+            (idx - region * region_size).astype(jnp.int32), mode="drop"
+        )
+        send_mask = jnp.zeros((W, cap), flat.dtype).at[region, pos].set(
+            1.0, mode="drop"
+        )
+
+        recv_vals = _all_to_all(send_vals, axis_names)
+        recv_idx = _all_to_all(send_idx, axis_names)
+        recv_mask = _all_to_all(send_mask, axis_names)
+
+        dense = jnp.zeros(region_size, flat.dtype).at[
+            recv_idx.reshape(-1)
+        ].add((recv_vals * recv_mask).reshape(-1))
+        k_r = m // W
+        _, ridx = lax.top_k(jnp.abs(dense), k_r)
+        rvals = dense[ridx]
+        offset = _flat_axis_index(tuple(axis_names)) * region_size
+        gidx = ridx + offset
+
+        vals_all = all_gather(rvals, axis_names).reshape(-1)
+        gidx_all = all_gather(gidx, axis_names).reshape(-1)
+        out = jnp.zeros(n_pad, flat.dtype).at[gidx_all].set(vals_all) / W
+        out = out[:n]
+
+        kept = pos < cap
+        local_sent = jnp.zeros(n, flat.dtype).at[idx].set(
+            jnp.where(kept, vals, 0.0)
+        )
+        return out, local_sent
+
+
+# ---------------------------------------------------------------------------
+# leaf-granularity wire stage (PowerSGD)
+# ---------------------------------------------------------------------------
+
+def _as_batched_matrix(x: jax.Array) -> jax.Array:
+    if x.ndim == 2:
+        return x[None]
+    return x.reshape((-1,) + x.shape[-2:])
+
+
+class LowRank:
+    """PowerSGD's rank-r factorised all-reduce, per >=2-D leaf (batched over
+    leading stack axes).  Communication per matrix: (a + b) * r words via
+    AllReduce — scales well but pays two matmuls + QR per step."""
+
+    granularity = "leaf"
+    op = "all_reduce"
+
+    def __init__(self, rank: int = 2, seed: int = 0):
+        self.rank = int(rank)
+        self.seed = int(seed)
+
+    def init_state(self, params_like: Any, plan: BucketPlan, *, use_ef: bool):
+        key = jax.random.PRNGKey(self.seed)
+        qs, resid = [], []
+        for i, leaf in enumerate(jax.tree_util.tree_leaves(params_like)):
+            if leaf.ndim >= 2:
+                m = _as_batched_matrix(jnp.zeros(leaf.shape, leaf.dtype))
+                b = m.shape[-1]
+                k = jax.random.fold_in(key, i)
+                qs.append(
+                    jax.random.normal(k, (m.shape[0], b, self.rank), leaf.dtype)
+                )
+            else:
+                qs.append(None)
+            resid.append(
+                jnp.zeros(leaf.shape, leaf.dtype) if use_ef else None
+            )
+        return {"q": qs, "residual": resid}
+
+    def plan_leaf(
+        self, leaf_idx: int, shape: tuple[int, ...], dtype
+    ) -> CollectiveCall:
+        dt = np.dtype(dtype)
+        if len(shape) >= 2:
+            lead = shape[:-2]
+            B = int(np.prod(lead, dtype=np.int64)) if lead else 1
+            a, b = shape[-2], shape[-1]
+            payload = B * (a + b) * self.rank * dt.itemsize
+        else:
+            n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+            payload = n * dt.itemsize
+        return CollectiveCall(f"leaf:{leaf_idx}", "all_reduce", dt.name, payload)
+
+    def execute_leaf(self, t, q, axis_names):
+        """-> (approx, new_q); dense pmean for <2-D leaves (q is None)."""
+        if q is None:
+            return pmean(t, axis_names), None
+        m = _as_batched_matrix(t)
+        p = pmean(jnp.einsum("bij,bjk->bik", m, q), axis_names)
+        p, _ = jnp.linalg.qr(p)  # orthonormalize columns
+        qn = pmean(jnp.einsum("bij,bik->bjk", m, p), axis_names)
+        approx = jnp.einsum("bik,bjk->bij", p, qn).reshape(t.shape)
+        return approx, qn
+
+    def __repr__(self):
+        return f"LowRank(rank={self.rank})"
+
+
+# ---------------------------------------------------------------------------
+# the combinator
+# ---------------------------------------------------------------------------
+
+def _state_present(state: Any) -> bool:
+    return state is not None and state != ()
+
+
+class SyncPipeline(Compressor):
+    """filter ∘ error-feedback ∘ wire, with the plan/execute split.
+
+    ``plan_phase(plan, phase)`` -> :class:`CommSchedule` (static, no
+    tracing); ``execute(schedule, grads, state)`` -> (synced, state', stats)
+    (pure, shard_map-safe).  ``sync`` remains as the legacy one-call wrapper.
+    """
+
+    name = "pipeline"
+
+    def __init__(
+        self,
+        *,
+        wire,
+        filter: CoarseFilter | None = None,
+        ef: ErrorFeedback | None = None,
+        seed: int = 0,
+        **opts,
+    ):
+        super().__init__(**opts)
+        self.wire = wire
+        self.filter = filter
+        self.ef = ef
+        self.seed = int(seed)
+        if self.granularity == "leaf" and filter is not None:
+            raise ValueError("CoarseFilter requires bucket granularity")
+
+    # ---- composition sugar ------------------------------------------------
+    @classmethod
+    def of(cls, *stages, seed: int = 0, **opts) -> "SyncPipeline":
+        """Build a pipeline from an unordered stage list, e.g.
+        ``SyncPipeline.of(CoarseFilter(8), ErrorFeedback(), FP8Block())``."""
+        filt, ef, wire = None, None, None
+        for s in stages:
+            if isinstance(s, CoarseFilter):
+                filt = s
+            elif isinstance(s, ErrorFeedback):
+                ef = s
+            elif isinstance(s, (WireStage, LowRank)):
+                if wire is not None:
+                    raise ValueError("exactly one wire stage per pipeline")
+                wire = s
+            else:
+                raise TypeError(f"not a pipeline stage: {s!r}")
+        if wire is None:
+            wire = WireCast(None)
+        return cls(wire=wire, filter=filt, ef=ef, seed=seed, **opts)
+
+    @property
+    def granularity(self) -> str:
+        return getattr(self.wire, "granularity", "bucket")
+
+    @property
+    def stages(self) -> tuple:
+        out = []
+        if self.filter is not None:
+            out.append(self.filter)
+        if self.ef is not None:
+            out.append(self.ef)
+        out.append(self.wire)
+        return tuple(out)
+
+    def __repr__(self):
+        inner = " ∘ ".join(repr(s) for s in self.stages)
+        return f"{type(self).__name__}[{inner}]"
+
+    # ---- lifecycle --------------------------------------------------------
+    def num_phases(self, interval: int | None = None) -> int:
+        return self.filter.num_phases() if self.filter is not None else 1
+
+    def init_state(self, params_like: Any, plan: BucketPlan) -> Any:
+        if self.granularity == "leaf":
+            return self.wire.init_state(
+                params_like, plan, use_ef=self.ef is not None
+            )
+        if self.ef is None:
+            return ()
+        return init_residual(params_like)
+
+    # ---- plan -------------------------------------------------------------
+    def plan_phase(
+        self, plan: BucketPlan, phase: int, *, world: int = 1
+    ) -> CommSchedule:
+        n = self.num_phases()
+        ph = int(phase) % max(n, 1)
+        if self.granularity == "leaf":
+            selected = tuple(range(len(plan.leaf_shapes)))
+            calls = tuple(
+                self.wire.plan_leaf(i, plan.leaf_shapes[i], plan.leaf_dtypes[i])
+                for i in selected
+            )
+        else:
+            sel = (
+                self.filter.select(plan, ph)
+                if self.filter is not None
+                else tuple(range(plan.num_buckets))
+            )
+            # a wire stage may plan several collectives per bucket
+            # (e.g. OkTopKRoute's route + survivor exchange); `selected`
+            # repeats the bucket index so it stays aligned with `calls`
+            selected, calls = [], []
+            for b in sel:
+                planned = self.wire.plan_bucket(plan, plan.buckets[b], world)
+                for call in planned if isinstance(planned, tuple) else (planned,):
+                    selected.append(b)
+                    calls.append(call)
+            selected, calls = tuple(selected), tuple(calls)
+        return CommSchedule(
+            compressor=self.name,
+            phase=ph,
+            num_phases=max(n, 1),
+            granularity=self.granularity,
+            selected=selected,
+            calls=calls,
+            dense_bytes=dense_bytes(plan),
+            world=world,
+            plan=plan,
+        )
+
+    # ---- execute ----------------------------------------------------------
+    def execute(
+        self,
+        schedule: CommSchedule,
+        grads: Any,
+        state: Any,
+        *,
+        step=0,
+        axis_names: Sequence[str] = (),
+    ):
+        stats = SyncStats(schedule.bytes_per_worker, schedule.dense_bytes)
+        if self.granularity == "leaf":
+            out, new_state = self._execute_leaf(grads, state, axis_names)
+        elif getattr(self.wire, "segmented", False):
+            out, new_state = self._execute_segmented(
+                schedule, grads, state, step, axis_names
+            )
+        else:
+            out, new_state = self._execute_flat(
+                schedule, grads, state, step, axis_names
+            )
+        return out, new_state, stats
+
+    def _execute_segmented(self, schedule, grads, state, step, axis_names):
+        """Sharding-preserving path (COVAP / dense): per-segment slices,
+        zero gather/scatter copies for the common whole-leaf case."""
+        plan = schedule.plan
+        ef_on = self.ef is not None and _state_present(state)
+        t = self.ef.compensated(grads, state, step) if ef_on else grads
+
+        treedef = jax.tree_util.tree_structure(t)
+        leaves = jax.tree_util.tree_leaves(t)
+        out_leaves = [jnp.zeros(l.shape, l.dtype) for l in leaves]
+        resid_leaves = list(leaves) if ef_on else None
+
+        for b in dict.fromkeys(schedule.selected):  # unique, order kept
+            for seg in plan.buckets[b].segments:
+                li = seg.leaf_idx
+                x = bk._slice_segment(leaves[li], seg)
+                xm, resid_seg = self.wire.execute_segment(x, axis_names)
+                out_leaves[li] = bk._update_segment(out_leaves[li], seg, xm)
+                if ef_on:
+                    resid_leaves[li] = bk._update_segment(
+                        resid_leaves[li], seg, resid_seg
+                    )
+
+        out = jax.tree_util.tree_unflatten(treedef, out_leaves)
+        new_state = (
+            jax.tree_util.tree_unflatten(treedef, resid_leaves)
+            if ef_on
+            else state
+        )
+        return out, new_state
+
+    def _execute_flat(self, schedule, grads, state, step, axis_names):
+        """Flat-bucket path (sparsifiers / sign / fp8): gather each selected
+        bucket to a vector, run the wire stage, scatter back; classic EF
+        residual' = t - sent_local."""
+        plan = schedule.plan
+        ef_on = self.ef is not None and _state_present(state)
+        t = self.ef.compensated(grads, state, step) if ef_on else grads
+
+        treedef = jax.tree_util.tree_structure(t)
+        leaves = jax.tree_util.tree_leaves(t)
+        out_leaves = [jnp.zeros(l.shape, l.dtype) for l in leaves]
+        sent_leaves = [jnp.zeros(l.shape, l.dtype) for l in leaves]
+
+        base_key = jax.random.PRNGKey(self.seed)
+        base_key = jax.random.fold_in(base_key, jnp.asarray(step, jnp.int32))
+        for b in dict.fromkeys(schedule.selected):  # unique, order kept
+            bucket = plan.buckets[b]
+            flat = bk.gather_bucket(plan, leaves, bucket)
+            key = jax.random.fold_in(base_key, bucket.index)
+            synced, local_sent = self.wire.execute_bucket(
+                flat, key, axis_names
+            )
+            out_leaves = bk.scatter_bucket(plan, out_leaves, bucket, synced)
+            if ef_on:
+                sent_leaves = bk.scatter_bucket(
+                    plan, sent_leaves, bucket, local_sent
+                )
+        out = jax.tree_util.tree_unflatten(treedef, out_leaves)
+        if ef_on:
+            new_state = jax.tree.map(
+                lambda a, b: a - b,
+                jax.tree_util.tree_unflatten(treedef, leaves),
+                jax.tree_util.tree_unflatten(treedef, sent_leaves),
+            )
+        else:
+            new_state = state
+        return out, new_state
+
+    def _execute_leaf(self, grads, state, axis_names):
+        """Leaf-granularity path (LowRank/PowerSGD): EF folded into the
+        per-leaf loop; residual' = t - global approximation."""
+        treedef = jax.tree_util.tree_structure(grads)
+        leaves = jax.tree_util.tree_leaves(grads)
+        qs, resid = state["q"], state["residual"]
+        out_leaves, new_qs, new_resid = [], [], []
+        for leaf, q, r in zip(leaves, qs, resid):
+            t = leaf + r.astype(leaf.dtype) if r is not None else leaf
+            approx, qn = self.wire.execute_leaf(t, q, axis_names)
+            out_leaves.append(approx)
+            new_qs.append(qn)
+            if r is not None:
+                new_resid.append(
+                    jnp.zeros_like(t) if qn is None else t - approx
+                )
+            else:
+                new_resid.append(None)
+        out = jax.tree_util.tree_unflatten(treedef, out_leaves)
+        return out, {"q": new_qs, "residual": new_resid}
+
+
+__all__ = [
+    "CoarseFilter",
+    "ErrorFeedback",
+    "WireStage",
+    "WireCast",
+    "TopK",
+    "RandomK",
+    "SignCompress",
+    "FP8Block",
+    "OkTopKRoute",
+    "LowRank",
+    "SyncPipeline",
+]

@@ -28,7 +28,12 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import INPUT_SHAPES, get_config, list_archs
 from repro.core import build_plan, get_compressor
-from repro.core.ccr import HardwareSpec, allreduce_bytes_on_wire, select_interval
+from repro.core.ccr import (
+    HardwareSpec,
+    allreduce_bytes_on_wire,
+    analytic_ccr,
+    select_interval,
+)
 from repro.launch import analytic_costs, hlo_analysis, shardings as sh
 from repro.launch.mesh import dp_axes as dp_axes_fn, make_production_mesh
 from repro.models import build_model, count_params, long_context_variant, model_flops
@@ -39,7 +44,11 @@ HW = HardwareSpec.v5e()
 
 
 def auto_interval(cfg, mesh, dp) -> int:
-    """COVAP's adaptive I = ceil(CCR) from the analytic profiler (SS III.B)."""
+    """COVAP's adaptive I = ceil(CCR) from the analytic profiler (SS III.B).
+
+    Same rule as ``repro.api``'s ``interval='auto'``; the multi-pod mesh
+    additionally splits the all-reduce into an ICI ring + a DCN crossing.
+    """
     n_chips = 1
     for a in mesh.shape:
         n_chips *= mesh.shape[a]
@@ -53,15 +62,18 @@ def auto_interval(cfg, mesh, dp) -> int:
     # gradient sync happens per model-shard: each DP group syncs its shard
     model_world = n_chips // dp_world
     shard = grad_bytes / model_world
+    t_comp = (2.0 / 3.0) * flops_per_chip / (HW.peak_flops * HW.mfu)
     if "pod" in dp:
         # hierarchical: ring inside the pod over ICI + cross-pod over DCN
         intra = allreduce_bytes_on_wire(shard, mesh.shape["data"]) / HW.ici_bw
         inter = allreduce_bytes_on_wire(shard, mesh.shape["pod"]) / HW.dcn_bw
-        t_comm = intra + inter
-    else:
-        t_comm = allreduce_bytes_on_wire(shard, dp_world) / HW.ici_bw
-    t_comp = (2.0 / 3.0) * flops_per_chip / (HW.peak_flops * HW.mfu)
-    return select_interval(t_comm / max(t_comp, 1e-12))
+        return select_interval((intra + inter) / max(t_comp, 1e-12))
+    return select_interval(analytic_ccr(
+        step_flops_per_chip=flops_per_chip,
+        grad_bytes=shard,
+        dp_world=dp_world,
+        hw=HW,
+    ))
 
 
 def _spec_shapes(model):
@@ -132,12 +144,19 @@ def lower_train(model, mesh, dp, compressor_name: str, interval: int, phase: int
     )
     step_sds = jax.ShapeDtypeStruct((), jnp.int32)
     lowered = step_jit.lower(params_sds, opt_sds, comp_sds, batch_sds, step_sds)
+    # the static plan of this phase, exactly as compiled: build_train_step
+    # attaches the CommSchedule it planned (with the correct sync world —
+    # pod excluded in hierarchical mode), so the recorded bytes are the
+    # ones the HLO below must agree with
+    sched = step_jit.comm_schedule
     meta = {
         "plan_buckets": plan.num_buckets,
         "interval": interval,
         "phase": phase,
         "compressor": compressor_name,
         "pod_interval": pod_interval,
+        "comm_schedule": sched.summary(),
+        "planned_bytes_per_worker": sched.bytes_per_worker,
     }
     return lowered, meta
 

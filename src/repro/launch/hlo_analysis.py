@@ -18,13 +18,16 @@ from typing import Iterable
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    # fp8 wire formats (FP8Block / fp8wire compressor)
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1,
+    "f8e5m2fnuz": 1,
 }
 
 _COLL_RE = re.compile(
     r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
     r"(-start)?\b"
 )
-_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|c64)\[([\d,]*)\]")
+_SHAPE_RE = re.compile(r"(pred|bf16|c64|f8e\d+m\d+\w*|[suf]\d+)\[([\d,]*)\]")
 
 
 @dataclasses.dataclass
@@ -47,6 +50,9 @@ def _result_bytes(lhs: str) -> int:
     return total
 
 
+_OPCODE_RE = re.compile(r"([a-z][a-z0-9\-]*)\(")
+
+
 def parse_collectives(hlo_text: str) -> list[CollectiveOp]:
     ops = []
     for line in hlo_text.splitlines():
@@ -54,17 +60,42 @@ def parse_collectives(hlo_text: str) -> list[CollectiveOp]:
         if "=" not in s:
             continue
         _, rhs = s.split("=", 1)
-        m = _COLL_RE.search(rhs)
+        # the opcode is the FIRST identifier followed by '(' on the rhs —
+        # matching anywhere would also hit fusions whose *operands* are
+        # named after a collective (%all-reduce.11) and inflate the count
+        m = _OPCODE_RE.search(rhs)
         if not m:
             continue
+        cm = _COLL_RE.fullmatch(m.group(1))
         # '-done' ops re-state the shape; only count the op (or its -start)
-        if re.search(r"\b\w+-done\b", rhs):
+        if not cm:
             continue
-        kind = m.group(1)
+        kind = cm.group(1)
         # result shape(s) sit between '=' and the opcode
         shape_str = rhs[: m.start()]
         ops.append(CollectiveOp(kind, _result_bytes(shape_str), s[:200]))
     return ops
+
+
+def collective_bytes_per_worker(hlo_text: str, world: int) -> float:
+    """Per-worker *injected* bytes of every collective in the module — the
+    number a compressor's static ``CommSchedule.bytes_per_worker`` must
+    reproduce (tests/test_hlo_and_specs.py).
+
+    Normalisation per op kind: an all-gather's result buffer is the W-fold
+    gathered tensor, of which one worker contributed 1/W; a reduce-scatter's
+    result is 1/W of the buffer each worker fed in; all-reduce /
+    all-to-all / collective-permute results match the per-worker buffer.
+    """
+    total = 0.0
+    for op in parse_collectives(hlo_text):
+        if op.kind == "all-gather":
+            total += op.result_bytes / max(world, 1)
+        elif op.kind == "reduce-scatter":
+            total += op.result_bytes * max(world, 1)
+        else:
+            total += op.result_bytes
+    return total
 
 
 _COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\([^)]*\)\s*->")

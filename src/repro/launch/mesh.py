@@ -10,15 +10,28 @@ state (the dry-run sets XLA_FLAGS before any jax import).
 """
 from __future__ import annotations
 
+import numpy as np
+
 import jax
+
+
+def make_mesh_compat(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """``jax.make_mesh`` with ``axis_types`` is a newer-jax API; older
+    releases build a ``Mesh`` from a device array directly.  All axes are
+    Auto either way."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    n = int(np.prod(shape))
+    devices = np.array(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(devices, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh_compat(shape, axes)
 
 
 def dp_axes(*, multi_pod: bool = False) -> tuple[str, ...]:
@@ -32,7 +45,4 @@ def model_axis_size() -> int:
 
 def make_test_mesh(data: int = 4, model: int = 2):
     """Small mesh for multi-device CPU tests (spawned with fake devices)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh_compat((data, model), ("data", "model"))

@@ -18,30 +18,25 @@ import jax
 import jax.numpy as jnp
 
 from repro import checkpoint
+from repro.api import resolve_interval
 from repro.configs import get_config, get_reduced
-from repro.core.ccr import HardwareSpec, analytic_times, select_interval
 from repro.data import DataConfig, make_loader
-from repro.models import build_model, count_params
+from repro.models import build_model
 from repro.optim import adamw, cosine_warmup, sgd
 from repro.train.trainer import TrainConfig, Trainer
 
 
 def pick_interval(args, cfg) -> int:
-    if args.interval != "auto":
-        return int(args.interval)
-    # the paper's environment (30 Gbps cloud) for CPU-local runs
-    hw = HardwareSpec.cloud_v100_30gbps()
-    n = count_params(cfg, active_only=True)
-    tokens = args.global_batch * args.seq_len
-    r = analytic_times(
-        step_flops_per_chip=6.0 * n * tokens / max(args.dp_workers, 1),
-        grad_bytes=count_params(cfg) * 4,
+    """``repro.api``'s adaptive rule: I = ceil(analytic_ccr) (paper SS III.B),
+    modelled on the paper's environment (30 Gbps cloud) for CPU-local runs."""
+    choice = resolve_interval(
+        args.interval, cfg,
+        global_batch=args.global_batch, seq_len=args.seq_len,
         dp_world=max(args.dp_workers, 1),
-        hw=hw,
     )
-    i = select_interval(r["ccr"])
-    print(f"[ccr] analytic CCR={r['ccr']:.2f} -> interval I={i}")
-    return i
+    if choice.auto:
+        print(f"[ccr] analytic CCR={choice.ccr:.2f} -> interval I={choice.interval}")
+    return choice.interval
 
 
 def main():
@@ -81,6 +76,10 @@ def main():
     print(f"[plan] {tr.plan.num_buckets} buckets, "
           f"target {tr.plan.bucket_bytes_target/1e6:.1f} MB, "
           f"{tr.num_phases} phase executable(s)")
+    sr = tr.schedule_report()
+    print(f"[schedule] mean {sr['mean_bytes_per_step']/1e6:.3f} MB/step "
+          f"per worker (dense {sr['dense_bytes']/1e6:.3f} MB, "
+          f"volume ratio {sr['volume_ratio']:.2f}x) — static plan, no tracing")
 
     state = tr.init_state(jax.random.PRNGKey(0))
     n_params = sum(int(x.size) for x in jax.tree.leaves(state["params"]))
@@ -94,8 +93,9 @@ def main():
     state = tr.run(state, loader, steps=args.steps)
     wall = time.perf_counter() - t0
     tokens = args.steps * args.global_batch * args.seq_len
+    last = tr.history[-1]
     print(f"[done] {wall:.1f}s, {tokens/wall:.0f} tok/s, "
-          f"final loss {tr.history[-1]['loss']:.4f}")
+          f"final loss {last.get('loss', last['total_loss']):.4f}")
 
     if args.ckpt_dir:
         path = checkpoint.save(args.ckpt_dir, state["step"], state["params"])

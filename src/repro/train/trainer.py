@@ -8,6 +8,11 @@ Key structural points (DESIGN.md SS2):
   which bytes cross the interconnect (one ``psum`` per selected bucket);
   the 'model' axis stays **auto** so tensor-parallel sharding of the model
   math is compiler-managed.
+* Plan/execute split (DESIGN.md SS3): each phase's ``CommSchedule`` is
+  computed **outside** the traced function by ``Compressor.plan_phase`` —
+  the trainer knows the exact planned collective bytes before (and without)
+  compiling anything — and the pure ``Compressor.execute`` consumes it
+  inside ``shard_map``.
 * The coarse filter's bucket selection must be static in XLA, so the step
   is specialised per ``phase = step % I`` -> ``I`` executables, compiled
   lazily on first use.
@@ -28,8 +33,34 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import build_plan, get_compressor
 from repro.core.bucketing import BucketPlan
-from repro.core.compressors.base import Compressor, dense_bytes
+from repro.core.comm import Compressor, dense_bytes
+from repro.core.filter import selected_buckets
+from repro.core.schedule import CollectiveCall, CommSchedule, mean_bytes_per_step
 from repro.optim import Optimizer, apply_updates, clip_by_global_norm, global_norm
+
+
+def shard_map_compat(fn, mesh, in_specs, out_specs, axis_names):
+    """``jax.shard_map`` appeared (with ``check_vma``) in newer jax; older
+    releases ship ``jax.experimental.shard_map`` (with ``check_rep``).  The
+    trainer supports both so CPU dry-runs work on either toolchain."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names=set(axis_names), check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    # NOTE: unlike jax.shard_map(axis_names=...), the experimental API
+    # treats every mesh axis as manual here.  Passing auto= for the
+    # non-DP axes would match the new API's manual/auto split, but
+    # partial-manual shard_map CHECK-fails in the old XLA builds this
+    # fallback targets (hlo_sharding_util: IsManualSubgroup) — so on old
+    # jax the model axis runs replicated (correct numerics, no TP
+    # sharding of the step's math).  The production TP path requires a
+    # jax with jax.shard_map.
+    return _shard_map(
+        fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,15 +92,43 @@ def _loss_and_grads(model, params, batch):
     return loss, metrics, grads
 
 
-def pod_reconcile(params, plan: BucketPlan, *, pod_phase: int,
-                  pod_interval: int, pod_axes: Sequence[str],
+def plan_pod_schedule(
+    plan: BucketPlan, *, pod_phase: int, pod_interval: int
+) -> CommSchedule:
+    """Static cross-pod reconciliation plan (hierarchical COVAP, DESIGN
+    SS7b): the coarse filter's selection rule applied at the pod level.
+    Parameters go on the DCN wire in f32, so the planned bytes count f32."""
+    interval = max(int(pod_interval), 1)
+    sel = selected_buckets(plan.num_buckets, pod_phase % interval, interval)
+    calls = tuple(
+        CollectiveCall(
+            f"pod-bucket:{b}", "all_reduce", "float32",
+            plan.buckets[b].numel * 4,
+        )
+        for b in sel
+    )
+    return CommSchedule(
+        compressor="pod_reconcile",
+        phase=pod_phase % interval,
+        num_phases=interval,
+        granularity="bucket",
+        selected=sel,
+        calls=calls,
+        dense_bytes=sum(b.numel for b in plan.buckets) * 4,
+        plan=plan,
+    )
+
+
+def pod_reconcile(params, schedule: CommSchedule, *,
+                  pod_axes: Sequence[str],
                   reconcile_helper_axes: Sequence[str] = ()):
     """Hierarchical COVAP's cross-pod level (beyond-paper, DESIGN SS7b):
     instead of sending every gradient across the slow DCN pod links, each
-    step pmean-reconciles only the PARAMETER segments of the buckets with
-    ``(b + step) % I_pod == 0`` — the coarse filter applied at the pod
-    level, where CCR > 1 genuinely holds.  Local-SGD-style drift between
-    reconciliations, bounded to I_pod steps per bucket by the round-robin.
+    step pmean-reconciles only the PARAMETER segments named by the static
+    ``CommSchedule`` (buckets with ``(b + step) % I_pod == 0`` — the coarse
+    filter applied at the pod level, where CCR > 1 genuinely holds).
+    Local-SGD-style drift between reconciliations, bounded to I_pod steps
+    per bucket by the round-robin.
 
     The pmean runs over the pod axis PLUS the intra-pod data axes: params
     are data-replicated so the result is identical, but XLA then lowers the
@@ -77,23 +136,23 @@ def pod_reconcile(params, plan: BucketPlan, *, pod_phase: int,
     thin DCN crossing -> all-gather), cutting the cross-pod volume 16x vs a
     naive per-row pod exchange (EXPERIMENTS SSPerf Pair D follow-up).
 
-    Returns (params, bytes_sent_across_pods)."""
+    Returns (params, schedule.bytes_per_worker)."""
     from repro.core import bucketing as bk
-    from repro.core.filter import selected_buckets
 
+    plan = schedule.plan
     treedef = jax.tree_util.tree_structure(params)
     leaves = jax.tree_util.tree_leaves(params)
-    sent = 0
     axes = tuple(pod_axes) + tuple(reconcile_helper_axes)
-    for b in selected_buckets(plan.num_buckets, pod_phase, pod_interval):
-        bucket = plan.buckets[b]
-        for seg in bucket.segments:
+    for b in schedule.selected:
+        for seg in plan.buckets[b].segments:
             li = seg.leaf_idx
             x = bk._slice_segment(leaves[li], seg)
             xm = lax.pmean(x.astype(jnp.float32), axes).astype(x.dtype)
             leaves[li] = bk._update_segment(leaves[li], seg, xm)
-            sent += x.size * x.dtype.itemsize
-    return jax.tree_util.tree_unflatten(treedef, leaves), sent
+    return (
+        jax.tree_util.tree_unflatten(treedef, leaves),
+        schedule.bytes_per_worker,
+    )
 
 
 def build_step_fn(
@@ -106,14 +165,27 @@ def build_step_fn(
     dp_axes: Sequence[str] = (),
     clip_norm: float = 0.0,
     pod_interval: int = 1,
+    dp_world: int = 1,
 ) -> Callable:
     """The un-jitted per-phase step (runs inside shard_map when dp_axes).
+
+    The phase's ``CommSchedule`` is planned here, statically — the traced
+    body only ever sees ``compressor.execute(schedule, ...)``.
 
     With ``pod_interval > 1`` (hierarchical mode) gradient sync runs only
     over the intra-pod axes; the 'pod' axis is reconciled by
     ``pod_reconcile`` and the state carries a leading pod-block axis."""
     pod_axes = tuple(a for a in dp_axes if a == "pod") if pod_interval > 1 else ()
     grad_axes = tuple(a for a in dp_axes if a not in pod_axes)
+
+    comm_schedule = compressor.plan_phase(plan, phase, world=dp_world)
+    pod_schedule = (
+        plan_pod_schedule(
+            plan, pod_phase=phase % pod_interval, pod_interval=pod_interval
+        )
+        if pod_axes
+        else None
+    )
 
     def step_fn(params, opt_state, comp_state, batch, step):
         hier = bool(pod_axes)
@@ -128,9 +200,8 @@ def build_step_fn(
             metrics = jax.tree.map(
                 lambda m: lax.pmean(m, tuple(dp_axes)), metrics
             )
-        synced, comp_state, stats = compressor.sync(
-            grads, comp_state,
-            plan=plan, phase=phase % max(compressor.num_phases(0), 1),
+        synced, comp_state, stats = compressor.execute(
+            comm_schedule, grads, comp_state,
             step=step, axis_names=grad_axes,
         )
         if clip_norm > 0:
@@ -141,9 +212,8 @@ def build_step_fn(
         params = apply_updates(params, updates)
         if hier:
             params, _ = pod_reconcile(
-                params, plan, pod_phase=phase % pod_interval,
-                pod_interval=pod_interval, pod_axes=pod_axes,
-                reconcile_helper_axes=grad_axes,
+                params, pod_schedule,
+                pod_axes=pod_axes, reconcile_helper_axes=grad_axes,
             )
             params, opt_state, comp_state = jax.tree.map(
                 lambda a: a[None], (params, opt_state, comp_state)
@@ -153,6 +223,8 @@ def build_step_fn(
         metrics["total_loss"] = loss
         return params, opt_state, comp_state, metrics
 
+    step_fn.comm_schedule = comm_schedule
+    step_fn.pod_schedule = pod_schedule
     return step_fn
 
 
@@ -178,29 +250,39 @@ def build_train_step(
     per-pod axis (P('pod')) so pods may drift between reconciliations.
     """
     hier = pod_interval > 1 and "pod" in dp_axes
+    # the compressor's collectives run over the gradient-sync axes only:
+    # in hierarchical mode the 'pod' axis is reconciled separately, so the
+    # schedule must be planned for the intra-pod world
+    sync_axes = tuple(a for a in dp_axes if a != "pod") if hier else tuple(dp_axes)
+    dp_world = 1
+    if mesh is not None:
+        for a in sync_axes:
+            dp_world *= mesh.shape[a]
     step_fn = build_step_fn(
         model, optimizer, compressor, plan,
         phase=phase, dp_axes=dp_axes if mesh is not None else (),
         clip_norm=clip_norm, pod_interval=pod_interval if hier else 1,
+        dp_world=dp_world,
     )
     if mesh is None:
-        return jax.jit(step_fn, donate_argnums=(0, 1, 2) if donate else ())
+        jitted = jax.jit(step_fn, donate_argnums=(0, 1, 2) if donate else ())
+        jitted.comm_schedule = step_fn.comm_schedule
+        return jitted
 
     state_spec = P("pod") if hier else P()
     batch_spec = P(tuple(dp_axes))
-    mapped = jax.shard_map(
+    mapped = shard_map_compat(
         step_fn,
-        mesh=mesh,
-        in_specs=(
+        mesh,
+        (
             state_spec,                           # params
             state_spec,                           # opt_state
             state_spec,                           # comp_state (residuals)
             batch_spec,                           # batch (sharded on dim 0)
             P(),                                  # step
         ),
-        out_specs=(state_spec, state_spec, state_spec, P()),
-        axis_names=set(dp_axes),
-        check_vma=False,
+        (state_spec, state_spec, state_spec, P()),
+        dp_axes,
     )
     kw = {}
     if param_shardings is not None:
@@ -215,7 +297,9 @@ def build_train_step(
             like(param_shardings["batch"]),
             NamedSharding(mesh, P()),
         )
-    return jax.jit(mapped, donate_argnums=(0, 1, 2) if donate else (), **kw)
+    jitted = jax.jit(mapped, donate_argnums=(0, 1, 2) if donate else (), **kw)
+    jitted.comm_schedule = step_fn.comm_schedule
+    return jitted
 
 
 def make_train_state(model, optimizer, compressor, plan, key):
@@ -230,7 +314,8 @@ def make_train_state(model, optimizer, compressor, plan, key):
 
 class Trainer:
     """Host loop: lazily compiles one executable per COVAP phase, logs
-    metrics, exposes measured step timing for the CCR profiler."""
+    metrics, exposes measured step timing for the CCR profiler and the
+    static per-phase ``CommSchedule``s for byte/overlap accounting."""
 
     def __init__(self, model, optimizer, tc: TrainConfig, *, mesh=None,
                  dp_axes: Sequence[str] = (), param_specs=None):
@@ -257,6 +342,42 @@ class Trainer:
             import math as _m
             return _m.lcm(base, self.tc.pod_interval)
         return base
+
+    @property
+    def dp_world(self) -> int:
+        """World size of the compressor's collectives (excludes the 'pod'
+        axis in hierarchical mode, where pods sync via pod_reconcile)."""
+        axes = self.dp_axes
+        if self.hierarchical:
+            axes = tuple(a for a in axes if a != "pod")
+        w = 1
+        if self.mesh is not None:
+            for a in axes:
+                w *= self.mesh.shape[a]
+        return w
+
+    def schedules(self) -> list[CommSchedule]:
+        """Static comm plan of every phase — available before (and without)
+        compiling a single executable."""
+        n = max(self.compressor.num_phases(self.tc.interval), 1)
+        return [
+            self.compressor.plan_phase(self.plan, p, world=self.dp_world)
+            for p in range(n)
+        ]
+
+    def schedule_report(self) -> dict:
+        scheds = self.schedules()
+        mean = mean_bytes_per_step(scheds)
+        return {
+            "compressor": self.tc.compressor,
+            "num_phases": len(scheds),
+            "bytes_per_worker_per_phase": [s.bytes_per_worker for s in scheds],
+            "mean_bytes_per_step": mean,
+            "dense_bytes": scheds[0].dense_bytes if scheds else 0,
+            "volume_ratio": (
+                scheds[0].dense_bytes / max(mean, 1) if scheds else 1.0
+            ),
+        }
 
     def _phase_fn(self, phase: int) -> Callable:
         if phase not in self._steps:
@@ -304,8 +425,11 @@ class Trainer:
                 m["wall_s"] = time.perf_counter() - t0
                 self.history.append(m)
                 if log:
+                    # only total_loss/grad_norm are guaranteed — model
+                    # metrics dicts need not include a 'loss' key
+                    shown = m.get("loss", m["total_loss"])
                     log(
-                        f"step {state['step']:>5d}  loss {m['loss']:.4f}  "
+                        f"step {state['step']:>5d}  loss {shown:.4f}  "
                         f"gnorm {m['grad_norm']:.3f}  t {m['wall_s']:.1f}s"
                     )
         return state

@@ -1,0 +1,95 @@
+"""``hypothesis`` shim: real library when installed, otherwise a tiny
+deterministic fallback sampler so the property tests still *run* (rather
+than fail collection) on a clean environment.
+
+Usage in test modules::
+
+    from _hypothesis_compat import given, settings, st
+
+The fallback implements just the strategy surface this repo uses —
+``integers``, ``floats``, ``lists``, ``tuples``, ``one_of``,
+``sampled_from`` — and a ``@given`` that draws ``max_examples`` samples
+from a seeded ``random.Random`` (seeded per test name, so failures are
+reproducible).  It does no shrinking and no coverage-guided search; it is
+a sampler, not a property-testing engine.  Install ``hypothesis`` (the
+``dev`` extra in pyproject.toml) for the real thing.
+"""
+from __future__ import annotations
+
+import random
+
+try:  # pragma: no cover - exercised implicitly by either branch
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic fallback
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+        @staticmethod
+        def one_of(*strategies):
+            return _Strategy(
+                lambda rng: strategies[rng.randrange(len(strategies))].draw(rng)
+            )
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.draw(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(
+                lambda rng: tuple(s.draw(rng) for s in strategies)
+            )
+
+    st = _St()
+
+    def settings(max_examples: int = 20, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            # no functools.wraps: copying fn's signature would make pytest
+            # resolve the drawn parameters as fixtures
+            def wrapper(*args, **kwargs):
+                # @settings is applied outside @given, so read the budget
+                # off the wrapper at call time
+                max_examples = getattr(wrapper, "_max_examples", 20)
+                rng = random.Random(fn.__name__)  # reproducible per test
+                for _ in range(max_examples):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco

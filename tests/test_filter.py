@@ -1,6 +1,6 @@
 """The coarse-grained filter schedule (paper SS III.A)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.filter import (
     compression_ratio,

@@ -47,14 +47,15 @@ def test_covap_bf16_wire_volume_ratio():
 def test_hierarchical_trainer_subprocess():
     code = """
 import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
 from repro.configs import get_reduced
 from repro.models import build_model
 from repro.optim import adamw
 from repro.train.trainer import TrainConfig, Trainer
 from repro.data import DataConfig, make_loader
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+mesh = Mesh(np.array(jax.devices()[:8]).reshape(2, 2, 2),
+            ("pod", "data", "model"))
 cfg = get_reduced("gpt2-paper").with_(vocab_size=128)
 model = build_model(cfg)
 tc = TrainConfig(compressor="covap", interval=2, pod_interval=4,

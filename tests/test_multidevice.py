@@ -25,11 +25,11 @@ def run_sub(code: str, timeout=560):
 
 PRELUDE = """
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 from repro.core import build_plan, get_compressor
+from repro.train.trainer import shard_map_compat
 
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = Mesh(np.array(jax.devices()[:8]), ("data",))
 params = {"w": jnp.zeros((64, 16)), "b": jnp.zeros((16,))}
 plan = build_plan(params, bucket_bytes=512, max_buckets=8, interval=4)
 key = jax.random.PRNGKey(0)
@@ -47,23 +47,14 @@ for name in ("none", "covap", "fp16", "randomk"):
     comp = get_compressor(name, **({"interval": 4} if name == "covap" else {}))
     state = comp.init_state(params, plan)
 
-    def sync_worker(g, s):
-        out, s2, _ = comp.sync(g, s, plan=plan, phase=0, step=0,
-                               axis_names=("data",))
-        return out
-
-    f = jax.jit(jax.shard_map(sync_worker, mesh=mesh,
-        in_specs=(P("data"), P()), out_specs=P(),
-        axis_names={"data"}, check_vma=False))
     # shard_map splits leading axis 8 -> per-worker (1, ...) ... need squeeze
-    def sync_worker2(g, s):
+    def sync_worker(g, s):
         g = {k: v[0] for k, v in g.items()}
         out, s2, _ = comp.sync(g, s, plan=plan, phase=0, step=0,
                                axis_names=("data",))
         return out
-    f = jax.jit(jax.shard_map(sync_worker2, mesh=mesh,
-        in_specs=(P("data"), P()), out_specs=P(),
-        axis_names={"data"}, check_vma=False))
+    f = jax.jit(shard_map_compat(sync_worker, mesh,
+        (P("data"), P()), P(), ("data",)))
     got = f(gw, state)
     mean = {k: v.mean(axis=0) for k, v in gw.items()}
     # compare only where the scheme communicated (out != 0)
@@ -89,9 +80,8 @@ for name in ("topk", "efsignsgd", "oktopk", "fp8wire"):
         out, s2, _ = comp.sync(g, s, plan=plan, phase=0, step=0,
                                axis_names=("data",))
         return out
-    f = jax.jit(jax.shard_map(sync_worker, mesh=mesh,
-        in_specs=(P("data"), P()), out_specs=P(),
-        axis_names={"data"}, check_vma=False))
+    f = jax.jit(shard_map_compat(sync_worker, mesh,
+        (P("data"), P()), P(), ("data",)))
     got = f(gw, state)
     for k in got:
         assert bool(jnp.all(jnp.isfinite(got[k]))), name
@@ -103,13 +93,13 @@ for name in ("topk", "efsignsgd", "oktopk", "fp8wire"):
 def test_trainer_covap_multiworker_loss_decreases():
     out = run_sub("""
 import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
 from repro.configs import get_reduced
 from repro.models import build_model
 from repro.optim import adamw
 from repro.train.trainer import TrainConfig, Trainer
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = Mesh(np.array(jax.devices()[:8]).reshape(4, 2), ("data", "model"))
 cfg = get_reduced("gpt2-paper")
 model = build_model(cfg)
 tc = TrainConfig(compressor="covap", interval=2, bucket_bytes=1 << 14,

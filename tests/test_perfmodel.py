@@ -1,6 +1,6 @@
 """The paper's performance model (eqs 1-6) + CCR estimation properties."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import perfmodel as pm
 from repro.core.ccr import (

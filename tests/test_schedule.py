@@ -1,0 +1,286 @@
+"""Plan/execute split: CommSchedule invariants, stage composition, the
+legacy-COVAP bit-for-bit equivalence, and the repro.api facade."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build_plan, get_compressor
+from repro.core import bucketing as bk
+from repro.core.ccr import (
+    HardwareSpec,
+    analytic_ccr,
+    compressed_ccr,
+    select_interval,
+)
+from repro.core.comm import pmean
+from repro.core.error_feedback import EFSchedule, compensate
+from repro.core.filter import selected_buckets
+from repro.core.perfmodel import simulate_schedule
+from repro.core.schedule import plan_all_phases
+from repro.core.stages import (
+    CoarseFilter,
+    ErrorFeedback,
+    FP8Block,
+    SyncPipeline,
+    WireCast,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = {
+        "emb": jnp.zeros((128, 16)),
+        "w1": jnp.zeros((4, 16, 32)),
+        "b1": jnp.zeros((4, 32)),
+    }
+    plan = build_plan(params, bucket_bytes=2048, max_buckets=16, interval=4)
+    key = jax.random.PRNGKey(0)
+    grads = {
+        k: jax.random.normal(jax.random.fold_in(key, i), v.shape)
+        for i, (k, v) in enumerate(params.items())
+    }
+    residual = {
+        k: jax.random.normal(jax.random.fold_in(key, 100 + i), v.shape)
+        for i, (k, v) in enumerate(params.items())
+    }
+    return params, plan, grads, residual
+
+
+# ---- legacy COVAP reference (the pre-split implementation, verbatim) --------
+
+def legacy_covap_sync(grads, state, *, plan, phase, step, interval,
+                      schedule: EFSchedule, wire_dtype=None, axis_names=()):
+    ef_on = state != ()
+    if ef_on:
+        coeff = schedule.coefficient(step)
+        t = compensate(grads, state, coeff)
+    else:
+        t = grads
+    treedef = jax.tree_util.tree_structure(t)
+    leaves = jax.tree_util.tree_leaves(t)
+    out_leaves = [jnp.zeros(l.shape, l.dtype) for l in leaves]
+    resid_leaves = list(leaves) if ef_on else None
+    for b in selected_buckets(plan.num_buckets, phase, interval):
+        bucket = plan.buckets[b]
+        for seg in bucket.segments:
+            li = seg.leaf_idx
+            x = bk._slice_segment(leaves[li], seg)
+            if wire_dtype is not None and x.dtype != wire_dtype:
+                xw = x.astype(wire_dtype)
+                xm = pmean(xw, axis_names).astype(x.dtype)
+                if ef_on:
+                    resid_leaves[li] = bk._update_segment(
+                        resid_leaves[li], seg, x - xw.astype(x.dtype)
+                    )
+            else:
+                xm = pmean(x, axis_names)
+                if ef_on:
+                    resid_leaves[li] = bk._update_segment(
+                        resid_leaves[li], seg, jnp.zeros_like(x)
+                    )
+            out_leaves[li] = bk._update_segment(out_leaves[li], seg, xm)
+    out = jax.tree_util.tree_unflatten(treedef, out_leaves)
+    new_state = (
+        jax.tree_util.tree_unflatten(treedef, resid_leaves) if ef_on else state
+    )
+    return out, new_state
+
+
+@pytest.mark.parametrize("wire", ["", "bfloat16"])
+def test_coarse_filter_ef_pipeline_reproduces_legacy_covap(setup, wire):
+    """CoarseFilter ∘ ErrorFeedback ∘ WireCast == the legacy monolithic
+    COVAP, bit for bit, across every phase of the cycle."""
+    params, plan, grads, residual = setup
+    comp = get_compressor("covap", interval=4, wire_dtype=wire)
+    state = residual
+    for step in range(8):
+        phase = step % 4
+        out, new_state, _ = comp.sync(
+            grads, state, plan=plan, phase=phase, step=step, axis_names=()
+        )
+        ref_out, ref_state = legacy_covap_sync(
+            grads, state, plan=plan, phase=phase, step=step, interval=4,
+            schedule=comp.schedule,
+            wire_dtype=jnp.dtype(wire) if wire else None,
+        )
+        for k in grads:
+            np.testing.assert_array_equal(
+                np.asarray(out[k]), np.asarray(ref_out[k])
+            )
+            np.testing.assert_array_equal(
+                np.asarray(new_state[k]), np.asarray(ref_state[k])
+            )
+        state = new_state
+
+
+def test_covap_is_a_stage_composition(setup):
+    params, plan, grads, _ = setup
+    comp = get_compressor("covap", interval=4)
+    kinds = [type(s) for s in comp.stages]
+    assert kinds == [CoarseFilter, ErrorFeedback, WireCast]
+    assert comp.filter.interval == 4
+    assert comp.num_phases(4) == 4
+
+
+def test_hybrid_pipeline_one_liner(setup):
+    """Beyond-paper hybrid: coarse filter + fp8 wire + EF, one line."""
+    params, plan, grads, _ = setup
+    comp = SyncPipeline.of(CoarseFilter(4), ErrorFeedback(), FP8Block())
+    state = comp.init_state(params, plan)
+    scheds = plan_all_phases(comp, plan)
+    assert len(scheds) == 4
+    # filter (4x on average) composes with fp8 (~4x): cycle mean well under
+    # a quarter of dense
+    mean_bytes = sum(s.bytes_per_worker for s in scheds) / 4
+    assert mean_bytes < scheds[0].dense_bytes / 8
+    out, state2, stats = comp.execute(
+        scheds[0], grads, state, step=0, axis_names=()
+    )
+    assert stats.bytes_per_worker == scheds[0].bytes_per_worker
+    for k in grads:
+        assert bool(jnp.all(jnp.isfinite(out[k])))
+
+
+def test_schedule_summary_and_wire_bytes(setup):
+    params, plan, grads, _ = setup
+    comp = get_compressor("covap", interval=4)
+    sched = comp.plan_phase(plan, 0, world=8)
+    s = sched.summary()
+    assert s["bytes_per_worker"] == sched.bytes_per_worker
+    assert s["selected"] == list(
+        selected_buckets(plan.num_buckets, 0, 4)
+    )
+    # ring all-reduce wire factor 2(W-1)/W
+    assert sched.wire_bytes(8) == pytest.approx(
+        2 * 7 / 8 * sched.bytes_per_worker
+    )
+    assert sched.wire_bytes(1) == 0.0
+
+
+def test_phase_cycle_covers_every_bucket_once(setup):
+    params, plan, grads, _ = setup
+    comp = get_compressor("covap", interval=4)
+    seen = []
+    for s in plan_all_phases(comp, plan):
+        seen.extend(s.selected)
+    assert sorted(seen) == list(range(plan.num_buckets))
+
+
+def test_pod_schedule_follows_filter_rule(setup):
+    from repro.train.trainer import plan_pod_schedule
+
+    params, plan, grads, _ = setup
+    sched = plan_pod_schedule(plan, pod_phase=1, pod_interval=4)
+    assert sched.selected == selected_buckets(plan.num_buckets, 1, 4)
+    assert sched.bytes_per_worker == sum(
+        plan.buckets[b].numel * 4 for b in sched.selected
+    )
+
+
+def test_simulate_schedule_hides_compressed_comm(setup):
+    """With the coarse filter the planned comm fits under the backward
+    pass; the dense plan of 'none' leaves communication exposed."""
+    params, plan, grads, _ = setup
+    hw = HardwareSpec.cloud_v100_30gbps()
+    t_before, t_comp = 0.05, 0.1
+    covap = get_compressor("covap", interval=8).plan_phase(plan, 1, world=64)
+    dense = get_compressor("none").plan_phase(plan, 0, world=64)
+    # scale the link so dense comm is ~2x the backward pass
+    bw = dense.wire_bytes(64) / (2 * t_comp)
+    r_dense = simulate_schedule(
+        t_before, t_comp, dense, world=64, link_bw=bw
+    )
+    r_covap = simulate_schedule(
+        t_before, t_comp, covap, world=64, link_bw=bw
+    )
+    assert r_covap["total"] < r_dense["total"]
+    assert r_covap["exposed_comm"] < r_dense["exposed_comm"]
+    assert r_covap["total"] >= t_before + t_comp - 1e-12
+
+
+def test_compressed_ccr_below_dense(setup):
+    params, plan, grads, _ = setup
+    comp = get_compressor("covap", interval=8)
+    scheds = plan_all_phases(comp, plan, world=64)
+    dense = plan_all_phases(get_compressor("none"), plan, world=64)
+    c_covap = compressed_ccr(scheds, t_comp=1e-4, world=64, link_bw=1e9)
+    c_dense = compressed_ccr(dense, t_comp=1e-4, world=64, link_bw=1e9)
+    assert c_covap < c_dense / 4  # ~8x filter on average
+
+
+# ---- the repro.api facade ---------------------------------------------------
+
+def test_resolve_interval_auto_is_ceil_of_analytic_ccr():
+    import repro.api as api
+
+    from repro.configs import get_reduced
+
+    cfg = get_reduced("gpt2-paper")
+    hw = HardwareSpec.cloud_v100_30gbps()
+    choice = api.resolve_interval(
+        "auto", cfg, global_batch=8, seq_len=64, dp_world=8, hw=hw
+    )
+    assert choice.auto and choice.ccr is not None
+    expected = analytic_ccr(
+        step_flops_per_chip=choice.step_flops_per_chip,
+        grad_bytes=choice.grad_bytes,
+        dp_world=8,
+        hw=hw,
+    )
+    assert choice.ccr == pytest.approx(expected)
+    assert choice.interval == select_interval(expected)
+    assert choice.interval == min(64, math.ceil(expected))
+
+    explicit = api.resolve_interval(
+        6, cfg, global_batch=8, seq_len=64, dp_world=8, hw=hw
+    )
+    assert explicit.interval == 6 and not explicit.auto
+
+
+def test_api_fit_auto_interval_end_to_end():
+    """Acceptance: repro.api.fit(..., interval='auto') selects
+    I = ceil(analytic_ccr) end-to-end on a CPU dry-run config."""
+    import repro.api as api
+
+    r = api.fit(
+        "gpt2-paper", reduced=True, interval="auto", steps=3,
+        vocab_size=128, seq_len=16, global_batch=4, dp_workers=8,
+        log_every=1,
+    )
+    assert r.ccr is not None
+    assert r.interval == select_interval(r.ccr)
+    assert r.trainer.compressor.interval == r.interval
+    assert len(r.history) >= 1 and r.final_loss is not None
+    assert len(r.schedules) == r.trainer.compressor.num_phases(r.interval)
+    # the static plan is what the trainer reports
+    rep = r.trainer.schedule_report()
+    assert rep["bytes_per_worker_per_phase"] == [
+        s.bytes_per_worker for s in r.schedules
+    ]
+
+
+def test_api_plan_report_and_tune():
+    import repro.api as api
+
+    rep = api.plan_report(
+        "gpt2-paper", reduced=True, interval="auto", dp_workers=8
+    )
+    assert rep["interval_auto"]
+    assert rep["residual_ccr"] < rep["dense_ccr"]
+    assert len(rep["phases"]) == rep["interval"] or rep["interval"] == 1
+
+    rows = api.tune(
+        "gpt2-paper", reduced=True, dp_workers=16,
+        candidates=(("covap", {}), ("none", {}), ("oktopk", {})),
+    )
+    assert rows and all(
+        set(r) >= {"compressor", "speedup", "volume_ratio"} for r in rows
+    )
+    by_name = {r["compressor"]: r for r in rows}
+    assert by_name["oktopk"]["data_dependency"]
+    assert not by_name["covap"]["data_dependency"]
+    # covap must beat the uncompressed baseline under the timeline model
+    assert by_name["covap"]["speedup"] >= by_name["none"]["speedup"]
