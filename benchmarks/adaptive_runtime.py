@@ -1,0 +1,48 @@
+"""Adaptive runtime convergence: re-plans + probes until the interval
+tracks an injected comm slowdown.
+
+For each slowdown factor the controller starts at the analytically-planned
+interval and receives synthetic probe samples whose measured CCR is
+``base_ccr * slowdown``; the derived columns report how many re-plans and
+probe decisions it takes to land within ±1 of ``ceil(measured CCR)`` —
+the bounded-convergence property the acceptance tests pin down.  Pure
+policy arithmetic (no training, no jit): cheap enough for ``--smoke``.
+"""
+from __future__ import annotations
+
+import math
+import time
+
+from repro.runtime import AutotuneConfig, ReplanController
+
+from .common import row
+
+BASE_CCR = 2.4
+SLOWDOWNS = (0.25, 0.5, 1.0, 2.0, 4.0, 8.0)
+
+
+def run(smoke: bool = False):
+    rows = []
+    for slow in SLOWDOWNS:
+        ccr = BASE_CCR * slow
+        cfg = AutotuneConfig(
+            measure_every=1, warmup_steps=0, window=4,
+            patience=2, cooldown_steps=4, max_replans=8,
+        )
+        ctrl = ReplanController(cfg, interval=math.ceil(BASE_CCR))
+        target = max(1, math.ceil(ccr))
+        decisions = 0
+        t0 = time.perf_counter()
+        for step in range(0, 256, 4):
+            decisions += 1
+            ctrl.observe(step, ccr)
+            if abs(ctrl.interval - target) <= 1:
+                break
+        dt = (time.perf_counter() - t0) / max(decisions, 1)
+        rows.append(row(
+            f"adaptive/slowdown_{slow:g}x", dt,
+            f"ccr={ccr:.2f};target_I={target};final_I={ctrl.interval};"
+            f"replans={ctrl.replans};decisions={decisions};"
+            f"converged={int(abs(ctrl.interval - target) <= 1)}",
+        ))
+    return rows

@@ -15,33 +15,36 @@ from repro.kernels import ref
 from .common import row, timeit
 
 N = 4_000_000  # one 16 MB fp32 bucket
+SMOKE_N = 262_144  # 1 MB bucket: same kernels, CI-sized (--smoke)
 HW = HardwareSpec.v5e()
 
 
-def run():
+def run(smoke: bool = False):
+    n = SMOKE_N if smoke else N
     key = jax.random.PRNGKey(0)
-    g = jax.random.normal(key, (N,), jnp.float32)
-    r = jax.random.normal(jax.random.fold_in(key, 1), (N,), jnp.float32)
+    g = jax.random.normal(key, (n,), jnp.float32)
+    r = jax.random.normal(jax.random.fold_in(key, 1), (n,), jnp.float32)
     rows = []
 
+    side = int(n ** 0.5)  # n is a perfect square for both sizes
     cases = {
         "ef_update": (
             jax.jit(lambda g, r: ref.ef_update_ref(g, r, 0.5, selected=True)),
-            (g, r), 3 * N * 4,  # read g,r write send (r'=0 folded)
+            (g, r), 3 * n * 4,  # read g,r write send (r'=0 folded)
         ),
         "quantize_fp8": (
-            jax.jit(lambda x: ref.quantize_fp8_ref(x)), (g,), N * 5,
+            jax.jit(lambda x: ref.quantize_fp8_ref(x)), (g,), n * 5,
         ),
         "sign_compress": (
-            jax.jit(lambda x: ref.sign_compress_ref(x)), (g,), N * 5,
+            jax.jit(lambda x: ref.sign_compress_ref(x)), (g,), n * 5,
         ),
         "threshold_filter": (
-            jax.jit(lambda x: ref.threshold_filter_ref(x, 1.5)), (g,), N * 8,
+            jax.jit(lambda x: ref.threshold_filter_ref(x, 1.5)), (g,), n * 8,
         ),
         "lowrank_matmul": (
             jax.jit(lambda a, b: ref.matmul_ref(a, b)),
-            (g.reshape(2000, 2000), r.reshape(2000, 2000)[:, :128]),
-            (2000 * 2000 + 2000 * 128 + 2000 * 128) * 4,
+            (g.reshape(side, side), r.reshape(side, side)[:, :128]),
+            (side * side + side * 128 + side * 128) * 4,
         ),
     }
     for name, (fn, args, bytes_moved) in cases.items():

@@ -13,7 +13,10 @@ import sys
 import time
 import traceback
 
+import inspect
+
 from . import (
+    adaptive_runtime,
     fig5_ratio_sweep,
     fig11_scaling,
     kernel_bench,
@@ -34,11 +37,14 @@ MODULES = {
     "fig5": fig5_ratio_sweep,
     "fig11": fig11_scaling,
     "kernels": kernel_bench,
+    "adaptive": adaptive_runtime,
 }
 
-# analytic / plan-level modules only: sub-second each, no training loops,
-# no heavy jit — suitable as a CI smoke gate
-SMOKE_MODULES = ("table1", "table3", "table5", "fig5", "fig11")
+# fast modules only: no training loops, no heavy jit — the CI smoke gate.
+# "kernels" runs here in its reduced --smoke size so scripts/ci.sh bench
+# exercises the Pallas kernel reference path on every run.
+SMOKE_MODULES = ("table1", "table3", "table5", "fig5", "fig11", "kernels",
+                 "adaptive")
 
 
 def main() -> None:
@@ -60,7 +66,10 @@ def main() -> None:
         mod = MODULES[name]
         t0 = time.perf_counter()
         try:
-            rows = mod.run()
+            kw = {}
+            if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
+                kw["smoke"] = True
+            rows = mod.run(**kw)
             emit(rows)
             print(f"# {name}: {len(rows)} rows in "
                   f"{time.perf_counter()-t0:.1f}s", file=sys.stderr)

@@ -32,3 +32,23 @@ state = trainer.init_state(jax.random.PRNGKey(0))
 data = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8)
 state = trainer.run(state, iter(make_loader(data)), steps=40)
 print(f"final loss: {trainer.history[-1]['loss']:.4f}")
+
+# --- adaptive mode: the interval tracks the *measured* CCR online --------
+# The analytic profiler picks the initial I; the runtime then probes the
+# compute-only / schedule-only sub-programs, and a hysteresis controller
+# re-plans the interval when the measured CCR drifts (EF residuals are
+# carried across each switch).  On a single process the honest measured
+# CCR is ~0, so expect it to settle at I=1 here.
+import repro.api as api
+from repro.runtime import AutotuneConfig
+
+result = api.fit(
+    "gpt2-paper", reduced=True, vocab_size=256, interval="adaptive",
+    steps=30, seq_len=64, global_batch=8,
+    autotune=AutotuneConfig(measure_every=8, warmup_steps=4,
+                            cooldown_steps=8),
+)
+print(f"adaptive: initial I={result.interval} "
+      f"-> final I={result.final_interval}, "
+      f"measured CCR={result.autotune['measured_ccr']:.3f}, "
+      f"{result.autotune['replans']} re-plan(s)")

@@ -64,13 +64,17 @@ def resolve_interval(
     """The paper's adaptive compression ratio, as a library call: with
     ``interval="auto"`` pick ``I = ceil(analytic_ccr)``.  The default
     hardware model is the paper's environment (V100 + 30 Gbps Ethernet) so
-    CPU-local runs reproduce the paper's interval choices."""
+    CPU-local runs reproduce the paper's interval choices.
+
+    ``interval="adaptive"`` resolves the same way — the analytic pick is
+    the *initial* interval, which the online runtime then re-plans from
+    measured CCR (``repro.runtime``)."""
     hw = hw or HardwareSpec.cloud_v100_30gbps()
     n_active = count_params(cfg, active_only=True)
     tokens = global_batch * seq_len
     flops = 6.0 * n_active * tokens / max(dp_world, 1)
     grad_bytes = count_params(cfg) * 4
-    if interval != "auto":
+    if interval not in ("auto", "adaptive"):
         return IntervalChoice(
             int(interval), None, False, dp_world, grad_bytes, flops
         )
@@ -149,6 +153,13 @@ class FitResult:
     interval: int
     ccr: float | None
     schedules: list[CommSchedule]
+    autotune: dict | None = None   # AdaptiveRuntime summary (adaptive mode)
+
+    @property
+    def final_interval(self) -> int:
+        """The interval after any online re-planning (== ``interval`` when
+        the run was static)."""
+        return self.trainer.tc.interval
 
     @property
     def final_loss(self) -> float | None:
@@ -181,9 +192,16 @@ def fit(
     log=None,
     log_every: int = 10,
     batches=None,
+    autotune=None,
 ) -> FitResult:
     """Train ``arch`` with a GC scheme; ``interval="auto"`` applies the
     paper's ``I = ceil(CCR)`` from the analytic profiler end-to-end.
+
+    ``interval="adaptive"`` starts from the analytic pick and arms the
+    adaptive runtime (``repro.runtime``): measured CCR drives online
+    re-planning of the interval, with EF residuals carried across each
+    switch.  ``autotune`` passes an ``AutotuneConfig`` (or True) to tune
+    the policy; it may also be given with a numeric ``interval``.
 
     ``dp_workers`` is the modelled DP world size for CCR selection on
     single-process runs; with a real ``mesh`` the mesh's DP extent wins.
@@ -219,7 +237,10 @@ def fit(
             global_batch=global_batch,
         )
         batches = make_loader(dc)
-    state = tr.run(state, iter(batches), steps=steps, log=log)
+    if interval == "adaptive" and autotune is None:
+        autotune = True
+    state = tr.run(state, iter(batches), steps=steps, log=log,
+                   autotune=autotune)
     return FitResult(
         trainer=tr,
         state=state,
@@ -227,6 +248,7 @@ def fit(
         interval=choice.interval,
         ccr=choice.ccr,
         schedules=tr.schedules(),
+        autotune=tr.runtime.summary() if tr.runtime is not None else None,
     )
 
 
@@ -302,17 +324,33 @@ def tune(
     bucket_bytes: int = 1 << 14,
     max_buckets: int = 32,
     hw: HardwareSpec | None = None,
+    measured: bool = False,
+    measure_steps: int = 2,
 ) -> list[dict]:
     """Rank GC schemes for a workload by the schedule-driven overlap
     timeline (eq (6) with each scheme's real planned volumes).  Data-
     dependent exchanges (all-to-all based) lose their overlap, as in the
-    paper's Fig. 1(e)."""
+    paper's Fig. 1(e).
+
+    ``measured=True`` additionally runs the online profiler
+    (``repro.runtime.measure_workload_ccr``) on the dense workload — a few
+    real steps, sub-program timing — and reports the measured CCR next to
+    the analytic one in every row (``measured_ccr`` / the interval it
+    implies).  On a single process the honest measured comm time is ~0;
+    the column earns its keep on a real mesh."""
     hw = hw or HardwareSpec.cloud_v100_30gbps()
     cfg, choice, plan, times = _static_setup(
         arch, reduced=reduced, interval=interval, seq_len=seq_len,
         global_batch=global_batch, dp_workers=dp_workers,
         bucket_bytes=bucket_bytes, max_buckets=max_buckets, hw=hw,
     )
+    measured_row = None
+    if measured:
+        measured_row = _measured_workload_ccr(
+            cfg, seq_len=seq_len, global_batch=global_batch,
+            bucket_bytes=bucket_bytes, max_buckets=max_buckets,
+            steps=measure_steps,
+        )
     rows = []
     for name, opts in candidates:
         opts = _compressor_opts(name, opts, choice.interval)
@@ -326,7 +364,7 @@ def tune(
             world=dp_workers, link_bw=hw.ici_bw, data_dependency=data_dep,
         )
         mean_bytes = mean_bytes_per_step(schedules)
-        rows.append({
+        row = {
             "compressor": name,
             "options": opts,
             "speedup": speedup,
@@ -335,9 +373,41 @@ def tune(
             "volume_ratio": schedules[0].dense_bytes / max(mean_bytes, 1),
             "data_dependency": data_dep,
             "num_phases": len(schedules),
-        })
+            "analytic_ccr": times["ccr"],
+        }
+        if measured_row is not None:
+            row["measured_ccr"] = measured_row["ccr"]
+            row["measured_interval"] = measured_row["interval"]
+        rows.append(row)
     rows.sort(key=lambda r: -r["speedup"])
     return rows
+
+
+def _measured_workload_ccr(
+    cfg, *, seq_len: int, global_batch: int, bucket_bytes: int,
+    max_buckets: int, steps: int,
+) -> dict:
+    """A few real dense steps through the measured profiler: what the
+    hardware actually delivers for this workload, as a CCR + interval."""
+    from repro.runtime import measure_workload_ccr
+
+    model = build_model(cfg)
+    tc = TrainConfig(
+        compressor="none", interval=1, bucket_bytes=bucket_bytes,
+        max_buckets=max_buckets, log_every=10 ** 9,
+    )
+    tr = Trainer(model, sgd(1e-3), tc)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    dc = DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=seq_len, global_batch=global_batch
+    )
+    batches = iter(make_loader(dc))
+    batch = next(batches)
+    state = tr.run(state, iter([batch] * max(steps, 1)), steps=max(steps, 1),
+                   log=None)
+    out = measure_workload_ccr(tr, state, batch)
+    out["interval"] = select_interval(out["ccr"])
+    return out
 
 
 __all__ = [

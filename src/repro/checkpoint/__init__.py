@@ -1,4 +1,22 @@
-"""Checkpointing: pytree <-> npz + JSON manifest, sharding-aware on restore."""
-from .store import latest_step, restore, save
+"""Checkpointing: pytree <-> npz + JSON manifest, sharding-aware on restore.
 
-__all__ = ["save", "restore", "latest_step"]
+``save_train_state`` / ``restore_train_state`` round-trip the full trainer
+state including compressor (error-feedback) residuals.
+"""
+from .store import (
+    latest_step,
+    load_extra,
+    restore,
+    restore_train_state,
+    save,
+    save_train_state,
+)
+
+__all__ = [
+    "save",
+    "restore",
+    "latest_step",
+    "load_extra",
+    "save_train_state",
+    "restore_train_state",
+]

@@ -5,6 +5,14 @@ keypath strings, dtypes, shapes).  Arrays are gathered to host on save; on
 restore they are placed back with the caller's shardings (pass
 ``shardings=`` a matching pytree of NamedSharding, or None for host).
 bf16 is round-tripped through a uint16 view (npz has no bfloat16).
+
+``save_train_state`` / ``restore_train_state`` round-trip the trainer's
+full state dict — params, optimizer state **and compressor state** (the
+error-feedback residual is deferred gradient mass; dropping it at a
+restart silently loses the paper's accuracy guarantee).  The manifest's
+``extra`` dict records the interval the residual was accumulated under,
+so a restart into a re-planned interval can route through
+``runtime.transitions`` instead of assuming the cadence matched.
 """
 from __future__ import annotations
 
@@ -27,7 +35,7 @@ def _flatten(tree: Any) -> dict[str, jax.Array]:
     return out
 
 
-def save(directory: str, step: int, tree: Any) -> str:
+def save(directory: str, step: int, tree: Any, extra: dict | None = None) -> str:
     d = os.path.join(directory, f"step_{step:08d}")
     os.makedirs(d, exist_ok=True)
     flat = _flatten(tree)
@@ -47,8 +55,17 @@ def save(directory: str, step: int, tree: Any) -> str:
             }
     np.savez(os.path.join(d, "arrays.npz"), **arrays)
     with open(os.path.join(d, "manifest.json"), "w") as f:
-        json.dump({"step": step, "leaves": manifest}, f)
+        json.dump(
+            {"step": step, "leaves": manifest, "extra": dict(extra or {})}, f
+        )
     return d
+
+
+def load_extra(directory: str, step: int) -> dict:
+    """The ``extra`` metadata dict stored alongside a checkpoint."""
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        return json.load(f).get("extra", {})
 
 
 def latest_step(directory: str) -> int | None:
@@ -91,3 +108,78 @@ def restore(directory: str, step: int, like: Any, shardings: Any = None) -> Any:
         else:
             out.append(jnp.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# full train-state round trip (params + opt + compressor/EF state)
+# ---------------------------------------------------------------------------
+
+_STATE_KEYS = ("params", "opt", "comp")
+
+
+def save_train_state(
+    directory: str, state: dict, *, interval: int | None = None,
+    extra: dict | None = None,
+) -> str:
+    """Persist a trainer state dict (``params``/``opt``/``comp``/``step``).
+
+    The compressor state — the EF residual for COVAP-family schemes — is a
+    first-class part of the checkpoint: it is exactly the gradient mass the
+    filter has deferred, so a restart that drops it replays the paper's
+    no-EF ablation for one interval.  ``interval`` (and anything in
+    ``extra``) lands in the manifest for restart-time validation."""
+    meta = dict(extra or {})
+    if interval is not None:
+        meta["interval"] = int(interval)
+    meta["has_comp_state"] = bool(
+        jax.tree_util.tree_leaves(state.get("comp", ()))
+    )
+    tree = {k: state[k] for k in _STATE_KEYS if k in state}
+    return save(directory, int(state["step"]), tree, extra=meta)
+
+
+def restore_train_state(
+    directory: str, like_state: dict, *, step: int | None = None,
+) -> tuple[dict, dict]:
+    """Restore a trainer state dict saved by :func:`save_train_state`.
+
+    ``like_state`` is a freshly-initialised ``Trainer.init_state(...)``
+    providing structure/shapes (including the compressor state — so EF
+    residuals restore to real values, not zeros).  Returns
+    ``(state, extra)``; ``extra`` carries the saved interval so callers can
+    re-plan (``runtime.transitions``) when the restart config drifted.
+
+    The compressor state is restored **leaf-compatibly**: when the saved
+    and current structures differ (EF on one side of an ``I = 1`` restart
+    only, or a different state family), params/opt still restore and the
+    compressor state keeps its fresh initialisation —
+    ``extra["comp_restored"]`` is False so callers can warn about the
+    dropped residual instead of crashing on a manifest mismatch."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory!r}")
+    like = {k: like_state[k] for k in _STATE_KEYS if k in like_state}
+    extra = load_extra(directory, step)
+    try:
+        tree = restore(directory, step, like)
+        # restore() validates key-by-key, but a saved residual restored
+        # into a like-state with NO comp leaves succeeds trivially — catch
+        # that silent-drop direction via the save-time marker (absent for
+        # checkpoints not written by save_train_state: assume compatible)
+        like_has = bool(jax.tree_util.tree_leaves(like.get("comp", ())))
+        comp_restored = like_has == bool(
+            extra.get("has_comp_state", like_has)
+        )
+    except (KeyError, ValueError):
+        # comp structure drifted (EF on/off, different state family):
+        # params/opt still restore, the compressor state stays fresh
+        tree = restore(
+            directory, step, {k: v for k, v in like.items() if k != "comp"}
+        )
+        comp_restored = False
+    state = dict(like_state)
+    state.update(tree)
+    state["step"] = int(step)
+    extra["comp_restored"] = comp_restored or "comp" not in like_state
+    return state, extra

@@ -166,11 +166,19 @@ def measure_ccr(
     step_full: Callable[[], None],
     step_compute_only: Callable[[], None],
     *,
+    step_comm_only: Callable[[], None] | None = None,
     warmup: int = 2,
     iters: int = 5,
 ) -> dict:
-    """One-off measured profiler: times a full DP step vs. a communication-
-    free step and derives CCR = (T_full - T_comp) / T_comp."""
+    """Measured profiler: times a full DP step vs. a communication-free
+    step and derives CCR = (T_full - T_comp) / T_comp.
+
+    ``step_comm_only`` (the schedule-only sub-program: just the phase's
+    planned collectives on dummy buffers) adds a ``t_comm_direct``
+    cross-check — under full overlap ``t_full - t_comp`` undershoots the
+    wire time, so the reported ``t_comm`` is the larger of the two.
+    Consumed per-phase by ``repro.runtime.monitor.PhaseProbe``.
+    """
 
     def timed(fn):
         for _ in range(warmup):
@@ -183,9 +191,11 @@ def measure_ccr(
     t_full = timed(step_full)
     t_comp = timed(step_compute_only)
     t_comm = max(t_full - t_comp, 0.0)
-    return {
-        "t_full": t_full,
-        "t_comp": t_comp,
-        "t_comm": t_comm,
-        "ccr": t_comm / max(t_comp, 1e-12),
-    }
+    out = {"t_full": t_full, "t_comp": t_comp}
+    if step_comm_only is not None:
+        t_direct = timed(step_comm_only)
+        out["t_comm_direct"] = t_direct
+        t_comm = max(t_comm, t_direct)
+    out["t_comm"] = t_comm
+    out["ccr"] = t_comm / max(t_comp, 1e-12)
+    return out

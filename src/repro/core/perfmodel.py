@@ -202,6 +202,64 @@ def cycle_speedup(
     return P * ls / mean_total
 
 
+# ---- measured-trace calibration (adaptive runtime round-trip) ---------------
+
+def calibrate_from_trace(trace: dict) -> dict:
+    """Recover the perf model's inputs from a Chrome-trace dict produced by
+    ``repro.runtime.trace.TimelineTracer`` — the measured timeline feeding
+    back into the same model that planned it.
+
+    Returns mean measured ``t_comp`` / ``t_comm`` / ``ccr`` over the
+    trace's probe samples, mean full-step wall time, and — when measured
+    comm events carry a ``bytes`` arg — the *effective link bandwidth*
+    (bytes moved / aligned seconds).  ``t_comp`` plugs straight into
+    :func:`simulate_schedule`; ``link_bw`` replaces the HardwareSpec
+    estimate in :func:`schedule_comm_times`.
+    """
+    if isinstance(trace, dict):
+        events = trace.get("traceEvents", [])
+    else:
+        events = list(trace)   # a bare event list is accepted too
+
+    def spans(kind: str):
+        return [
+            e for e in events
+            if e.get("ph") == "X" and kind in e.get("cat", "").split(",")
+        ]
+
+    def mean_dur(evs):
+        return sum(e["dur"] for e in evs) / len(evs) / 1e6 if evs else None
+
+    measured = [e for e in spans("measured")]
+    comp = [e for e in measured if "compute" in e["cat"].split(",")]
+    comm = [e for e in measured if "comm" in e["cat"].split(",")]
+    coll = [e for e in measured if "collective" in e["cat"].split(",")]
+    steps = [e for e in measured if "step" in e["cat"].split(",")]
+
+    t_comp = mean_dur(comp)
+    t_comm = mean_dur(comm)
+    out = {
+        "t_comp": t_comp,
+        "t_comm": t_comm,
+        "ccr": (
+            t_comm / max(t_comp, 1e-12)
+            if t_comp is not None and t_comm is not None
+            else None
+        ),
+        "mean_step_s": mean_dur(steps),
+        "num_samples": len(comm),
+    }
+    with_bytes = [
+        e for e in comm + coll
+        if e.get("args", {}).get("bytes") and e["dur"] > 0
+    ]
+    if with_bytes:
+        total_bytes = sum(e["args"]["bytes"] for e in with_bytes)
+        total_s = sum(e["dur"] for e in with_bytes) / 1e6
+        out["link_bw"] = total_bytes / max(total_s, 1e-12)
+    return out
+
+
 @dataclasses.dataclass(frozen=True)
 class SchemeProfile:
     """What the timeline model needs to know about a GC scheme."""

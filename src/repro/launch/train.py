@@ -56,8 +56,18 @@ def main():
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest checkpoint in --ckpt-dir "
+                         "(params, optimizer AND error-feedback state)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="arm the adaptive runtime: re-plan the interval "
+                         "online from measured CCR")
     ap.add_argument("--history-out", default="")
     args = ap.parse_args()
+    if args.interval == "adaptive":
+        # mirror repro.api.fit: interval="adaptive" = analytic initial
+        # pick + the online runtime armed
+        args.adaptive = True
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     model = build_model(cfg)
@@ -82,6 +92,23 @@ def main():
           f"volume ratio {sr['volume_ratio']:.2f}x) — static plan, no tracing")
 
     state = tr.init_state(jax.random.PRNGKey(0))
+    if args.resume and args.ckpt_dir and checkpoint.latest_step(args.ckpt_dir) is not None:
+        state, extra = checkpoint.restore_train_state(args.ckpt_dir, state)
+        print(f"[ckpt] resumed step {state['step']} "
+              f"(EF state: {extra.get('has_comp_state')}, "
+              f"saved interval: {extra.get('interval')})")
+        if not extra.get("comp_restored", True):
+            print("[ckpt] WARNING: saved compressor state is structurally "
+                  "incompatible with this config (EF on/off changed); "
+                  "residual re-initialised")
+        elif extra.get("interval") not in (None, interval):
+            # the residual was accumulated under a different cadence:
+            # cross the boundary through the runtime's transition logic
+            state, rep = tr.replan(interval, state, step=state["step"],
+                                   old_interval=extra["interval"])
+            print(f"[ckpt] interval {extra['interval']} -> {interval}: "
+                  f"residual {rep.policy} "
+                  f"(norm {rep.norm_before:.3e} -> {rep.norm_after:.3e})")
     n_params = sum(int(x.size) for x in jax.tree.leaves(state["params"]))
     print(f"[model] {cfg.name}: {n_params/1e6:.1f}M params")
 
@@ -89,17 +116,36 @@ def main():
                     global_batch=args.global_batch)
     loader = iter(make_loader(dc))
 
+    autotune = None
+    if args.adaptive:
+        # one runtime for the whole run: chunked (checkpoint-every) calls
+        # must not reset the controller's patience/cooldown or the trace
+        from repro.runtime import AdaptiveRuntime
+
+        autotune = AdaptiveRuntime(tr)
     t0 = time.perf_counter()
-    state = tr.run(state, loader, steps=args.steps)
+    done = 0
+    while done < args.steps:
+        chunk = args.steps - done
+        if args.ckpt_dir and args.ckpt_every > 0:
+            chunk = min(chunk, args.ckpt_every)
+        state = tr.run(state, loader, steps=chunk, autotune=autotune)
+        done += chunk
+        if args.ckpt_dir and (args.ckpt_every > 0 or done >= args.steps):
+            path = checkpoint.save_train_state(
+                args.ckpt_dir, state, interval=tr.tc.interval,
+            )
+            print(f"[ckpt] saved {path} (params + opt + EF residuals)")
     wall = time.perf_counter() - t0
     tokens = args.steps * args.global_batch * args.seq_len
     last = tr.history[-1]
     print(f"[done] {wall:.1f}s, {tokens/wall:.0f} tok/s, "
           f"final loss {last.get('loss', last['total_loss']):.4f}")
-
-    if args.ckpt_dir:
-        path = checkpoint.save(args.ckpt_dir, state["step"], state["params"])
-        print(f"[ckpt] saved {path}")
+    if args.adaptive and tr.runtime is not None:
+        s = tr.runtime.summary()
+        print(f"[autotune] measured CCR "
+              f"{(s['measured_ccr'] or 0.0):.3f}, interval {s['interval']}, "
+              f"{s['replans']} re-plan(s)")
     if args.history_out:
         os.makedirs(os.path.dirname(args.history_out) or ".", exist_ok=True)
         with open(args.history_out, "w") as f:

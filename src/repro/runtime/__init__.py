@@ -1,0 +1,47 @@
+"""Adaptive runtime: the layer between planning and execution (DESIGN.md §10).
+
+Closes the loop the paper's "adaptive compression" claim needs:
+
+    monitor  (measured CCR, ring buffers + sub-program probes)
+      -> controller  (hysteresis re-planning: I = ceil(measured CCR))
+        -> transitions  (EF residuals carried safely across plan switches)
+          -> trace  (planned-vs-measured Chrome-trace timelines)
+
+Entry points: ``Trainer.run(..., autotune=AutotuneConfig())`` and
+``repro.api.fit(..., interval="adaptive")``.
+"""
+from .controller import (
+    AdaptiveRuntime,
+    AutotuneConfig,
+    ReplanController,
+    ReplanDecision,
+    as_autotune_config,
+)
+from .monitor import (
+    CCRMonitor,
+    PhaseProbe,
+    PhaseSample,
+    build_schedule_only_fn,
+    measure_workload_ccr,
+    synthetic_probe,
+)
+from .trace import TimelineTracer
+from .transitions import TransitionReport, carry_comp_state, residual_norm
+
+__all__ = [
+    "AdaptiveRuntime",
+    "AutotuneConfig",
+    "CCRMonitor",
+    "PhaseProbe",
+    "PhaseSample",
+    "ReplanController",
+    "ReplanDecision",
+    "TimelineTracer",
+    "TransitionReport",
+    "as_autotune_config",
+    "build_schedule_only_fn",
+    "carry_comp_state",
+    "measure_workload_ccr",
+    "residual_norm",
+    "synthetic_probe",
+]

@@ -1,0 +1,289 @@
+"""Re-planning controller: measured CCR in, fresh plans out.
+
+The decision rule is the paper's ``I = ceil(CCR)`` applied to the
+*measured* CCR from :class:`~repro.runtime.monitor.CCRMonitor`, wrapped in
+a hysteresis band so transient stragglers don't thrash the executable
+cache:
+
+* the current interval ``I`` is *consistent* with any measured CCR in
+  ``(I - 1 - h, I + h]`` (``h`` = ``hysteresis``) — ``ceil`` would pick
+  ``I`` for the un-widened band, and ``h`` widens it on both sides;
+* a re-plan needs ``patience`` consecutive out-of-band decisions, at
+  least ``cooldown_steps`` since the previous re-plan, and fewer than
+  ``max_replans`` switches so far;
+* the new interval is ``select_interval(measured_ccr)`` — one hop puts
+  the interval within ±1 of ``ceil(measured CCR)``, so convergence is
+  bounded by construction, not by luck.
+
+:class:`AdaptiveRuntime` glues monitor → controller → transitions → trace
+around a live :class:`~repro.train.trainer.Trainer`; the trainer calls
+``after_step`` once per step and everything else is internal.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from repro.core.ccr import select_interval
+
+from .monitor import CCRMonitor, PhaseProbe, PhaseSample
+from .trace import TimelineTracer
+
+
+@dataclasses.dataclass(frozen=True)
+class AutotuneConfig:
+    """Knobs of the adaptive runtime (``Trainer.run(autotune=...)``)."""
+
+    measure_every: int = 16      # steps between probe measurements
+    warmup_steps: int = 4        # steps before the first probe (compile noise)
+    window: int = 8              # probe samples pooled per decision
+    hysteresis: float = 0.25     # CCR deadband beyond the ceil boundaries
+    patience: int = 2            # consecutive drifting decisions to re-plan
+    cooldown_steps: int = 32     # min steps between re-plans
+    max_replans: int = 8
+    max_interval: int = 64
+    transition_policy: str = "carry"   # "carry" | "rescale" | "flush"
+    probe: Callable[..., PhaseSample] | None = None  # override (tests/bench)
+    probe_warmup: int = 1
+    probe_iters: int = 2
+    trace_path: str | None = None      # Chrome-trace JSON dump on finish
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplanDecision:
+    replan: bool
+    interval: int                # target interval (== current when not replan)
+    measured_ccr: float | None
+    reason: str
+
+
+class ReplanController:
+    """Hysteresis policy over the monitor's running measured CCR."""
+
+    def __init__(self, config: AutotuneConfig, *, interval: int):
+        self.config = config
+        self.interval = int(interval)
+        self.pending = 0
+        self.replans = 0
+        self.last_replan_step = -(10 ** 9)
+        self.decisions: list[ReplanDecision] = []
+
+    # ---- the band ---------------------------------------------------------
+    def consistent(self, ccr: float) -> bool:
+        """Is the current interval still the right pick for this CCR?"""
+        h = self.config.hysteresis
+        lo = self.interval - 1 - h
+        hi = self.interval + h
+        return lo < ccr <= hi
+
+    # ---- one decision -----------------------------------------------------
+    def observe(self, step: int, measured_ccr: float | None) -> ReplanDecision:
+        c = self.config
+
+        def out(replan, interval, reason):
+            d = ReplanDecision(replan, interval, measured_ccr, reason)
+            self.decisions.append(d)
+            if replan:
+                self.pending = 0
+                self.replans += 1
+                self.last_replan_step = int(step)
+                self.interval = int(interval)
+            return d
+
+        if measured_ccr is None:
+            return out(False, self.interval, "no-measurement")
+        if self.consistent(measured_ccr):
+            self.pending = 0
+            return out(False, self.interval, "in-band")
+        target = select_interval(measured_ccr, c.max_interval)
+        if target == self.interval:
+            # out of the widened band but ceil still agrees (h < drift < 1)
+            self.pending = 0
+            return out(False, self.interval, "ceil-agrees")
+        self.pending += 1
+        if self.pending < c.patience:
+            return out(False, self.interval, f"pending {self.pending}/{c.patience}")
+        if step - self.last_replan_step < c.cooldown_steps:
+            return out(False, self.interval, "cooldown")
+        if self.replans >= c.max_replans:
+            return out(False, self.interval, "max-replans")
+        return out(True, target, f"ccr {measured_ccr:.2f} -> I {target}")
+
+
+class AdaptiveRuntime:
+    """monitor → controller → transitions → trace, around one Trainer.
+
+    The trainer owns the loop; this object owns everything adaptive.  One
+    call per step::
+
+        state = runtime.after_step(state, batch, wall_s=dt)
+
+    may mutate the trainer (new compressor / plan / executables) and
+    returns the (possibly transitioned) train state.
+    """
+
+    def __init__(self, trainer, config: AutotuneConfig | None = None):
+        self.trainer = trainer
+        self.config = config or AutotuneConfig()
+        self.monitor = CCRMonitor(window=self.config.window)
+        self.controller = ReplanController(
+            self.config, interval=trainer.tc.interval
+        )
+        self.tracer = TimelineTracer()
+        self._default_probe = (
+            None
+            if self.config.probe is not None
+            else PhaseProbe(
+                trainer,
+                warmup=self.config.probe_warmup,
+                iters=self.config.probe_iters,
+            )
+        )
+        self.transitions: list = []
+        self._step_count = 0
+        self._probe_count = 0
+        self._planned_key = None
+
+    # ---- probing ----------------------------------------------------------
+    def _probe(self, state, batch, phase: int) -> PhaseSample:
+        if self.config.probe is not None:
+            return self.config.probe(state, batch, phase)
+        return self._default_probe(state, batch, phase)
+
+    def _due(self, i: int) -> bool:
+        c = self.config
+        if i < c.warmup_steps:
+            return False
+        return (i - c.warmup_steps) % max(c.measure_every, 1) == 0
+
+    def due_next(self) -> bool:
+        """Will the NEXT ``after_step`` call probe?  The trainer blocks on
+        device completion (for a meaningful wall time) only when it will —
+        an always-on block would serialise host/device pipelining on every
+        step to feed a diagnostic-only metric."""
+        return self._due(self._step_count)
+
+    # ---- the per-step hook -------------------------------------------------
+    def after_step(self, state, batch, *, wall_s: float | None, log=None):
+        tr = self.trainer
+        step = int(state["step"]) - 1       # the step that just ran
+        phase = step % tr.num_phases
+        if wall_s is not None:
+            self.monitor.record_step(step, phase, wall_s)
+            self.tracer.record_step(step, phase, wall_s)
+        i = self._step_count
+        self._step_count += 1
+        if not self._due(i):
+            return state
+
+        # probe phases round-robin rather than whatever phase the step
+        # landed on: with num_phases | measure_every the step phase is
+        # constant, and always sampling one phase (possibly a skip phase
+        # with zero planned collectives) would bias the pooled CCR
+        probe_phase = self._probe_count % max(tr.num_phases, 1)
+        self._probe_count += 1
+        sample = self._probe(state, batch, probe_phase)
+        self.monitor.record_sample(sample)
+        # the probe's comm term is the DENSE schedule's (see PhaseProbe),
+        # so the calibration bytes are the dense ring-amplified wire bytes
+        from repro.core.ccr import allreduce_bytes_on_wire
+        from repro.core.comm import dense_bytes
+
+        wire = allreduce_bytes_on_wire(dense_bytes(tr.plan), tr.dp_world)
+        self.tracer.record_sample(sample, bytes_on_wire=int(round(wire)))
+        decision = self.controller.observe(step, self.monitor.measured_ccr())
+        if not decision.replan:
+            return state
+
+        old_interval = tr.tc.interval
+        state, report = tr.replan(
+            decision.interval, state,
+            policy=self.config.transition_policy, step=step,
+        )
+        self.transitions.append(report)
+        # old-plan measurements must not drive new-plan decisions: drop
+        # the sample window (and the compiled sub-programs) at the switch
+        self.monitor.clear_samples()
+        self._probe_count = 0
+        if self._default_probe is not None:
+            self._default_probe.invalidate()
+        self.tracer.record_replan(
+            step, old_interval, decision.interval, decision.reason
+        )
+        if log:
+            log(
+                f"[autotune] step {step}: measured CCR "
+                f"{decision.measured_ccr:.2f} -> re-plan I={decision.interval}"
+                f" (residual norm {report.norm_before:.3e} -> "
+                f"{report.norm_after:.3e}, {report.policy})"
+            )
+        return state
+
+    # ---- wrap-up -----------------------------------------------------------
+    def _record_planned(self) -> None:
+        """Emit the planner's promised timeline for the final plan, priced
+        with the *measured* calibration (measured t_comp; effective link
+        bandwidth = planned wire bytes / measured comm seconds) so the
+        planned and measured rows of the trace are directly comparable."""
+        mt = self.monitor.measured_times()
+        if mt is None:
+            return
+        tr = self.trainer
+        key = (tr.tc.interval, tr.num_phases)
+        if self._planned_key == key:
+            return     # chunked runs call finish() repeatedly: record once
+        self._planned_key = key
+        scheds = tr.schedules()
+        mean_wire = sum(s.wire_bytes(tr.dp_world) for s in scheds) / max(
+            len(scheds), 1
+        )
+        if mt["t_comm"] > 1e-9 and mean_wire > 0:
+            link_bw = mean_wire / mt["t_comm"]
+        else:
+            from repro.core.ccr import HardwareSpec
+
+            link_bw = HardwareSpec.v5e().ici_bw
+        at = 0.0
+        for s in scheds:
+            self.tracer.record_planned_phase(
+                s, t_before=mt["t_comp"] * 0.5, t_comp=mt["t_comp"],
+                link_bw=link_bw, world=tr.dp_world, at_s=at,
+            )
+            at += mt["t_comp"] * 1.5 + s.wire_bytes(tr.dp_world) / link_bw
+
+    def finish(self) -> dict:
+        self._record_planned()
+        if self.config.trace_path:
+            self.tracer.save(self.config.trace_path)
+        return self.summary()
+
+    def summary(self) -> dict:
+        return {
+            "interval": self.controller.interval,
+            "replans": self.controller.replans,
+            "measured_ccr": self.monitor.measured_ccr(),
+            "monitor": self.monitor.summary(),
+            "transitions": [t.summary() for t in self.transitions],
+            "trace_events": len(self.tracer.events),
+        }
+
+
+def as_autotune_config(autotune) -> AutotuneConfig | None:
+    """Normalise ``Trainer.run(autotune=...)``: None/False off, True ->
+    defaults, an :class:`AutotuneConfig` passes through."""
+    if autotune is None or autotune is False:
+        return None
+    if autotune is True:
+        return AutotuneConfig()
+    if isinstance(autotune, AutotuneConfig):
+        return autotune
+    raise TypeError(f"autotune must be None/bool/AutotuneConfig, got {autotune!r}")
+
+
+__all__ = [
+    "AdaptiveRuntime",
+    "AutotuneConfig",
+    "ReplanController",
+    "ReplanDecision",
+    "as_autotune_config",
+]

@@ -1,0 +1,214 @@
+"""Timeline tracing: planned-vs-measured step timelines as Chrome trace JSON.
+
+Open the dump in ``chrome://tracing`` / Perfetto: one process row per view —
+
+* ``planned``  — per-bucket compute/comm spans from the static
+  ``CommSchedule`` + the analytic step times (what the planner *promised*);
+* ``measured`` — full-step wall times from the monitor's ring buffer and
+  the probe's comm/compute decompositions (what the hardware *delivered*);
+* ``control``  — instant events marking re-plans.
+
+The measured events carry enough in ``args`` (bytes, phase) that the trace
+round-trips into the perf model: ``core.perfmodel.calibrate_from_trace``
+recovers mean ``t_comp`` / ``t_comm`` / effective link bandwidth from a
+trace dict, which plug straight into ``simulate_schedule`` — measurements
+calibrate the same model that produced the plan.
+
+Multi-worker timestamps go through ``core.ccr.align_comm_times`` before
+becoming spans, so rendezvous wait is excluded exactly as in the paper's
+distributed profiler (§III.B, Fig. 3).
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Sequence
+
+import numpy as np
+
+from repro.core.ccr import align_comm_times
+
+# Chrome trace pids: one logical process per view
+PID_PLANNED = 1
+PID_MEASURED = 2
+PID_CONTROL = 3
+
+_US = 1e6
+
+
+class TimelineTracer:
+    """Collects trace events; ``to_chrome_trace()`` / ``save()`` export.
+
+    ``max_events`` bounds host memory on long runs (paper-scale training
+    is O(10^5) steps): the buffer is a ring, oldest spans fall off first —
+    the same windowing discipline as the monitor's ring buffers."""
+
+    def __init__(self, max_events: int = 100_000):
+        import collections
+
+        self.events: "collections.deque[dict]" = collections.deque(
+            maxlen=int(max_events)
+        )
+        self._cursor_s = 0.0       # synthetic wall clock of measured steps
+
+    # ---- low-level --------------------------------------------------------
+    def add_event(
+        self, name: str, *, pid: int, tid: int, ts_s: float, dur_s: float,
+        cat: str = "", args: dict | None = None, ph: str = "X",
+    ) -> None:
+        ev = {
+            "name": name, "ph": ph, "pid": pid, "tid": tid,
+            "ts": ts_s * _US, "cat": cat,
+        }
+        if ph == "X":
+            ev["dur"] = dur_s * _US
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+
+    # ---- measured view ----------------------------------------------------
+    def record_step(self, step: int, phase: int, wall_s: float) -> None:
+        """One full training step (ring-buffer signal)."""
+        self.add_event(
+            f"step {step}", pid=PID_MEASURED, tid=0,
+            ts_s=self._cursor_s, dur_s=wall_s, cat="measured,step",
+            args={"step": step, "phase": phase},
+        )
+        self._cursor_s += wall_s
+
+    def record_sample(self, sample, *, bytes_on_wire: int | None = None) -> None:
+        """One probe decomposition: back-to-back compute + comm spans.
+        ``bytes_on_wire`` (the phase schedule's planned wire bytes) makes
+        the comm span calibratable into an effective link bandwidth."""
+        t0 = self._cursor_s
+        self.add_event(
+            "compute", pid=PID_MEASURED, tid=1, ts_s=t0,
+            dur_s=sample.t_comp, cat="measured,compute",
+            args={"step": sample.step, "phase": sample.phase},
+        )
+        comm_args: dict[str, Any] = {"step": sample.step, "phase": sample.phase}
+        if bytes_on_wire is not None:
+            comm_args["bytes"] = int(bytes_on_wire)
+        self.add_event(
+            "comm", pid=PID_MEASURED, tid=1, ts_s=t0 + sample.t_comp,
+            dur_s=sample.t_comm, cat="measured,comm", args=comm_args,
+        )
+
+    def record_aligned_collectives(
+        self,
+        step: int,
+        names: Sequence[str],
+        starts: np.ndarray,
+        ends: np.ndarray,
+        *,
+        bytes_per_op: Sequence[int] | None = None,
+    ) -> None:
+        """Per-collective spans from (workers, ops) timestamp arrays, with
+        the paper's alignment applied: span start is the **last** worker's
+        arrival, duration the aligned transfer time."""
+        starts = np.asarray(starts, np.float64)
+        ends = np.asarray(ends, np.float64)
+        durs = align_comm_times(starts, ends)
+        t_start = starts.max(axis=0)
+        for i, name in enumerate(names):
+            args = {"step": step, "op": i}
+            if bytes_per_op is not None:
+                args["bytes"] = int(bytes_per_op[i])
+            self.add_event(
+                name, pid=PID_MEASURED, tid=2,
+                ts_s=float(t_start[i]), dur_s=float(max(durs[i], 0.0)),
+                cat="measured,collective", args=args,
+            )
+
+    # ---- planned view -----------------------------------------------------
+    def record_planned_phase(
+        self, schedule, *, t_before: float, t_comp: float,
+        link_bw: float, world: int, at_s: float = 0.0,
+    ) -> None:
+        """The planner's promised timeline for one phase: the same
+        simulation the perf model runs (``simulate_schedule``), emitted as
+        spans instead of a scalar."""
+        from repro.core.perfmodel import schedule_comm_times
+
+        plan = schedule.plan
+        numels = plan.bucket_numels()
+        total = sum(numels) or 1
+        comp = [t_comp * n / total for n in numels]
+        comm = schedule_comm_times(schedule, world=world, link_bw=link_bw)
+
+        self.add_event(
+            "before", pid=PID_PLANNED, tid=0, ts_s=at_s, dur_s=t_before,
+            cat="planned,compute", args={"phase": schedule.phase},
+        )
+        t = at_s + t_before
+        comm_free = t
+        for b, (c_comp, c_comm) in enumerate(zip(comp, comm)):
+            self.add_event(
+                f"bwd bucket {b}", pid=PID_PLANNED, tid=0, ts_s=t,
+                dur_s=c_comp, cat="planned,compute",
+                args={"phase": schedule.phase, "bucket": b},
+            )
+            t += c_comp
+            if c_comm > 0:
+                start = max(t, comm_free)
+                # bytes = ring-amplified wire bytes, the same convention
+                # the measured comm spans use, so planned and measured
+                # rows divide to the same effective bandwidth.  `selected`
+                # holds bucket ids only at bucket granularity; leaf-
+                # granularity schedules spread their comm evenly over the
+                # buckets (matching schedule_comm_times), so the bytes
+                # spread the same way
+                if schedule.granularity == "bucket":
+                    span_bytes = sum(
+                        call.wire_bytes(world)
+                        for s, call in zip(schedule.selected, schedule.calls)
+                        if s == b
+                    )
+                else:
+                    span_bytes = schedule.wire_bytes(world) / max(
+                        plan.num_buckets, 1
+                    )
+                self.add_event(
+                    f"comm bucket {b}", pid=PID_PLANNED, tid=1, ts_s=start,
+                    dur_s=c_comm, cat="planned,comm",
+                    args={
+                        "phase": schedule.phase, "bucket": b,
+                        "bytes": int(round(span_bytes)),
+                    },
+                )
+                comm_free = start + c_comm
+
+    # ---- control view -----------------------------------------------------
+    def record_replan(
+        self, step: int, old_interval: int, new_interval: int, reason: str
+    ) -> None:
+        self.add_event(
+            f"replan I {old_interval}->{new_interval}",
+            pid=PID_CONTROL, tid=0, ts_s=self._cursor_s, dur_s=0.0,
+            cat="control,replan", ph="i",
+            args={"step": step, "old": old_interval, "new": new_interval,
+                  "reason": reason},
+        )
+
+    # ---- export -----------------------------------------------------------
+    def to_chrome_trace(self) -> dict:
+        meta = [
+            {"name": "process_name", "ph": "M", "pid": pid,
+             "args": {"name": label}}
+            for pid, label in (
+                (PID_PLANNED, "planned"),
+                (PID_MEASURED, "measured"),
+                (PID_CONTROL, "control"),
+            )
+        ]
+        return {
+            "traceEvents": meta + list(self.events),
+            "displayTimeUnit": "ms",
+        }
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump(self.to_chrome_trace(), f)
+        return path
+
+
+__all__ = ["TimelineTracer", "PID_PLANNED", "PID_MEASURED", "PID_CONTROL"]

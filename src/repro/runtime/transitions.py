@@ -1,0 +1,138 @@
+"""Safe re-plan boundaries: carrying compressor state across a plan switch.
+
+A re-plan changes the interval ``I`` (and with it the bucket plan, since
+COVAP's tensor sharding slices oversized buckets into ``min(., I)`` pieces).
+The error-feedback residual, however, is **parameter-structured**, not
+bucket-structured (``core.error_feedback``): it is exactly the gradient
+mass not yet communicated.  The paper's accuracy argument (§III.D) only
+needs that mass to be conserved — so the default transition policy is
+``"carry"``: the residual pytree moves to the new plan untouched, and its
+global norm is preserved bit-for-bit (the acceptance invariant).
+
+Policies:
+
+* ``"carry"``  — keep residuals verbatim (default; norm preserved);
+* ``"rescale"`` — when the cadence *shortens* (``new_I < old_I``) scale
+  residuals by ``new_I / old_I``: the compensation scheduler now drains
+  the buffer over fewer steps, and the damping avoids a one-time
+  over-compensation spike right after the switch;
+* ``"flush"``  — zero the residuals (the conservative reset; the dropped
+  norm is reported so callers can log the accuracy cost).
+
+Structure changes (EF turning on/off at ``I = 1``, leaf-granularity
+state such as PowerSGD's ``{q, residual}``) fall back to re-initialising
+from the new compressor, with the dropped norm reported.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TransitionReport:
+    """What happened to compressor state at one re-plan boundary."""
+
+    step: int
+    old_interval: int
+    new_interval: int
+    policy: str                 # "carry" | "rescale" | "flush" | "reinit"
+    norm_before: float
+    norm_after: float
+
+    @property
+    def norm_dropped(self) -> float:
+        return max(0.0, self.norm_before - self.norm_after)
+
+    def summary(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def residual_norm(comp_state: Any) -> float:
+    """Global L2 norm of every floating leaf in a compressor state pytree.
+
+    Handles the three state shapes in the repo: ``()`` (no EF), a
+    parameter-structured residual pytree (COVAP & friends), and PowerSGD's
+    ``{"q": [...], "residual": [...]}`` dict with ``None`` holes — only the
+    ``residual`` half counts (``q`` is a sketch, not deferred gradient)."""
+    if isinstance(comp_state, dict) and "residual" in comp_state:
+        comp_state = comp_state["residual"]
+    total = 0.0
+    for leaf in jax.tree_util.tree_leaves(comp_state):
+        if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.floating):
+            total += float(jnp.sum(jnp.square(leaf.astype(jnp.float32))))
+    return math.sqrt(total)
+
+
+def _same_structure(a: Any, b: Any) -> bool:
+    return (
+        jax.tree_util.tree_structure(a) == jax.tree_util.tree_structure(b)
+        and all(
+            getattr(x, "shape", None) == getattr(y, "shape", None)
+            for x, y in zip(
+                jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+            )
+        )
+    )
+
+
+def carry_comp_state(
+    comp_state: Any,
+    *,
+    new_compressor,
+    new_plan,
+    params_like: Any,
+    step: int = 0,
+    old_interval: int = 1,
+    new_interval: int = 1,
+    policy: str = "carry",
+) -> tuple[Any, TransitionReport]:
+    """Move compressor state across a re-plan boundary.
+
+    Returns ``(new_state, report)``.  ``params_like`` is the *current*
+    parameter pytree (hierarchical states keep their leading pod axis, so
+    re-initialised residuals match whatever shape the carried params have).
+    """
+    if policy not in ("carry", "rescale", "flush"):
+        raise ValueError(f"unknown transition policy {policy!r}")
+    norm_before = residual_norm(comp_state)
+    fresh = new_compressor.init_state(params_like, new_plan)
+
+    def report(state, eff_policy):
+        return state, TransitionReport(
+            step=int(step),
+            old_interval=int(old_interval),
+            new_interval=int(new_interval),
+            policy=eff_policy,
+            norm_before=norm_before,
+            norm_after=residual_norm(state),
+        )
+
+    if policy == "flush":
+        return report(fresh, "flush")
+
+    if not _same_structure(comp_state, fresh):
+        # EF turned on/off, or the state family changed (e.g. leaf-
+        # granularity PowerSGD): no meaningful carry exists — reinit, and
+        # surface the dropped norm in the report.
+        return report(fresh, "reinit")
+
+    if policy == "rescale" and new_interval < old_interval:
+        factor = float(new_interval) / float(max(old_interval, 1))
+        scaled = jax.tree.map(
+            lambda r: (r.astype(jnp.float32) * factor).astype(r.dtype)
+            if hasattr(r, "dtype") and jnp.issubdtype(r.dtype, jnp.floating)
+            else r,
+            comp_state,
+        )
+        return report(scaled, "rescale")
+
+    # "rescale" with a non-shrinking cadence is a plain carry (factor 1)
+    return report(comp_state, "carry")
+
+
+__all__ = ["TransitionReport", "carry_comp_state", "residual_norm"]

@@ -325,15 +325,17 @@ class Trainer:
         self.mesh = mesh
         self.dp_axes = tuple(dp_axes)
         self.compressor = make_compressor(tc)
-        shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        self._shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
         self.plan = build_plan(
-            shapes,
+            self._shapes,
             bucket_bytes=tc.bucket_bytes,
             max_buckets=tc.max_buckets,
             interval=tc.interval,
         )
         self._steps: dict[int, Callable] = {}
         self.history: list[dict] = []
+        self.runtime = None          # AdaptiveRuntime of the last run(), if any
+        self.transitions: list = []  # TransitionReports from re-plans
 
     @property
     def num_phases(self) -> int:
@@ -405,20 +407,92 @@ class Trainer:
                 )
         return state
 
-    def run(self, state, batches, steps: int | None = None, log=print):
+    def replan(self, interval: int, state=None, *, policy: str = "carry",
+               step: int = 0, old_interval: int | None = None):
+        """Adopt a new COVAP interval at a safe boundary (between steps):
+        new compressor + bucket plan + (lazily recompiled) phase
+        executables, with the EF residual carried across the switch by
+        ``runtime.transitions`` so its norm survives the transition.
+
+        ``old_interval`` is the cadence the residual in ``state`` was
+        accumulated under; it defaults to this trainer's current interval
+        and must be given explicitly when the state came from elsewhere
+        (e.g. a checkpoint saved under a different config).
+
+        Returns ``(state, TransitionReport)`` — ``state`` unchanged (may be
+        None) when the caller manages compressor state itself."""
+        from repro.runtime.transitions import carry_comp_state
+
+        if old_interval is None:
+            old_interval = self.tc.interval
+        self.tc = dataclasses.replace(self.tc, interval=int(interval))
+        self.compressor = make_compressor(self.tc)
+        self.plan = build_plan(
+            self._shapes,
+            bucket_bytes=self.tc.bucket_bytes,
+            max_buckets=self.tc.max_buckets,
+            interval=self.tc.interval,
+        )
+        self._steps = {}   # stale executables: new phases compile lazily
+        report = None
+        if state is not None:
+            comp, report = carry_comp_state(
+                state["comp"],
+                new_compressor=self.compressor,
+                new_plan=self.plan,
+                params_like=state["params"],
+                step=step,
+                old_interval=old_interval,
+                new_interval=self.tc.interval,
+                policy=policy,
+            )
+            state = {**state, "comp": comp}
+            self.transitions.append(report)
+        return state, report
+
+    def run(self, state, batches, steps: int | None = None, log=print,
+            autotune=None):
+        """Host loop.  ``autotune`` (None | True | AutotuneConfig | a live
+        AdaptiveRuntime) arms the adaptive runtime: measured-CCR monitoring
+        + hysteresis re-planning + timeline tracing (DESIGN.md §10).
+        Passing an ``AdaptiveRuntime`` keeps its monitor/controller state
+        across chunked ``run`` calls (checkpoint-every loops) instead of
+        restarting the policy each chunk.  With ``autotune=None`` the loop
+        is the PR-1 static path, bit-for-bit."""
         steps = steps if steps is not None else self.tc.steps
+        rt = None
+        if autotune is not None and autotune is not False:
+            from repro.runtime import AdaptiveRuntime, as_autotune_config
+
+            if isinstance(autotune, AdaptiveRuntime):
+                rt = self.runtime = autotune
+            else:
+                rt = self.runtime = AdaptiveRuntime(
+                    self, as_autotune_config(autotune)
+                )
         it = iter(batches)
         t0 = time.perf_counter()
         for i in range(steps):
             batch = next(it)
             phase = state["step"] % self.num_phases
             fn = self._phase_fn(phase)
+            # block for a true wall time only on probe-due steps — an
+            # every-step block would serialise async dispatch for the
+            # whole run to feed a diagnostic metric
+            timed = rt is not None and rt.due_next()
+            t_step = time.perf_counter() if timed else 0.0
             params, opt, comp, metrics = fn(
                 state["params"], state["opt"], state["comp"], batch,
                 jnp.asarray(state["step"], jnp.int32),
             )
             state = {"params": params, "opt": opt, "comp": comp,
                      "step": state["step"] + 1}
+            if rt is not None:
+                wall = None
+                if timed:
+                    jax.block_until_ready(params)
+                    wall = time.perf_counter() - t_step
+                state = rt.after_step(state, batch, wall_s=wall, log=log)
             if (i + 1) % self.tc.log_every == 0 or i == 0:
                 m = {k: float(v) for k, v in metrics.items()}
                 m["step"] = state["step"]
@@ -432,4 +506,6 @@ class Trainer:
                         f"step {state['step']:>5d}  loss {shown:.4f}  "
                         f"gnorm {m['grad_norm']:.3f}  t {m['wall_s']:.1f}s"
                     )
+        if rt is not None:
+            rt.finish()
         return state

@@ -1,0 +1,474 @@
+"""Adaptive runtime subsystem: monitor -> controller -> transitions -> trace.
+
+Acceptance invariants pinned here:
+
+* with an injected comm slowdown the controller converges the interval to
+  within ±1 of ``ceil(measured CCR)`` in a bounded number of re-plans;
+* EF residual norms are preserved across every carry transition;
+* with autotune off, ``Trainer.run`` outputs are bit-for-bit identical to
+  the static PR-1 loop;
+* checkpoints round-trip the EF residual (it survives restarts);
+* the Chrome-trace export round-trips into ``perfmodel.calibrate_from_trace``.
+"""
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import build_plan, get_compressor
+from repro.core.perfmodel import calibrate_from_trace
+from repro.data import DataConfig, make_loader
+from repro.models import build_model
+from repro.optim import adamw
+from repro.runtime import (
+    AutotuneConfig,
+    CCRMonitor,
+    PhaseProbe,
+    PhaseSample,
+    ReplanController,
+    TimelineTracer,
+    carry_comp_state,
+    residual_norm,
+    synthetic_probe,
+)
+from repro.train.trainer import TrainConfig, Trainer
+from repro import checkpoint
+
+
+def make_trainer(compressor="covap", interval=2, **copts):
+    cfg = get_reduced("gpt2-paper").with_(vocab_size=256)
+    model = build_model(cfg)
+    tc = TrainConfig(
+        compressor=compressor, compressor_options=copts, interval=interval,
+        bucket_bytes=1 << 14, max_buckets=32, log_every=10 ** 9,
+    )
+    return Trainer(model, adamw(3e-3), tc)
+
+
+def loader(n=64):
+    dc = DataConfig(vocab_size=256, seq_len=32, global_batch=8)
+    return iter(make_loader(dc))
+
+
+# ---------------------------------------------------------------------------
+# monitor
+# ---------------------------------------------------------------------------
+
+def test_monitor_ring_buffer_and_running_ccr():
+    mon = CCRMonitor(window=4)
+    for s in range(10):
+        mon.record_step(s, s % 2, 0.1)
+    assert mon.mean_step_time() == pytest.approx(0.1)
+    # window=4: only the last 4 samples count
+    for i, c in enumerate([9.0, 9.0, 2.0, 2.0, 2.0, 2.0]):
+        mon.record_sample(PhaseSample(phase=0, t_comp=1.0, t_comm=c, step=i))
+    assert mon.num_samples == 4
+    assert mon.measured_ccr() == pytest.approx(2.0)
+    assert mon.measured_ccr(phase=1) is None
+    s = mon.summary()
+    assert s["probe_samples"] == 4 and s["measured_ccr"] == pytest.approx(2.0)
+
+
+def test_monitor_per_phase_decomposition():
+    mon = CCRMonitor(window=8)
+    mon.record_sample(PhaseSample(phase=0, t_comp=1.0, t_comm=4.0))
+    mon.record_sample(PhaseSample(phase=1, t_comp=1.0, t_comm=1.0))
+    assert mon.measured_ccr(phase=0) == pytest.approx(4.0)
+    assert mon.measured_ccr(phase=1) == pytest.approx(1.0)
+    assert mon.measured_ccr() == pytest.approx(2.5)
+
+
+# ---------------------------------------------------------------------------
+# controller policy
+# ---------------------------------------------------------------------------
+
+def test_controller_hysteresis_band():
+    cfg = AutotuneConfig(hysteresis=0.25, patience=1, cooldown_steps=0)
+    ctrl = ReplanController(cfg, interval=4)
+    # in (3 - 0.25, 4 + 0.25]: consistent, no replan
+    for ccr in (2.8, 3.0, 4.0, 4.2):
+        assert not ctrl.observe(0, ccr).replan
+    assert ctrl.interval == 4
+
+
+def test_controller_patience_and_cooldown():
+    cfg = AutotuneConfig(hysteresis=0.1, patience=3, cooldown_steps=100)
+    ctrl = ReplanController(cfg, interval=2)
+    assert not ctrl.observe(0, 8.0).replan      # pending 1/3
+    assert not ctrl.observe(4, 8.0).replan      # pending 2/3
+    d = ctrl.observe(8, 8.0)                    # pending 3/3 -> replan
+    assert d.replan and d.interval == 8
+    # cooldown: immediately drifting again must NOT replan
+    for step in (12, 16, 20):
+        assert not ctrl.observe(step, 30.0).replan
+    assert ctrl.observe(8 + 100, 30.0).replan
+
+
+def test_controller_max_replans_bounds_switching():
+    cfg = AutotuneConfig(patience=1, cooldown_steps=0, max_replans=2)
+    ctrl = ReplanController(cfg, interval=1)
+    flip = [10.0, 1.0]
+    n = sum(
+        ctrl.observe(s, flip[s % 2]).replan for s in range(50)
+    )
+    assert n == 2
+
+
+def test_controller_converges_within_one_of_ceil():
+    """Pure-policy convergence: any persistent measured CCR pulls the
+    interval to within ±1 of its ceil in <= 2 re-plans."""
+    for ccr in (0.3, 1.7, 3.2, 5.5, 12.9, 40.0):
+        cfg = AutotuneConfig(patience=2, cooldown_steps=0)
+        ctrl = ReplanController(cfg, interval=4)
+        for step in range(0, 64, 4):
+            ctrl.observe(step, ccr)
+        assert abs(ctrl.interval - max(1, math.ceil(ccr))) <= 1
+        assert ctrl.replans <= 2
+
+
+# ---------------------------------------------------------------------------
+# transitions
+# ---------------------------------------------------------------------------
+
+def _ef_setup(old_i=2, new_i=4):
+    params = {"w": jnp.ones((8, 4)), "b": jnp.ones((4,))}
+    residual = {"w": jnp.full((8, 4), 0.5), "b": jnp.full((4,), -0.25)}
+    new_comp = get_compressor("covap", interval=new_i)
+    new_plan = build_plan(params, bucket_bytes=64, max_buckets=8,
+                          interval=new_i)
+    return params, residual, new_comp, new_plan
+
+
+def test_transition_carry_preserves_norm_bitforbit():
+    params, residual, comp, plan = _ef_setup()
+    before = residual_norm(residual)
+    new_state, rep = carry_comp_state(
+        residual, new_compressor=comp, new_plan=plan, params_like=params,
+        old_interval=2, new_interval=4, policy="carry",
+    )
+    assert rep.policy == "carry"
+    assert rep.norm_before == rep.norm_after == before
+    for k in residual:
+        np.testing.assert_array_equal(np.asarray(new_state[k]),
+                                      np.asarray(residual[k]))
+
+
+def test_transition_flush_zeroes_and_reports_drop():
+    params, residual, comp, plan = _ef_setup()
+    new_state, rep = carry_comp_state(
+        residual, new_compressor=comp, new_plan=plan, params_like=params,
+        old_interval=2, new_interval=4, policy="flush",
+    )
+    assert rep.policy == "flush"
+    assert rep.norm_after == 0.0
+    assert rep.norm_dropped == pytest.approx(rep.norm_before)
+    assert residual_norm(new_state) == 0.0
+
+
+def test_transition_rescale_shrinking_cadence():
+    params, residual, comp, plan = _ef_setup(old_i=8, new_i=2)
+    new_state, rep = carry_comp_state(
+        residual, new_compressor=comp, new_plan=plan, params_like=params,
+        old_interval=8, new_interval=2, policy="rescale",
+    )
+    assert rep.policy == "rescale"
+    assert rep.norm_after == pytest.approx(rep.norm_before * 2 / 8, rel=1e-6)
+    # growing cadence: rescale degrades to carry
+    _, rep2 = carry_comp_state(
+        residual, new_compressor=comp, new_plan=plan, params_like=params,
+        old_interval=2, new_interval=8, policy="rescale",
+    )
+    assert rep2.policy == "carry"
+    assert rep2.norm_after == rep2.norm_before
+
+
+def test_transition_reinit_when_structure_changes():
+    """I -> 1 drops the EF stage (state () instead of a residual pytree):
+    no carry exists, the dropped norm must be surfaced."""
+    params, residual, _, _ = _ef_setup()
+    comp1 = get_compressor("covap", interval=1)
+    plan1 = build_plan(params, bucket_bytes=64, max_buckets=8, interval=1)
+    new_state, rep = carry_comp_state(
+        residual, new_compressor=comp1, new_plan=plan1, params_like=params,
+        old_interval=4, new_interval=1, policy="carry",
+    )
+    assert rep.policy == "reinit"
+    assert new_state == ()
+    assert rep.norm_dropped == pytest.approx(rep.norm_before)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: trainer + injected comm slowdown (the acceptance scenario)
+# ---------------------------------------------------------------------------
+
+def test_injected_slowdown_converges_and_preserves_residual():
+    tr = make_trainer(interval=2)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    injected_ccr = 5.4
+    cfg = AutotuneConfig(
+        measure_every=2, warmup_steps=2, window=2, patience=2,
+        cooldown_steps=4, probe=synthetic_probe(0.01, injected_ccr),
+    )
+    state = tr.run(state, loader(), steps=24, log=None, autotune=cfg)
+    target = math.ceil(injected_ccr)
+    assert abs(tr.tc.interval - target) <= 1
+    assert 1 <= tr.runtime.controller.replans <= cfg.max_replans
+    assert tr.transitions, "a re-plan must have crossed a transition"
+    for rep in tr.transitions:
+        if rep.policy == "carry":
+            assert rep.norm_before == rep.norm_after
+    # training continued sanely after the switch
+    assert state["step"] == 24
+    assert tr.num_phases == tr.tc.interval
+
+
+def test_injected_drift_replans_back_down():
+    """CCR drops mid-run (link recovers): the controller must follow."""
+    tr = make_trainer(interval=6)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    ccr_of_step = lambda step: 6.0 if step < 10 else 1.5
+    cfg = AutotuneConfig(
+        measure_every=2, warmup_steps=0, window=1, patience=2,
+        cooldown_steps=2, probe=synthetic_probe(0.01, ccr_of_step),
+    )
+    state = tr.run(state, loader(), steps=30, log=None, autotune=cfg)
+    assert abs(tr.tc.interval - 2) <= 1
+    assert tr.runtime.controller.replans <= cfg.max_replans
+
+
+def test_autotune_off_is_bitforbit_static():
+    """PR-1 invariant: autotune=None must not perturb a single bit."""
+    def run_once(use_run):
+        tr = make_trainer(interval=2)
+        state = tr.init_state(jax.random.PRNGKey(0))
+        dc = DataConfig(vocab_size=256, seq_len=32, global_batch=8)
+        it = iter(make_loader(dc))
+        if use_run:
+            state = tr.run(state, it, steps=6, log=None, autotune=None)
+        else:
+            for _ in range(6):  # the PR-1 static loop, verbatim
+                batch = next(it)
+                phase = state["step"] % tr.num_phases
+                fn = tr._phase_fn(phase)
+                p, o, c, m = fn(state["params"], state["opt"], state["comp"],
+                                batch, jnp.asarray(state["step"], jnp.int32))
+                state = {"params": p, "opt": o, "comp": c,
+                         "step": state["step"] + 1}
+        return state
+
+    a = run_once(True)
+    b = run_once(False)
+    for la, lb in zip(jax.tree_util.tree_leaves(a["params"]),
+                      jax.tree_util.tree_leaves(b["params"])):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    for la, lb in zip(jax.tree_util.tree_leaves(a["comp"]),
+                      jax.tree_util.tree_leaves(b["comp"])):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_real_phase_probe_produces_finite_sample():
+    tr = make_trainer(interval=2)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    it = loader()
+    batch = next(it)
+    state = tr.run(state, iter([batch] * 2), steps=2, log=None)
+    probe = PhaseProbe(tr, warmup=1, iters=1)
+    sample = probe(state, batch, phase=state["step"] % tr.num_phases)
+    assert sample.t_comp > 0
+    assert sample.t_comm >= 0
+    assert np.isfinite(sample.ccr)
+
+
+# ---------------------------------------------------------------------------
+# trace export + perfmodel calibration round trip
+# ---------------------------------------------------------------------------
+
+def test_trace_chrome_export_and_calibration(tmp_path):
+    tracer = TimelineTracer()
+    for s in range(4):
+        tracer.record_step(s, s % 2, 0.12)
+        tracer.record_sample(
+            PhaseSample(phase=s % 2, t_comp=0.10, t_comm=0.02, step=s),
+            bytes_on_wire=1_000_000,
+        )
+    tracer.record_replan(3, 2, 4, "test")
+    path = str(tmp_path / "trace.json")
+    tracer.save(path)
+
+    with open(path) as f:
+        trace = json.load(f)
+    evs = trace["traceEvents"]
+    assert any(e.get("ph") == "M" for e in evs)          # process names
+    assert any(e.get("ph") == "i" for e in evs)          # replan marker
+    assert all("ts" in e for e in evs if e.get("ph") == "X")
+
+    cal = calibrate_from_trace(trace)
+    assert cal["t_comp"] == pytest.approx(0.10, rel=1e-6)
+    assert cal["t_comm"] == pytest.approx(0.02, rel=1e-6)
+    assert cal["ccr"] == pytest.approx(0.2, rel=1e-6)
+    assert cal["mean_step_s"] == pytest.approx(0.12, rel=1e-6)
+    # effective link bandwidth: 1 MB / 20 ms = 50 MB/s
+    assert cal["link_bw"] == pytest.approx(1_000_000 / 0.02, rel=1e-6)
+
+
+def test_adaptive_run_emits_planned_and_measured_views(tmp_path):
+    path = str(tmp_path / "run_trace.json")
+    tr = make_trainer(interval=2)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    cfg = AutotuneConfig(
+        measure_every=2, warmup_steps=1, window=2, patience=1,
+        cooldown_steps=2, probe=synthetic_probe(0.01, 3.3), trace_path=path,
+    )
+    tr.run(state, loader(), steps=10, log=None, autotune=cfg)
+    with open(path) as f:
+        trace = json.load(f)
+    cats = {c for e in trace["traceEvents"]
+            for c in e.get("cat", "").split(",") if c}
+    assert "measured" in cats and "planned" in cats and "control" in cats
+    cal = calibrate_from_trace(trace)
+    assert cal["ccr"] == pytest.approx(3.3, rel=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing: EF residual survives restarts (satellite)
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrips_ef_residual(tmp_path):
+    tr = make_trainer(interval=2)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    state = tr.run(state, loader(), steps=3, log=None)
+    norm = residual_norm(state["comp"])
+    assert norm > 0, "EF must have accumulated a residual"
+
+    checkpoint.save_train_state(str(tmp_path), state, interval=tr.tc.interval)
+    extra = checkpoint.load_extra(str(tmp_path), state["step"])
+    assert extra["interval"] == 2 and extra["has_comp_state"]
+
+    tr2 = make_trainer(interval=2)
+    like = tr2.init_state(jax.random.PRNGKey(1))
+    restored, extra2 = checkpoint.restore_train_state(str(tmp_path), like)
+    assert restored["step"] == state["step"]
+    assert extra2["interval"] == 2
+    for la, lb in zip(jax.tree_util.tree_leaves(restored["comp"]),
+                      jax.tree_util.tree_leaves(state["comp"])):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    # training resumes from the restored residual without error
+    tr2.run(restored, loader(), steps=2, log=None)
+
+
+def test_checkpoint_restore_into_replanned_interval(tmp_path):
+    """Restart with a different interval: the saved residual crosses the
+    boundary through Trainer.replan, norm preserved by the carry."""
+    tr = make_trainer(interval=2)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    state = tr.run(state, loader(), steps=3, log=None)
+    checkpoint.save_train_state(str(tmp_path), state, interval=2)
+
+    tr2 = make_trainer(interval=2)
+    like = tr2.init_state(jax.random.PRNGKey(1))
+    restored, extra = checkpoint.restore_train_state(str(tmp_path), like)
+    norm = residual_norm(restored["comp"])
+    restored, rep = tr2.replan(4, restored, step=restored["step"])
+    assert tr2.tc.interval == 4 and tr2.num_phases == 4
+    assert rep.policy == "carry"
+    assert rep.norm_before == pytest.approx(norm)
+    assert rep.norm_after == pytest.approx(norm)
+    tr2.run(restored, loader(), steps=2, log=None)
+
+
+def test_checkpoint_restore_across_ef_boundary(tmp_path):
+    """Saved with EF residuals (I=2), restored into a no-EF config (I=1)
+    and vice versa: params/opt restore, the incompatible compressor state
+    falls back to fresh init, and ``comp_restored`` flags the drop."""
+    tr = make_trainer(interval=2)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    state = tr.run(state, loader(), steps=3, log=None)
+    checkpoint.save_train_state(str(tmp_path), state, interval=2)
+
+    tr1 = make_trainer(interval=1)          # COVAP I=1: comp state is ()
+    like = tr1.init_state(jax.random.PRNGKey(1))
+    restored, extra = checkpoint.restore_train_state(str(tmp_path), like)
+    assert extra["comp_restored"] is False
+    assert restored["comp"] == ()
+    for la, lb in zip(jax.tree_util.tree_leaves(restored["params"]),
+                      jax.tree_util.tree_leaves(state["params"])):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+    # reverse: saved without EF state, restored into an EF config
+    d2 = tmp_path / "rev"
+    state1 = tr1.init_state(jax.random.PRNGKey(0))
+    state1 = tr1.run(state1, loader(), steps=2, log=None)
+    checkpoint.save_train_state(str(d2), state1, interval=1)
+    tr2 = make_trainer(interval=2)
+    like2 = tr2.init_state(jax.random.PRNGKey(1))
+    restored2, extra2 = checkpoint.restore_train_state(str(d2), like2)
+    assert extra2["comp_restored"] is False
+    assert residual_norm(restored2["comp"]) == 0.0   # fresh zeros
+    tr2.run(restored2, loader(), steps=2, log=None)  # trains fine
+
+
+def test_chunked_runs_share_adaptive_runtime():
+    """A live AdaptiveRuntime passed to run() keeps controller state
+    across chunks (the checkpoint-every loop), so patience accumulates
+    instead of resetting."""
+    from repro.runtime import AdaptiveRuntime
+
+    tr = make_trainer(interval=2)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    cfg = AutotuneConfig(
+        measure_every=2, warmup_steps=0, window=2, patience=4,
+        cooldown_steps=0, probe=synthetic_probe(0.01, 5.4),
+    )
+    rt = AdaptiveRuntime(tr, cfg)
+    it = loader()
+    # 4 chunks x 2 steps = 1 probe decision per chunk; patience=4 only
+    # trips if pending survives chunk boundaries
+    for _ in range(4):
+        state = tr.run(state, it, steps=2, log=None, autotune=rt)
+    assert tr.runtime is rt
+    assert rt.controller.replans == 1
+    assert tr.tc.interval == 6
+
+
+# ---------------------------------------------------------------------------
+# api surface
+# ---------------------------------------------------------------------------
+
+def test_fit_interval_adaptive_smoke():
+    import repro.api as api
+
+    r = api.fit(
+        "gpt2-paper", reduced=True, interval="adaptive", steps=8, log=None,
+        autotune=AutotuneConfig(
+            measure_every=2, warmup_steps=1, window=2, patience=1,
+            cooldown_steps=2, probe=synthetic_probe(0.01, 2.5),
+        ),
+    )
+    assert r.autotune is not None
+    assert r.autotune["measured_ccr"] == pytest.approx(2.5)
+    assert r.final_interval == 3          # ceil(2.5)
+    assert r.trainer.runtime.controller.replans >= 1
+
+
+def test_fit_static_has_no_runtime():
+    import repro.api as api
+
+    r = api.fit("gpt2-paper", reduced=True, interval=2, steps=2, log=None)
+    assert r.autotune is None
+    assert r.final_interval == r.interval == 2
+
+
+def test_tune_measured_reports_ccr_columns():
+    import repro.api as api
+
+    rows = api.tune(
+        "gpt2-paper", dp_workers=8, measured=True, measure_steps=1,
+        candidates=(("covap", {}), ("none", {})),
+    )
+    assert all("measured_ccr" in r and "analytic_ccr" in r for r in rows)
+    assert all(np.isfinite(r["measured_ccr"]) for r in rows)
+    assert all(r["measured_interval"] >= 1 for r in rows)
