@@ -20,6 +20,7 @@ from . import (
     fig5_ratio_sweep,
     fig11_scaling,
     kernel_bench,
+    overlap_check,
     table1_ccr,
     table2_overhead,
     table3_gc_overlap,
@@ -38,13 +39,16 @@ MODULES = {
     "fig11": fig11_scaling,
     "kernels": kernel_bench,
     "adaptive": adaptive_runtime,
+    "overlap": overlap_check,
 }
 
 # fast modules only: no training loops, no heavy jit — the CI smoke gate.
 # "kernels" runs here in its reduced --smoke size so scripts/ci.sh bench
-# exercises the Pallas kernel reference path on every run.
+# exercises the Pallas kernel reference path on every run; "overlap" is the
+# HLO interleaving gate (compiles ONE fused step on an 8-worker CPU mesh
+# and fails unless collectives are scheduled inside the backward pass).
 SMOKE_MODULES = ("table1", "table3", "table5", "fig5", "fig11", "kernels",
-                 "adaptive")
+                 "adaptive", "overlap")
 
 
 def main() -> None:

@@ -16,7 +16,10 @@ if [[ "$what" == "all" || "$what" == "tests" ]]; then
 fi
 
 if [[ "$what" == "all" || "$what" == "bench" ]]; then
-    echo "== smoke benchmarks =="
+    echo "== smoke benchmarks (incl. HLO overlap-interleaving gate) =="
+    # the smoke set contains the "overlap" module: it compiles one fused
+    # COVAP step on an 8-worker CPU mesh and FAILS the gate unless the
+    # compiled HLO schedules bucket collectives inside the backward pass
     python -m benchmarks.run --smoke > /dev/null
     echo "smoke benchmarks OK"
 fi

@@ -12,11 +12,12 @@ from . import (
     compressors,
     error_feedback,
     filter,
+    overlap,
     perfmodel,
     schedule,
     stages,
 )
-from .bucketing import BucketPlan, build_plan
+from .bucketing import BucketPlan, ReadyOrder, build_plan, build_ready_order
 from .ccr import HardwareSpec, analytic_ccr, analytic_times, select_interval
 from .comm import Compressor, SyncStats
 from .compressors import available, get_compressor
@@ -32,11 +33,14 @@ __all__ = [
     "compressors",
     "error_feedback",
     "filter",
+    "overlap",
     "perfmodel",
     "schedule",
     "stages",
     "BucketPlan",
+    "ReadyOrder",
     "build_plan",
+    "build_ready_order",
     "HardwareSpec",
     "analytic_ccr",
     "analytic_times",

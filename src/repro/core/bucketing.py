@@ -328,6 +328,128 @@ def scatter_bucket(
     return leaves
 
 
+# ---------------------------------------------------------------------------
+# ReadyOrder: reverse-topological bucket readiness (overlap engine)
+# ---------------------------------------------------------------------------
+#
+# The backward pass produces gradients in *reverse* forward order: the output
+# head's VJP runs first, the embedding's last.  A bucket's collective may be
+# issued the moment its LAST gradient is produced — i.e. when the VJP of the
+# shallowest (smallest forward depth) layer it touches has run.  ``ReadyOrder``
+# makes that readiness static metadata of a ``BucketPlan`` so the schedule can
+# state the issue order and the perf model can lay out a faithful timeline.
+#
+# Forward depth is derived from leaf paths: the models in this repo stack
+# per-layer parameters over axis 0 (scan-over-layers), so for leaves under a
+# stacked stage (``blocks`` / ``encoder`` / ``decoder``) row ``r`` sits at
+# depth ``stage_base + r``; everything else occupies one depth slot per stage
+# (embed/projector -> encoder -> enc_norm -> decoder -> blocks -> shared ->
+# final_norm -> head).  Unrecognised trees (toy tests) fall back to one slot
+# per leaf in parameter order, which makes readiness = reverse leaf order.
+
+# (stage id, path markers, stacked-over-rows)
+_STAGE_MARKERS = (
+    (0, ("embed", "projector"), False),
+    (1, ("encoder",), True),
+    (2, ("enc_norm",), False),
+    (3, ("decoder",), True),
+    (4, ("blocks",), True),
+    # weight-shared block (zamba2): applied inside every scan iteration, so
+    # its gradient completes with blocks row 0 — it shares the blocks base.
+    (4, ("shared",), False),
+    (7, ("final_norm",), False),
+    (8, ("head",), False),
+)
+_UNKNOWN_STAGE = 6  # mid-network: between the stacks and final_norm
+
+
+def _leaf_stage(path: str) -> tuple[int, bool]:
+    for sid, markers, stacked in _STAGE_MARKERS:
+        if any(m in path for m in markers):
+            return sid, stacked
+    return _UNKNOWN_STAGE, False
+
+
+@dataclasses.dataclass(frozen=True)
+class ReadyOrder:
+    """Static backward-readiness of a plan's buckets.
+
+    ``bucket_layer[b]`` is the forward depth of the layer whose VJP produces
+    bucket ``b``'s *last* gradient; ``ranks[b]`` is the issue rank (0 =
+    first bucket whose collective can start); ``order`` lists bucket indices
+    in issue order.  ``num_layers`` is the total forward depth span.
+    """
+
+    bucket_layer: tuple[int, ...]
+    ranks: tuple[int, ...]
+    num_layers: int
+
+    @property
+    def order(self) -> tuple[int, ...]:
+        out = sorted(range(len(self.ranks)), key=lambda b: self.ranks[b])
+        return tuple(out)
+
+    def rank_of(self, bucket: int) -> int:
+        return self.ranks[bucket]
+
+
+def leaf_row_depth(plan: BucketPlan) -> list[Any]:
+    """Per-leaf forward depth: an ``int`` for whole-leaf stages or a
+    callable ``row -> depth`` for stacked-over-layers leaves."""
+    stages = [_leaf_stage(p) for p in plan.leaf_paths]
+    known = any(sid != _UNKNOWN_STAGE for sid, _ in stages)
+
+    # depth slots per stage id, in forward order
+    slots: dict[int, int] = {}
+    for li, (sid, stacked) in enumerate(stages):
+        if not known:
+            # toy tree: one slot per leaf, forward = parameter order
+            slots[li] = 1
+            continue
+        rows = _row_count(plan.leaf_shapes[li]) if stacked else 1
+        slots[sid] = max(slots.get(sid, 1), rows)
+    base: dict[int, int] = {}
+    off = 0
+    for sid in sorted(slots):
+        base[sid] = off
+        off += slots[sid]
+
+    depths: list[Any] = []
+    for li, (sid, stacked) in enumerate(stages):
+        key = li if not known else sid
+        if stacked and known:
+            b = base[key]
+            depths.append(lambda r, _b=b: _b + r)
+        else:
+            depths.append(base[key])
+    return depths
+
+
+def build_ready_order(plan: BucketPlan) -> ReadyOrder:
+    """Reverse-topological readiness of every bucket (see module notes).
+
+    A bucket becomes ready when its shallowest segment's gradient lands, so
+    buckets are ranked by descending minimum forward depth; ties (several
+    buckets of one layer) break toward higher bucket index, matching the
+    reverse of the plan's forward packing order.
+    """
+    depths = leaf_row_depth(plan)
+    layer: list[int] = []
+    for bucket in plan.buckets:
+        d = None
+        for seg in bucket.segments:
+            dl = depths[seg.leaf_idx]
+            v = dl(seg.row_lo) if callable(dl) else dl
+            d = v if d is None else min(d, v)
+        layer.append(int(d if d is not None else 0))
+    order = sorted(range(len(layer)), key=lambda b: (-layer[b], -b))
+    ranks = [0] * len(order)
+    for rank, b in enumerate(order):
+        ranks[b] = rank
+    num_layers = max(layer) + 1 if layer else 0
+    return ReadyOrder(tuple(layer), tuple(ranks), num_layers)
+
+
 def zeros_like_leaves(plan: BucketPlan) -> list[jax.Array]:
     return [
         jnp.zeros(s, d) for s, d in zip(plan.leaf_shapes, plan.leaf_dtypes)

@@ -36,10 +36,16 @@ class COVAP(SyncPipeline):
         ef_ascend_steps: int = 200,
         ef_ascend_range: float = 0.1,
         wire_dtype: str = "",
+        use_ef_kernel: bool | None = None,
     ):
         """``wire_dtype='bfloat16'`` additionally halves the wire volume of
         the selected buckets (beyond-paper: composes 2x with the filter's
-        Ix; quantisation error lands in the EF residual)."""
+        Ix; quantisation error lands in the EF residual).
+
+        ``use_ef_kernel`` selects the fused Pallas EF-update kernel on the
+        segmented execute path (``None`` = auto: on for TPU, off for CPU
+        interpret mode whose FMA rounding differs bitwise from the jnp
+        reference — see ``SyncPipeline._use_ef_kernel``)."""
         interval = int(interval)
         schedule = EFSchedule(ef_init, ef_ascend_steps, ef_ascend_range)
         # interval <= 1 (CCR <= 1): no filter, no EF state — but an
@@ -52,6 +58,7 @@ class COVAP(SyncPipeline):
             interval=interval,
             ef_flag=bool(ef),
             wire_dtype=wire_dtype,
+            use_ef_kernel=use_ef_kernel,
         )
         self.interval = interval
         self.use_ef = bool(ef)

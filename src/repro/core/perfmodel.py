@@ -53,7 +53,34 @@ def simulate_overlap(
         "comm_end": comm_free,
         "bubbles": bubbles,
         "exposed_comm": max(0.0, comm_free - t),
+        "comm_total": float(sum(comm_times)),
     }
+
+
+def overlap_fraction(sim: dict) -> float:
+    """Fraction of a timeline's communication hidden under compute:
+    ``1 - exposed/total`` (1.0 when the phase moves no bytes).  Works on
+    any :func:`simulate_overlap` / :func:`simulate_schedule` result."""
+    comm = sim.get("comm_total", 0.0)
+    if comm <= 0.0:
+        return 1.0
+    return max(0.0, 1.0 - sim.get("exposed_comm", 0.0) / comm)
+
+
+def achieved_overlap_fraction(
+    t_comp: float, t_comm: float, t_step: float
+) -> float:
+    """Measured counterpart of :func:`overlap_fraction`: with compute time
+    ``t_comp`` (collective-free sub-program), wire time ``t_comm``
+    (schedule-only sub-program) and the full step's wall time, the hidden
+    communication is ``t_comp + t_comm - t_step`` — clamped to [0, 1] of
+    ``t_comm``.  This is the number the overlap engine is judged by:
+    predicted (:func:`overlap_fraction` on the planned timeline) vs
+    achieved (this, from ``runtime.monitor`` probes)."""
+    if t_comm <= 0.0:
+        return 1.0
+    hidden = t_comp + t_comm - t_step
+    return max(0.0, min(1.0, hidden / t_comm))
 
 
 def t_ovlp(t_before: float, t_comp: float, t_comm: float, n_buckets: int = 8) -> float:
@@ -151,17 +178,29 @@ def simulate_schedule(
     link_bw: float,
     t_compress: float = 0.0,
     data_dependency: bool = False,
+    ready_order: bool = False,
 ) -> dict:
     """Eq (6) with *real* per-bucket volumes from a ``CommSchedule``:
     compute time is spread over buckets proportionally to their numel
     (backward-pass order), communication times come from the planned
     collective bytes.  This is how the trainer's overlap headroom is
-    estimated without compiling a step."""
+    estimated without compiling a step.
+
+    ``ready_order=True`` lays the timeline out in the overlap engine's
+    actual issue order (``bucketing.ReadyOrder``: head buckets first,
+    embedding last) instead of plan order — the faithful model of the
+    fused execution path."""
     plan = schedule.plan
     numels = plan.bucket_numels()
     total = sum(numels) or 1
     comp = [(t_comp + t_compress) * n / total for n in numels]
     comm = schedule_comm_times(schedule, world=world, link_bw=link_bw)
+    if ready_order and schedule.granularity == "bucket":
+        from .bucketing import build_ready_order
+
+        order = build_ready_order(plan).order
+        comp = [comp[b] for b in order]
+        comm = [comm[b] for b in order]
     if data_dependency:
         t = t_before + sum(comp) + sum(comm)
         return {
@@ -170,6 +209,7 @@ def simulate_schedule(
             "comm_end": t,
             "bubbles": 0.0,
             "exposed_comm": sum(comm),
+            "comm_total": float(sum(comm)),
         }
     return simulate_overlap(t_before, comp, comm)
 

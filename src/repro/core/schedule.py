@@ -84,6 +84,11 @@ class CommSchedule:
     dense_bytes: int
     world: int = 1
     plan: BucketPlan | None = None
+    # per-call readiness rank (overlap engine): position of each call in the
+    # backward-pass issue order derived from ``bucketing.ReadyOrder`` — rank
+    # 0 is the first collective whose operand gradient lands.  Empty for
+    # planners that predate the overlap engine (treated as plan order).
+    ready_ranks: tuple[int, ...] = ()
 
     # ---- byte accounting --------------------------------------------------
     @property
@@ -101,6 +106,16 @@ class CommSchedule:
         return sum(c.wire_bytes(w) for c in self.calls)
 
     # ---- structure accessors ---------------------------------------------
+    def issue_order(self) -> tuple[int, ...]:
+        """Indices into ``calls`` sorted by backward readiness — the order
+        the overlap engine issues this phase's collectives.  Falls back to
+        plan order when the planner recorded no ranks."""
+        if len(self.ready_ranks) != len(self.calls):
+            return tuple(range(len(self.calls)))
+        return tuple(
+            sorted(range(len(self.calls)), key=lambda i: self.ready_ranks[i])
+        )
+
     def segments(self, index: int) -> tuple[Segment, ...]:
         """Segments of selected entry ``index`` (bucket granularity only)."""
         if self.plan is None or self.granularity != "bucket":

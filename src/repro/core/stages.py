@@ -36,7 +36,7 @@ import numpy as np
 from jax import lax
 
 from . import bucketing as bk
-from .bucketing import Bucket, BucketPlan
+from .bucketing import Bucket, BucketPlan, build_ready_order
 from .error_feedback import EFSchedule, compensate, init_residual
 from .filter import selected_buckets
 from .schedule import CollectiveCall, CommSchedule
@@ -472,6 +472,16 @@ def _state_present(state: Any) -> bool:
     return state is not None and state != ()
 
 
+def _split_like(slices: Sequence[jax.Array], flat: jax.Array) -> list[jax.Array]:
+    """Split a flat bucket vector back into pieces shaped like ``slices``."""
+    out, off = [], 0
+    for x in slices:
+        n = int(x.size)
+        out.append(lax.dynamic_slice_in_dim(flat, off, n).reshape(x.shape))
+        off += n
+    return out
+
+
 class SyncPipeline(Compressor):
     """filter ∘ error-feedback ∘ wire, with the plan/execute split.
 
@@ -557,6 +567,7 @@ class SyncPipeline(Compressor):
     ) -> CommSchedule:
         n = self.num_phases()
         ph = int(phase) % max(n, 1)
+        ready_ranks: tuple[int, ...] = ()
         if self.granularity == "leaf":
             selected = tuple(range(len(plan.leaf_shapes)))
             calls = tuple(
@@ -572,13 +583,16 @@ class SyncPipeline(Compressor):
             # a wire stage may plan several collectives per bucket
             # (e.g. OkTopKRoute's route + survivor exchange); `selected`
             # repeats the bucket index so it stays aligned with `calls`
-            selected, calls = [], []
+            ready = build_ready_order(plan)
+            selected, calls, ranks = [], [], []
             for b in sel:
                 planned = self.wire.plan_bucket(plan, plan.buckets[b], world)
                 for call in planned if isinstance(planned, tuple) else (planned,):
                     selected.append(b)
                     calls.append(call)
+                    ranks.append(ready.rank_of(b))
             selected, calls = tuple(selected), tuple(calls)
+            ready_ranks = tuple(ranks)
         return CommSchedule(
             compressor=self.name,
             phase=ph,
@@ -589,6 +603,7 @@ class SyncPipeline(Compressor):
             dense_bytes=dense_bytes(plan),
             world=world,
             plan=plan,
+            ready_ranks=ready_ranks,
         )
 
     # ---- execute ----------------------------------------------------------
@@ -614,27 +629,195 @@ class SyncPipeline(Compressor):
             )
         return out, new_state, stats
 
+    # ---- granular per-bucket API (overlap engine entry points) ------------
+    def ef_coefficient(self, step):
+        """The EF compensation coefficient for ``step`` — ``None`` when the
+        pipeline has no EF stage (classic EF without a schedule is exactly
+        coefficient 1, which is bitwise-identical to the plain add)."""
+        if self.ef is None:
+            return None
+        if self.ef.schedule is None:
+            return jnp.float32(1.0)
+        return self.ef.schedule.coefficient(step)
+
+    def _use_ef_kernel(self, g, r, coeff) -> bool:
+        """The fused Pallas EF-update (kernels/ef_covap.ef_update) replaces
+        the 2-3-op jnp formulation on the dense segmented path: one
+        streaming pass computes t = g + c*r and splits it into
+        (send, residual').  Applicability: plain WireCast (no wire cast —
+        the cast path keeps its quantisation-error residual) and f32
+        operands.
+
+        Engagement: on TPU by default; on CPU only with the explicit
+        ``use_ef_kernel=True`` compressor option.  The fused kernel emits a
+        single-rounding FMA for ``g + c*r`` while the jnp formulation
+        rounds the product separately, so interpret mode cannot be
+        bitwise-identical to the legacy path — CPU runs keep the reference
+        formulation unless a test/benchmark opts in (both the post and the
+        fused overlap path route through here, so they always agree with
+        each other either way)."""
+        if not (
+            coeff is not None
+            and r is not None
+            and isinstance(self.wire, WireCast)
+            and self.wire.wire_dtype is None
+            and g.dtype == jnp.float32
+            and r.dtype == jnp.float32
+        ):
+            return False
+        use = self.options.get("use_ef_kernel")
+        if use is None:
+            from ..kernels.common import INTERPRET
+
+            use = not INTERPRET
+        return bool(use)
+
+    def _ef_segment(self, g, r, coeff, *, selected: bool, axis_names):
+        """One segment slice through EF ∘ filter-decision ∘ wire.
+
+        ``g`` is the raw gradient slice, ``r`` the residual slice (or
+        ``None`` when the pipeline runs without EF), ``coeff`` the
+        compensation coefficient from :meth:`ef_coefficient`.  Returns
+        ``(synced, resid)``: the globally-synced value (``None`` for an
+        unselected bucket — the caller's output stays zero there) and the
+        new residual slice (``None`` when EF is off).
+        """
+        if self._use_ef_kernel(g, r, coeff):
+            from ..kernels.ef_covap import ef_update
+
+            send, rnew = ef_update(
+                g.reshape(-1), r.reshape(-1).astype(g.dtype), coeff,
+                selected=selected,
+            )
+            rnew = rnew.reshape(g.shape)
+            if not selected:
+                return None, rnew
+            return pmean(send.reshape(g.shape), axis_names), rnew
+        if r is None:
+            t = g
+        elif coeff is None:
+            t = g + r.astype(g.dtype)
+        else:
+            t = g + coeff * r.astype(g.dtype)
+        if not selected:
+            return None, (t if r is not None else None)
+        xm, resid = self.wire.execute_segment(t, axis_names)
+        return xm, (resid if r is not None else None)
+
+    def execute_bucket(
+        self,
+        schedule: CommSchedule,
+        b: int,
+        g_slices: Sequence[jax.Array],
+        r_slices: Sequence[jax.Array] | None = None,
+        *,
+        coeff=None,
+        key=None,
+        axis_names: Sequence[str] = (),
+    ):
+        """Execute exactly ONE bucket's synchronisation — the granular unit
+        the overlap engine's gradient-ready hooks call from inside the
+        backward pass, and which :meth:`execute` loops over.
+
+        ``g_slices`` are segment-aligned slices of bucket ``b``
+        (``plan.buckets[b].segments`` order); ``r_slices`` the matching EF
+        residual slices or ``None``.  Segmented wires take RAW gradient
+        slices (EF compensation — fused kernel when applicable — happens in
+        here, so the hook path and the post path share one implementation);
+        flat wires take already-compensated slices (their classic EF
+        residual ``t - sent`` is a whole-tree property handled by the
+        caller).
+
+        Returns ``(synced_slices, resid_slices)`` aligned with the bucket's
+        segments; ``synced_slices`` is ``None`` for an unselected segmented
+        bucket (nothing crosses the wire — output stays zero), and
+        ``resid_slices`` is ``None`` when no EF state is threaded.  For
+        flat wires ``resid_slices`` carries the *locally sent* values
+        (classic EF subtracts them from ``t``).
+        """
+        plan = schedule.plan
+        bucket = plan.buckets[b]
+        if self.granularity == "leaf":
+            raise ValueError("leaf-granularity pipelines have no buckets; "
+                             "use execute_leaf_one")
+        selected = b in schedule.selected
+        if getattr(self.wire, "segmented", False):
+            synced, resids = [], []
+            for g, r in zip(
+                g_slices,
+                r_slices if r_slices is not None else (None,) * len(g_slices),
+            ):
+                xm, rr = self._ef_segment(
+                    g, r, coeff, selected=selected, axis_names=axis_names
+                )
+                synced.append(xm)
+                resids.append(rr)
+            if not selected:
+                return None, (resids if r_slices is not None else None)
+            return synced, (resids if r_slices is not None else None)
+        # flat wire: gather the (compensated) slices, one wire exchange,
+        # split synced/sent back into segment-shaped pieces
+        if not selected:
+            return None, None
+        flat = jnp.concatenate([x.reshape(-1) for x in g_slices])
+        synced_flat, sent_flat = self.wire.execute_bucket(
+            flat, key, axis_names
+        )
+        return (
+            _split_like(g_slices, synced_flat),
+            _split_like(g_slices, sent_flat),
+        )
+
+    def execute_leaf_one(self, leaf_idx: int, t, q, axis_names):
+        """Granular leaf path (LowRank/PowerSGD): sync one compensated leaf
+        -> ``(approx, new_q)``."""
+        return self.wire.execute_leaf(t, q, axis_names)
+
+    # ---- whole-tree execute paths, rebuilt on the granular API ------------
     def _execute_segmented(self, schedule, grads, state, step, axis_names):
         """Sharding-preserving path (COVAP / dense): per-segment slices,
-        zero gather/scatter copies for the common whole-leaf case."""
+        zero gather/scatter copies for the common whole-leaf case.  With EF
+        on, every bucket (selected or not) flows through
+        :meth:`execute_bucket` so the residual update fuses with the
+        compensation (ef_covap kernel)."""
         plan = schedule.plan
         ef_on = self.ef is not None and _state_present(state)
-        t = self.ef.compensated(grads, state, step) if ef_on else grads
+        coeff = self.ef_coefficient(step) if ef_on else None
 
-        treedef = jax.tree_util.tree_structure(t)
-        leaves = jax.tree_util.tree_leaves(t)
+        treedef = jax.tree_util.tree_structure(grads)
+        leaves = jax.tree_util.tree_leaves(grads)
+        r_leaves = jax.tree_util.tree_leaves(state) if ef_on else None
         out_leaves = [jnp.zeros(l.shape, l.dtype) for l in leaves]
-        resid_leaves = list(leaves) if ef_on else None
+        resid_leaves = (
+            [jnp.zeros(l.shape, l.dtype) for l in leaves] if ef_on else None
+        )
 
-        for b in dict.fromkeys(schedule.selected):  # unique, order kept
-            for seg in plan.buckets[b].segments:
-                li = seg.leaf_idx
-                x = bk._slice_segment(leaves[li], seg)
-                xm, resid_seg = self.wire.execute_segment(x, axis_names)
-                out_leaves[li] = bk._update_segment(out_leaves[li], seg, xm)
-                if ef_on:
-                    resid_leaves[li] = bk._update_segment(
-                        resid_leaves[li], seg, resid_seg
+        todo = (
+            range(plan.num_buckets) if ef_on
+            else dict.fromkeys(schedule.selected)  # unique, order kept
+        )
+        for b in todo:
+            segs = plan.buckets[b].segments
+            g_slices = [
+                bk._slice_segment(leaves[s.leaf_idx], s) for s in segs
+            ]
+            r_slices = (
+                [bk._slice_segment(r_leaves[s.leaf_idx], s) for s in segs]
+                if ef_on else None
+            )
+            synced, resids = self.execute_bucket(
+                schedule, b, g_slices, r_slices,
+                coeff=coeff, axis_names=axis_names,
+            )
+            if synced is not None:
+                for seg, xm in zip(segs, synced):
+                    out_leaves[seg.leaf_idx] = bk._update_segment(
+                        out_leaves[seg.leaf_idx], seg, xm
+                    )
+            if ef_on and resids is not None:
+                for seg, rr in zip(segs, resids):
+                    resid_leaves[seg.leaf_idx] = bk._update_segment(
+                        resid_leaves[seg.leaf_idx], seg, rr
                     )
 
         out = jax.tree_util.tree_unflatten(treedef, out_leaves)
@@ -662,16 +845,23 @@ class SyncPipeline(Compressor):
         base_key = jax.random.fold_in(base_key, jnp.asarray(step, jnp.int32))
         for b in dict.fromkeys(schedule.selected):  # unique, order kept
             bucket = plan.buckets[b]
-            flat = bk.gather_bucket(plan, leaves, bucket)
+            segs = bucket.segments
+            g_slices = [
+                bk._slice_segment(leaves[s.leaf_idx], s) for s in segs
+            ]
             key = jax.random.fold_in(base_key, bucket.index)
-            synced, local_sent = self.wire.execute_bucket(
-                flat, key, axis_names
+            synced, sent = self.execute_bucket(
+                schedule, b, g_slices,
+                coeff=None, key=key, axis_names=axis_names,
             )
-            out_leaves = bk.scatter_bucket(plan, out_leaves, bucket, synced)
-            if ef_on:
-                sent_leaves = bk.scatter_bucket(
-                    plan, sent_leaves, bucket, local_sent
+            for seg, xm, sv in zip(segs, synced, sent):
+                out_leaves[seg.leaf_idx] = bk._update_segment(
+                    out_leaves[seg.leaf_idx], seg, xm
                 )
+                if ef_on:
+                    sent_leaves[seg.leaf_idx] = bk._update_segment(
+                        sent_leaves[seg.leaf_idx], seg, sv
+                    )
         out = jax.tree_util.tree_unflatten(treedef, out_leaves)
         if ef_on:
             new_state = jax.tree.map(
@@ -690,9 +880,9 @@ class SyncPipeline(Compressor):
         leaves = jax.tree_util.tree_leaves(grads)
         qs, resid = state["q"], state["residual"]
         out_leaves, new_qs, new_resid = [], [], []
-        for leaf, q, r in zip(leaves, qs, resid):
+        for li, (leaf, q, r) in enumerate(zip(leaves, qs, resid)):
             t = leaf + r.astype(leaf.dtype) if r is not None else leaf
-            approx, qn = self.wire.execute_leaf(t, q, axis_names)
+            approx, qn = self.execute_leaf_one(li, t, q, axis_names)
             out_leaves.append(approx)
             new_qs.append(qn)
             if r is not None:

@@ -14,6 +14,13 @@ the paper's "near-zero compression overhead" claim.
 Layout: buckets are flat vectors, viewed as (blocks, 8, 128) tiles; grid is
 1-D over blocks; ``selected`` is a *static* kernel specialisation (the
 coarse filter is static per phase, SS III.A).
+
+Rounding note: the fused single pass compiles ``g + c*r`` to an FMA (one
+rounding) where the 2-op jnp reference rounds the product separately, so
+results are ~1 ulp MORE accurate but not bitwise-identical to
+``kernels.ref.ef_update_ref``.  The segmented execute path therefore
+engages this kernel on TPU by default and on CPU only via the explicit
+``use_ef_kernel=True`` compressor option (tests/benchmarks).
 """
 from __future__ import annotations
 

@@ -190,6 +190,133 @@ def collective_summary(hlo_text: str, trip_aware: bool = True) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# overlap interleaving checker (overlap execution engine, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+_HEAVY_OPS = frozenset(
+    {"fusion", "dot", "custom-call", "while", "convolution"}
+)
+_COLL_KINDS = frozenset(
+    {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+     "collective-permute"}
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class InterleaveReport:
+    """Where a compiled module schedules its gradient collectives.
+
+    ``num_collectives`` counts bucket-sized collectives (result >=
+    ``min_bytes``; scalar loss/metric psums are ignored).  A collective's
+    *issue point* is its ``-start`` op where the backend splits start/done
+    pairs (TPU async collectives), the op itself otherwise — ``-done`` ops
+    are never counted.  ``before_final_grad`` is how many of them the
+    schedule places before the final gradient-producing heavy op (the last
+    fusion/dot/while that feeds any collective); ``independent`` is how
+    many are structurally independent of at least one gradient-producing
+    heavy op (neither ancestor nor descendant) — the latency-hiding
+    scheduler's licence to overlap them with backward compute.
+    """
+
+    num_collectives: int
+    num_grad_ops: int
+    before_final_grad: int
+    independent: int
+    first_collective_pos: int
+    last_grad_pos: int
+
+    @property
+    def interleaved(self) -> bool:
+        """At least one collective-start is scheduled before the final
+        backward (gradient-producing) fusion."""
+        return self.num_collectives > 0 and self.before_final_grad >= 1
+
+
+_INST_NAME_RE = re.compile(r"^\s*(%?[\w\.\-]+)\s*=")
+_OPERAND_RE = re.compile(r"%[\w\.\-]+")
+
+
+def _entry_instructions(hlo_text: str) -> list[tuple[str, str, int, list[str]]]:
+    """-> [(name, opcode, result_bytes, operand_names)] in schedule order
+    for the ENTRY computation (post-scheduling HLO text preserves the
+    backend's sequential order)."""
+    comps, entry = _split_computations(hlo_text)
+    lines = comps.get(entry, []) if entry else []
+    out = []
+    for raw in lines:
+        s = raw.strip()
+        if "=" not in s:
+            continue
+        m = _INST_NAME_RE.match(s)
+        if not m:
+            continue
+        name = m.group(1).lstrip("%")
+        _, rhs = s.split("=", 1)
+        om = _OPCODE_RE.search(rhs)
+        if not om:
+            continue
+        opcode = om.group(1)
+        result = _result_bytes(rhs[: om.start()])
+        operands = [x.lstrip("%") for x in _OPERAND_RE.findall(rhs)]
+        out.append((name, opcode, result, operands))
+    return out
+
+
+def check_interleaving(hlo_text: str, *, min_bytes: int = 1024) -> InterleaveReport:
+    """Does the compiled module issue bucket collectives *inside* the
+    backward pass?
+
+    The overlap engine's claim is structural: with the gradient-ready hooks
+    a bucket's collective depends only on that bucket's gradients, so the
+    schedule can (and does) place collective-starts before the final
+    gradient-producing fusion instead of serialising the whole exchange
+    after the whole backward pass.  This checker proves it on post-
+    optimisation HLO: see :class:`InterleaveReport`.  Used as the
+    ``benchmarks.run --smoke`` CI gate and by tests/test_overlap.py.
+    """
+    insts = _entry_instructions(hlo_text)
+    index = {name: i for i, (name, _, _, _) in enumerate(insts)}
+    n = len(insts)
+
+    ancestors: list[set[int]] = [set() for _ in range(n)]
+    for i, (_, _, _, operands) in enumerate(insts):
+        for d in operands:
+            j = index.get(d)
+            if j is not None and j < i:
+                ancestors[i].add(j)
+                ancestors[i] |= ancestors[j]
+
+    def is_issue_op(opcode: str) -> bool:
+        cm = _COLL_RE.fullmatch(opcode)
+        return cm is not None and cm.group(1) in _COLL_KINDS
+
+    colls = [
+        i for i, (_, op, rb, _) in enumerate(insts)
+        if is_issue_op(op) and rb >= min_bytes
+    ]
+    grad_ops: set[int] = set()
+    for c in colls:
+        grad_ops |= {j for j in ancestors[c] if insts[j][1] in _HEAVY_OPS}
+
+    last_grad = max(grad_ops) if grad_ops else -1
+    before = sum(1 for c in colls if c < last_grad)
+    independent = 0
+    for c in colls:
+        for j in grad_ops:
+            if j not in ancestors[c] and c not in ancestors[j]:
+                independent += 1
+                break
+    return InterleaveReport(
+        num_collectives=len(colls),
+        num_grad_ops=len(grad_ops),
+        before_final_grad=before,
+        independent=independent,
+        first_collective_pos=min(colls) if colls else -1,
+        last_grad_pos=last_grad,
+    )
+
+
+# ---------------------------------------------------------------------------
 # roofline
 # ---------------------------------------------------------------------------
 

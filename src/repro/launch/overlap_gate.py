@@ -1,0 +1,85 @@
+"""The overlap-interleaving gate: compile one fused-overlap step and check
+its HLO schedule (DESIGN.md §11).
+
+Shared harness for the ``benchmarks.run --smoke`` "overlap" gate and
+``tests/test_overlap.py`` — both run it in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the CPU backend
+has a real 8-worker mesh to emit collectives on:
+
+    python -m repro.launch.overlap_gate
+
+prints one ``OVERLAP ...`` line and exits non-zero unless the compiled
+module schedules at least one bucket collective before the final
+gradient-producing fusion.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import InterleaveReport, check_interleaving
+
+
+def compile_and_check(
+    trainer=None,
+    state=None,
+    batch=None,
+    *,
+    arch: str = "gpt2-paper",
+    vocab_size: int = 256,
+    seq_len: int = 32,
+    global_batch: int = 8,
+    interval: int = 4,
+    phase: int = 0,
+    min_bytes: int = 1024,
+) -> InterleaveReport:
+    """Compile ``trainer``'s fused phase executable (or build a small
+    COVAP trainer on a mesh over all local devices) and run
+    :func:`~repro.launch.hlo_analysis.check_interleaving` on the optimized
+    HLO."""
+    if trainer is None:
+        from jax.sharding import Mesh
+
+        from repro.configs import get_reduced
+        from repro.data import DataConfig, make_loader
+        from repro.models import build_model
+        from repro.optim import adamw
+        from repro.train.trainer import TrainConfig, Trainer
+
+        mesh = Mesh(np.array(jax.devices()), ("data",))
+        cfg = get_reduced(arch).with_(vocab_size=vocab_size)
+        model = build_model(cfg)
+        tc = TrainConfig(
+            compressor="covap", interval=interval, bucket_bytes=1 << 14,
+            max_buckets=32, log_every=10 ** 9, overlap="fused",
+        )
+        trainer = Trainer(model, adamw(1e-3), tc, mesh=mesh,
+                          dp_axes=("data",))
+        state = trainer.init_state(jax.random.PRNGKey(0))
+        dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq_len,
+                        global_batch=global_batch)
+        batch = next(iter(make_loader(dc)))
+    fn = trainer._phase_fn(phase)
+    hlo = fn.lower(
+        state["params"], state["opt"], state["comp"], batch, jnp.int32(0)
+    ).compile().as_text()
+    return check_interleaving(hlo, min_bytes=min_bytes)
+
+
+def main() -> None:
+    r = compile_and_check()
+    print(
+        f"OVERLAP num_collectives={r.num_collectives} "
+        f"before_final_grad={r.before_final_grad} "
+        f"independent={r.independent} interleaved={r.interleaved}"
+    )
+    if not r.interleaved:
+        raise SystemExit(
+            "fused step's compiled HLO does not interleave collectives "
+            "with the backward pass"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -59,6 +59,9 @@ def main():
     ap.add_argument("--resume", action="store_true",
                     help="resume from the latest checkpoint in --ckpt-dir "
                          "(params, optimizer AND error-feedback state)")
+    ap.add_argument("--overlap", default="post", choices=["post", "fused"],
+                    help="gradient-sync placement: post-backward (default) "
+                         "or fused into the backward pass (overlap engine)")
     ap.add_argument("--adaptive", action="store_true",
                     help="arm the adaptive runtime: re-plan the interval "
                          "online from measured CCR")
@@ -81,6 +84,7 @@ def main():
     tc = TrainConfig(
         compressor=args.compressor, interval=interval,
         log_every=args.log_every, steps=args.steps,
+        overlap=args.overlap,
     )
     tr = Trainer(model, opt, tc)
     print(f"[plan] {tr.plan.num_buckets} buckets, "

@@ -40,10 +40,24 @@ class PhaseSample:
     t_comp: float
     t_comm: float
     step: int = 0
+    # wall time of the full step (collectives included); 0.0 on synthetic
+    # probes.  t_comp + t_comm - t_full is the communication the overlap
+    # engine actually hid this sample (perfmodel.achieved_overlap_fraction).
+    t_full: float = 0.0
 
     @property
     def ccr(self) -> float:
         return self.t_comm / max(self.t_comp, 1e-12)
+
+    @property
+    def achieved_overlap(self) -> float | None:
+        """Measured overlap fraction, or None when the probe recorded no
+        full-step wall time (synthetic probes)."""
+        if self.t_full <= 0.0:
+            return None
+        from repro.core.perfmodel import achieved_overlap_fraction
+
+        return achieved_overlap_fraction(self.t_comp, self.t_comm, self.t_full)
 
 
 class CCRMonitor:
@@ -89,14 +103,28 @@ class CCRMonitor:
 
     def measured_times(self, phase: int | None = None) -> dict | None:
         """Mean ``(t_comp, t_comm)`` over the sample window, or None when
-        no probe has run yet."""
+        no probe has run yet.  Samples with a full-step wall time also
+        yield ``achieved_overlap`` — the fraction of the wire time the
+        executed step actually hid under compute (predicted-vs-achieved
+        counterpart of ``perfmodel.overlap_fraction``)."""
         ss = self.samples(phase)
         if not ss:
             return None
         t_comp = sum(s.t_comp for s in ss) / len(ss)
         t_comm = sum(s.t_comm for s in ss) / len(ss)
-        return {"t_comp": t_comp, "t_comm": t_comm,
-                "ccr": t_comm / max(t_comp, 1e-12), "n": len(ss)}
+        out = {"t_comp": t_comp, "t_comm": t_comm,
+               "ccr": t_comm / max(t_comp, 1e-12), "n": len(ss)}
+        timed = [s for s in ss if s.t_full > 0.0]
+        if timed:
+            from repro.core.perfmodel import achieved_overlap_fraction
+
+            out["t_full"] = sum(s.t_full for s in timed) / len(timed)
+            out["achieved_overlap"] = achieved_overlap_fraction(
+                sum(s.t_comp for s in timed) / len(timed),
+                sum(s.t_comm for s in timed) / len(timed),
+                out["t_full"],
+            )
+        return out
 
     def measured_ccr(self, phase: int | None = None) -> float | None:
         mt = self.measured_times(phase)
@@ -112,6 +140,9 @@ class CCRMonitor:
             "measured_ccr": None if mt is None else mt["ccr"],
             "t_comp": None if mt is None else mt["t_comp"],
             "t_comm": None if mt is None else mt["t_comm"],
+            "achieved_overlap": (
+                None if mt is None else mt.get("achieved_overlap")
+            ),
         }
 
 
@@ -193,8 +224,13 @@ class PhaseProbe:
         step = jnp.asarray(state["step"], jnp.int32)
         args = (state["params"], state["opt"], state["comp"], batch, step)
         if tr.hierarchical:
-            # the compute-only program is per-pod: strip the pod block axis
-            flat = jax.tree.map(lambda a: a[0], (args[0], args[1], args[2]))
+            # the compute-only program is per-pod: take pod 0's block of
+            # the full (n_pods, ...) host-side state
+            from repro.train.trainer import strip_pod_block
+
+            flat = strip_pod_block(
+                (args[0], args[1], args[2]), expect_local=False
+            )
             comp_args = flat + (batch, step)
         else:
             comp_args = args
@@ -210,6 +246,7 @@ class PhaseProbe:
             t_comp=res["t_comp"],
             t_comm=res["t_comm"],
             step=int(state["step"]),
+            t_full=res["t_full"],
         )
 
 

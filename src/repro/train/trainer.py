@@ -74,6 +74,13 @@ class TrainConfig:
     clip_norm: float = 0.0                 # 0 = off
     steps: int = 100
     log_every: int = 10
+    # gradient-sync placement: "post" runs every collective after the full
+    # backward pass (the classic path, pinned bit-for-bit); "fused" issues
+    # each bucket's collective inside the backward trace via the overlap
+    # engine's gradient-ready hooks (core/overlap.py) so XLA can interleave
+    # comm with the remaining backward compute.  Segmented bucket pipelines
+    # only (COVAP / none / fp16).
+    overlap: str = "post"
 
 
 def make_compressor(tc: TrainConfig) -> Compressor:
@@ -90,6 +97,35 @@ def _loss_and_grads(model, params, batch):
 
     (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
     return loss, metrics, grads
+
+
+def strip_pod_block(tree, *, expect_local: bool = True):
+    """Drop the leading per-pod block axis from every leaf of a
+    hierarchical train state.
+
+    Inside the shard_map the state is sharded ``P('pod')``, so the local
+    block size must be exactly 1 — ``expect_local=True`` asserts that with
+    a clear error instead of silently indexing.  Host-side callers (e.g.
+    the CCR probe peeling pod 0 off a full ``(n_pods, ...)`` state) pass
+    ``expect_local=False``.
+    """
+
+    def strip(a):
+        if expect_local and a.shape[0] != 1:
+            raise ValueError(
+                f"hierarchical state leaf has local pod block size "
+                f"{a.shape[0]}, expected 1 (shape {a.shape}); the state "
+                f"must enter shard_map sharded P('pod')"
+            )
+        return a[0]
+
+    return jax.tree.map(strip, tree)
+
+
+def restore_pod_block(tree):
+    """Re-attach the length-1 pod block axis removed by
+    :func:`strip_pod_block` (inverse inside the shard_map body)."""
+    return jax.tree.map(lambda a: a[None], tree)
 
 
 def plan_pod_schedule(
@@ -175,6 +211,60 @@ def build_step_fn(
     With ``pod_interval > 1`` (hierarchical mode) gradient sync runs only
     over the intra-pod axes; the 'pod' axis is reconciled by
     ``pod_reconcile`` and the state carries a leading pod-block axis."""
+    return _build_phase_step(
+        model, optimizer, compressor, plan, phase=phase, dp_axes=dp_axes,
+        clip_norm=clip_norm, pod_interval=pod_interval, dp_world=dp_world,
+        fused=False,
+    )
+
+
+def build_overlapped_step(
+    model,
+    optimizer: Optimizer,
+    compressor: Compressor,
+    plan: BucketPlan,
+    *,
+    phase: int,
+    dp_axes: Sequence[str] = (),
+    clip_norm: float = 0.0,
+    pod_interval: int = 1,
+    dp_world: int = 1,
+) -> Callable:
+    """The fused-overlap per-phase step (``TrainConfig.overlap="fused"``).
+
+    Identical contract to :func:`build_step_fn`, but gradient sync happens
+    INSIDE the backward pass: every bucket's parameter segments are routed
+    through a gradient-ready hook (``core.overlap``) whose backward rule
+    issues that bucket's planned collective the moment its last gradient is
+    produced — XLA's latency-hiding scheduler can then interleave each
+    bucket's all-reduce with the remaining backward compute instead of
+    serialising comm after compute.  Bit-for-bit equal to the post path
+    (the hooks call the same granular ``execute_bucket``) on the pure-DP
+    mesh; with hierarchical pods (``pod_interval > 1``) XLA's fusion
+    choices may differ between the two compiled programs at the ulp level,
+    so equivalence there is numerical (~1e-7), not bitwise.
+    """
+    from repro.core.overlap import supports_fused_overlap
+
+    if not supports_fused_overlap(compressor):
+        raise ValueError(
+            f"overlap='fused' requires a segmented bucket pipeline "
+            f"(covap / none / fp16); {compressor!r} must use overlap='post'"
+        )
+    return _build_phase_step(
+        model, optimizer, compressor, plan, phase=phase, dp_axes=dp_axes,
+        clip_norm=clip_norm, pod_interval=pod_interval, dp_world=dp_world,
+        fused=True,
+    )
+
+
+def _build_phase_step(
+    model, optimizer, compressor, plan, *, phase, dp_axes, clip_norm,
+    pod_interval, dp_world, fused,
+) -> Callable:
+    """Shared skeleton of :func:`build_step_fn` / :func:`build_overlapped_step`
+    — only the loss/grads/sync block differs; each path keeps its exact
+    traced op order (the post path is pinned bit-for-bit)."""
     pod_axes = tuple(a for a in dp_axes if a == "pod") if pod_interval > 1 else ()
     grad_axes = tuple(a for a in dp_axes if a not in pod_axes)
 
@@ -187,23 +277,35 @@ def build_step_fn(
         else None
     )
 
+    def pmean_metrics(loss, metrics):
+        if not dp_axes:
+            return loss, metrics
+        return (
+            lax.pmean(loss, tuple(dp_axes)),
+            jax.tree.map(lambda m: lax.pmean(m, tuple(dp_axes)), metrics),
+        )
+
     def step_fn(params, opt_state, comp_state, batch, step):
         hier = bool(pod_axes)
         if hier:
-            # strip the per-pod block axis (local block size 1)
-            params, opt_state, comp_state = jax.tree.map(
-                lambda a: a[0], (params, opt_state, comp_state)
+            params, opt_state, comp_state = strip_pod_block(
+                (params, opt_state, comp_state)
             )
-        loss, metrics, grads = _loss_and_grads(model, params, batch)
-        if dp_axes:
-            loss = lax.pmean(loss, tuple(dp_axes))
-            metrics = jax.tree.map(
-                lambda m: lax.pmean(m, tuple(dp_axes)), metrics
+        if fused:
+            from repro.core.overlap import overlapped_loss_and_grads
+
+            loss, metrics, synced, comp_state = overlapped_loss_and_grads(
+                model, compressor, comm_schedule,
+                params, comp_state, batch, step, axis_names=grad_axes,
             )
-        synced, comp_state, stats = compressor.execute(
-            comm_schedule, grads, comp_state,
-            step=step, axis_names=grad_axes,
-        )
+            loss, metrics = pmean_metrics(loss, metrics)
+        else:
+            loss, metrics, grads = _loss_and_grads(model, params, batch)
+            loss, metrics = pmean_metrics(loss, metrics)
+            synced, comp_state, _ = compressor.execute(
+                comm_schedule, grads, comp_state,
+                step=step, axis_names=grad_axes,
+            )
         if clip_norm > 0:
             synced, gnorm = clip_by_global_norm(synced, clip_norm)
         else:
@@ -215,8 +317,8 @@ def build_step_fn(
                 params, pod_schedule,
                 pod_axes=pod_axes, reconcile_helper_axes=grad_axes,
             )
-            params, opt_state, comp_state = jax.tree.map(
-                lambda a: a[None], (params, opt_state, comp_state)
+            params, opt_state, comp_state = restore_pod_block(
+                (params, opt_state, comp_state)
             )
         metrics = dict(metrics)
         metrics["grad_norm"] = gnorm
@@ -241,6 +343,7 @@ def build_train_step(
     clip_norm: float = 0.0,
     donate: bool = True,
     pod_interval: int = 1,
+    overlap: str = "post",
 ):
     """jit (+ shard_map over DP axes) the per-phase step.
 
@@ -248,7 +351,11 @@ def build_train_step(
     Production path: manual over ``dp_axes``, auto over everything else.
     Hierarchical mode (``pod_interval > 1``): state carries a leading
     per-pod axis (P('pod')) so pods may drift between reconciliations.
+    ``overlap``: "post" (sync after the backward pass, the pinned default)
+    or "fused" (:func:`build_overlapped_step`'s in-backward collectives).
     """
+    if overlap not in ("post", "fused"):
+        raise ValueError(f"overlap must be 'post' or 'fused', got {overlap!r}")
     hier = pod_interval > 1 and "pod" in dp_axes
     # the compressor's collectives run over the gradient-sync axes only:
     # in hierarchical mode the 'pod' axis is reconciled separately, so the
@@ -258,7 +365,8 @@ def build_train_step(
     if mesh is not None:
         for a in sync_axes:
             dp_world *= mesh.shape[a]
-    step_fn = build_step_fn(
+    builder = build_overlapped_step if overlap == "fused" else build_step_fn
+    step_fn = builder(
         model, optimizer, compressor, plan,
         phase=phase, dp_axes=dp_axes if mesh is not None else (),
         clip_norm=clip_norm, pod_interval=pod_interval if hier else 1,
@@ -388,6 +496,7 @@ class Trainer:
                 phase=phase, mesh=self.mesh, dp_axes=self.dp_axes,
                 clip_norm=self.tc.clip_norm, donate=False,
                 pod_interval=self.tc.pod_interval,
+                overlap=self.tc.overlap,
             )
         return self._steps[phase]
 
