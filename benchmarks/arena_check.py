@@ -1,0 +1,71 @@
+"""CI gate for the zero-copy gradient arena (DESIGN.md §12).
+
+Lowers one phase of the COVAP (segmented) and top-k (flat/concat) execute
+paths with the arena off and on, and counts data-movement opcodes
+(copy / concatenate / dynamic-slice / dynamic-update-slice) in the
+**pre-optimisation** HLO — the ops the traced program *issues*, which is
+what grows with bucket count and what the arena eliminates by
+construction.  (Post-optimisation, XLA's simplifier + all-reduce combiner
+can converge toy-scale programs — that convergence is itself evidence the
+arena is pure data-movement restructuring; the gate pins the structural
+claim.)  FAILS unless arena-on issues strictly fewer ops than arena-off
+and the per-segment ``dynamic-update-slice`` scatter chains are gone
+entirely.
+
+Fast: lowering only, no XLA compile, no devices.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs import get_reduced
+from repro.core import build_plan, get_compressor
+from repro.launch.hlo_analysis import count_data_movement
+from repro.models import build_model
+
+from .common import row
+
+
+def _lowered_hlo(params, grads, plan, name, use_arena, **opts):
+    comp = get_compressor(name, **opts, use_arena=use_arena)
+    state = comp.init_state(params, plan)
+    sched = comp.plan_phase(plan, 0)
+
+    def f(g, s):
+        out, ns, _ = comp.execute(sched, g, s, step=1)
+        return out, ns
+
+    return jax.jit(f).lower(grads, state).as_text(dialect="hlo")
+
+
+def run(smoke: bool = False):
+    cfg = get_reduced("gpt2-paper").with_(vocab_size=256)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    plan = build_plan(params, bucket_bytes=1 << 14, max_buckets=32, interval=4)
+    grads = jax.tree.map(lambda x: x * 0.1, params)
+
+    rows = []
+    for name, opts in (("covap", {"interval": 4}), ("topk", {"ratio": 0.05})):
+        off = count_data_movement(
+            _lowered_hlo(params, grads, plan, name, False, **opts)
+        )
+        on = count_data_movement(
+            _lowered_hlo(params, grads, plan, name, True, **opts)
+        )
+        if not on["total"] < off["total"]:
+            raise AssertionError(
+                f"arena gate [{name}]: expected fewer data-movement ops "
+                f"with the arena on; off={off} on={on}"
+            )
+        if on["dynamic-update-slice"] != 0:
+            raise AssertionError(
+                f"arena gate [{name}]: per-segment update-slice chains "
+                f"survived: {on}"
+            )
+        rows.append(row(
+            f"arena/{name}_copy_ops", 0.0,
+            f"off={off['total']};on={on['total']};"
+            f"dus_off={off['dynamic-update-slice']};dus_on=0",
+        ))
+    return rows

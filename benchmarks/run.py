@@ -3,12 +3,23 @@
     PYTHONPATH=src python -m benchmarks.run [--only table2,fig5] [--smoke]
 
 Prints ``name,us_per_call,derived`` CSV (one line per measurement).
-``--smoke`` runs only the fast analytic/plan-level modules (sub-second
-each, no training, no heavy jit) — the CI gate used by scripts/ci.sh.
+``--smoke`` runs the fast CI subset used by scripts/ci.sh: mostly
+analytic/plan-level modules plus two compiled-HLO gates ("overlap",
+"arena"), then records a standardized ``BENCH_<n>.json`` snapshot (step
+wall time from a small measured covap run — the one genuinely trained
+piece, ~15 s — bytes/worker, modeled overlap fraction, pack-kernel µs)
+so the perf trajectory of the repo is tracked PR over PR.  The snapshot
+is written only for the full smoke set (not with ``--only``); the
+``BENCH_*.json`` pattern is gitignored — ``git add -f`` the snapshot a
+PR means to record.
 """
 from __future__ import annotations
 
 import argparse
+import glob
+import json
+import os
+import re
 import sys
 import time
 import traceback
@@ -17,6 +28,7 @@ import inspect
 
 from . import (
     adaptive_runtime,
+    arena_check,
     fig5_ratio_sweep,
     fig11_scaling,
     kernel_bench,
@@ -40,15 +52,79 @@ MODULES = {
     "kernels": kernel_bench,
     "adaptive": adaptive_runtime,
     "overlap": overlap_check,
+    "arena": arena_check,
 }
 
 # fast modules only: no training loops, no heavy jit — the CI smoke gate.
 # "kernels" runs here in its reduced --smoke size so scripts/ci.sh bench
 # exercises the Pallas kernel reference path on every run; "overlap" is the
 # HLO interleaving gate (compiles ONE fused step on an 8-worker CPU mesh
-# and fails unless collectives are scheduled inside the backward pass).
+# and fails unless collectives are scheduled inside the backward pass);
+# "arena" is the zero-copy gate (fails unless the arena build issues fewer
+# data-movement ops than the concat path).
 SMOKE_MODULES = ("table1", "table3", "table5", "fig5", "fig11", "kernels",
-                 "adaptive", "overlap")
+                 "adaptive", "overlap", "arena")
+
+_REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def build_snapshot(all_rows: list[tuple]) -> dict:
+    """The standardized perf digest recorded per PR: a tiny measured covap
+    run (per-step wall time, arena off/on), the static plan's byte and
+    overlap accounting, and the pack-kernel microbenchmark."""
+    import repro.api as api
+
+    def measured_step(arena: bool) -> float:
+        t0 = time.perf_counter()
+        r = api.fit(
+            "gpt2-paper", reduced=True, vocab_size=256, interval=4,
+            steps=8, seq_len=32, global_batch=8, arena=arena,
+        )
+        # amortised per-step wall (includes the 4 phase compiles — a
+        # stable smoke-sized proxy, tracked relative over PRs)
+        return (time.perf_counter() - t0) / 8, r
+
+    wall_off, fit = measured_step(False)
+    wall_on, _ = measured_step(True)
+    report = fit.trainer.schedule_report()
+    # same configuration as the measured run above (interval=4, same
+    # bucketing) so the modeled and measured columns describe ONE workload
+    tune_row = api.tune(
+        "gpt2-paper", dp_workers=8, candidates=(("covap", {}),),
+        interval=4, bucket_bytes=1 << 14, max_buckets=32,
+    )[0]
+    kernel_rows = {name: (us, derived) for name, us, derived in all_rows
+                   if name.startswith("kernel/pack")}
+    pack_us = kernel_rows.get("kernel/pack_fused", (None, ""))[0]
+    m = re.search(r"speedup_fused=([\d.]+)",
+                  kernel_rows.get("kernel/pack_unfused", (0, ""))[1])
+    return {
+        "schema": 1,
+        "unix_time": int(time.time()),
+        "workload": "gpt2-paper/reduced covap I=4 seq32 gb8",
+        "step_wall_s": wall_off,
+        "step_wall_s_arena": wall_on,
+        "bytes_per_worker_per_step": report["mean_bytes_per_step"],
+        "volume_ratio": report["volume_ratio"],
+        "overlap_frac_modeled": tune_row["overlap_frac_modeled"],
+        "pack_overhead_us_modeled": tune_row["pack_overhead_us"],
+        "pack_kernel_us": pack_us,
+        "pack_fused_speedup": float(m.group(1)) if m else None,
+    }
+
+
+def write_snapshot(all_rows: list[tuple]) -> str:
+    existing = glob.glob(os.path.join(_REPO_ROOT, "BENCH_*.json"))
+    nums = [
+        int(m.group(1))
+        for p in existing
+        if (m := re.match(r"BENCH_(\d+)\.json$", os.path.basename(p)))
+    ]
+    path = os.path.join(_REPO_ROOT, f"BENCH_{max(nums, default=-1) + 1}.json")
+    with open(path, "w") as f:
+        json.dump(build_snapshot(all_rows), f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 def main() -> None:
@@ -66,6 +142,7 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     ok = True
+    all_rows: list[tuple] = []
     for name in names:
         mod = MODULES[name]
         t0 = time.perf_counter()
@@ -75,12 +152,16 @@ def main() -> None:
                 kw["smoke"] = True
             rows = mod.run(**kw)
             emit(rows)
+            all_rows += rows
             print(f"# {name}: {len(rows)} rows in "
                   f"{time.perf_counter()-t0:.1f}s", file=sys.stderr)
         except Exception:
             ok = False
             print(f"# {name}: FAILED", file=sys.stderr)
             traceback.print_exc()
+    if ok and args.smoke and not args.only:
+        path = write_snapshot(all_rows)
+        print(f"# snapshot: {path}", file=sys.stderr)
     if not ok:
         sys.exit(1)
 

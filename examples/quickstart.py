@@ -68,7 +68,26 @@ for row in api.tune("gpt2-paper", dp_workers=64,
                     candidates=(("covap", {}), ("none", {}),
                                 ("oktopk", {"ratio": 0.01}))):
     print(f"  {row['compressor']:>8s}  speedup {row['speedup']:5.1f}  "
-          f"overlap modeled {row['overlap_frac_modeled']:.2f}")
+          f"overlap modeled {row['overlap_frac_modeled']:.2f}  "
+          f"pack {row['pack_overhead_us']:.1f}us")
 # COVAP keeps ~all of its (tiny) wire time hidden; ok-topk's data-dependent
 # all-to-all forfeits overlap entirely (paper Fig. 1e) — the report makes
 # the difference visible without compiling anything.
+
+# --- zero-copy gradient arena -------------------------------------------
+# arena=True packs the step's gradient ONCE into statically-planned flat
+# bucket buffers (fused compensate+cast+pack pass) so every bucket's
+# payload is a static slice view — bitwise-identical results, with the
+# per-bucket gather/scatter copies gone.  Measure the per-step saving:
+import time
+
+def _wall(arena: bool, steps: int = 12) -> float:
+    t0 = time.perf_counter()
+    api.fit("gpt2-paper", reduced=True, vocab_size=256, interval=4,
+            steps=steps, seq_len=64, global_batch=8, arena=arena)
+    return (time.perf_counter() - t0) / steps
+
+off_s, on_s = _wall(False), _wall(True)
+print(f"arena off {off_s*1e3:.1f} ms/step -> on {on_s*1e3:.1f} ms/step "
+      f"({(off_s - on_s)*1e6:+.0f} us/step packed away; includes compile, "
+      f"CPU-scale noise — the structural win is the HLO copy-count gate)")

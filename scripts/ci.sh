@@ -16,10 +16,15 @@ if [[ "$what" == "all" || "$what" == "tests" ]]; then
 fi
 
 if [[ "$what" == "all" || "$what" == "bench" ]]; then
-    echo "== smoke benchmarks (incl. HLO overlap-interleaving gate) =="
-    # the smoke set contains the "overlap" module: it compiles one fused
-    # COVAP step on an 8-worker CPU mesh and FAILS the gate unless the
-    # compiled HLO schedules bucket collectives inside the backward pass
+    echo "== smoke benchmarks (incl. HLO overlap + arena copy-count gates) =="
+    # the smoke set contains two HLO gates: "overlap" compiles one fused
+    # COVAP step on an 8-worker CPU mesh and FAILS unless the compiled
+    # module schedules bucket collectives inside the backward pass;
+    # "arena" lowers the covap/topk execute paths arena-off vs arena-on
+    # and FAILS unless the arena build issues fewer data-movement ops
+    # (and zero per-segment update-slice chains).  A BENCH_<n>.json perf
+    # snapshot (step wall time, bytes/worker, overlap frac, pack-kernel
+    # µs) is written to the repo root on every smoke run.
     python -m benchmarks.run --smoke > /dev/null
     echo "smoke benchmarks OK"
 fi

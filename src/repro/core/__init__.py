@@ -6,6 +6,7 @@ The compressor subsystem is organised around the plan/execute split:
 (the ``Compressor`` contract, registry, and manual-collective helpers).
 """
 from . import (
+    arena,
     bucketing,
     ccr,
     comm,
@@ -17,6 +18,7 @@ from . import (
     schedule,
     stages,
 )
+from .arena import ArenaLayout, build_layout
 from .bucketing import BucketPlan, ReadyOrder, build_plan, build_ready_order
 from .ccr import HardwareSpec, analytic_ccr, analytic_times, select_interval
 from .comm import Compressor, SyncStats
@@ -27,6 +29,7 @@ from .schedule import CollectiveCall, CommSchedule, plan_all_phases
 from .stages import SyncPipeline
 
 __all__ = [
+    "arena",
     "bucketing",
     "ccr",
     "comm",
@@ -37,6 +40,8 @@ __all__ = [
     "perfmodel",
     "schedule",
     "stages",
+    "ArenaLayout",
+    "build_layout",
     "BucketPlan",
     "ReadyOrder",
     "build_plan",

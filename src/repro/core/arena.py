@@ -1,0 +1,373 @@
+"""Zero-copy gradient arena: statically-planned flat bucket buffers.
+
+The plan/execute split makes *which* bytes cross the wire a static property
+of ``(plan, phase)`` — this module makes *where they live* static too.  An
+:class:`ArenaLayout` assigns every covered bucket a contiguous slot inside
+one flat per-dtype buffer (a *plane*), with per-segment offsets computed
+once from the :class:`~repro.core.bucketing.BucketPlan`.  At execute time
+the gradient is packed into the arena **once per step** and every bucket's
+wire payload is a static-offset slice view — no per-bucket
+``jnp.concatenate`` rebuilds, no ``lax.dynamic_slice_in_dim`` chains on the
+way back (the gather/scatter data-movement tax Agarwal et al. identify as
+the reason GC schemes lose their paper speedups).
+
+Layout rules
+------------
+
+* Buckets are laid out in **plan order** (ascending bucket index), one
+  slot per bucket, segments packed back-to-back inside the slot in segment
+  order — exactly the element order ``bucketing.gather_bucket`` produces,
+  so packed views are interchangeable with the legacy flat vectors.
+* A bucket's element dtype is its **promoted** dtype
+  (:func:`bucket_dtype` = ``np.result_type`` over its segments — the same
+  promotion ``jnp.concatenate`` applies on the legacy path), unless the
+  caller pins a wire dtype (``WireCast('bfloat16')``).
+* Buckets of different dtypes land in different *planes* (one flat buffer
+  per dtype); models with uniform parameter dtype get exactly one plane.
+* The layout covers a caller-chosen bucket subset — per phase, the
+  selected buckets of that phase's ``CommSchedule`` — so an unselected
+  bucket (which never crosses the wire) occupies no arena space.
+
+Note the arena order is NOT the issue order: the overlap engine's
+``bucketing.ReadyOrder`` ranks buckets by backward readiness (head first,
+embedding last) while the arena keeps plan order so that offsets stay
+monotone in bucket index (DESIGN.md §12 has the picture).  The two are
+orthogonal: readiness decides *when* a bucket's collective is issued,
+the layout decides *where* its payload lives.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bucketing as bk
+from .bucketing import Bucket, BucketPlan
+
+
+def bucket_dtype(plan: BucketPlan, bucket: Bucket) -> np.dtype:
+    """Promoted dtype of a flattened bucket (mixed buckets promote via
+    ``np.result_type`` — the same rule ``jnp.concatenate`` applies)."""
+    return np.result_type(
+        *[plan.leaf_dtypes[s.leaf_idx] for s in bucket.segments]
+    )
+
+
+def segment_shape(plan: BucketPlan, seg: bk.Segment) -> tuple[int, ...]:
+    """Shape of one segment's slice of its leaf (scalars -> ``(1,)``)."""
+    shape = plan.leaf_shapes[seg.leaf_idx]
+    if not shape:
+        return (1,)
+    out = list(shape)
+    out[0] = seg.row_hi - seg.row_lo
+    if seg.sub_axis is not None:
+        out[seg.sub_axis] = seg.sub_hi - seg.sub_lo
+    return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArenaLayout:
+    """Static flat-buffer layout for a subset of a plan's buckets.
+
+    ``buckets[i]`` is covered bucket *i* (plan order); parallel tuples give
+    its plane, offset (elements, within the plane), and extent.
+    ``seg_offsets[i]`` holds the absolute plane offset of each of its
+    segments.  ``plane_dtypes`` / ``plane_sizes`` describe the flat
+    buffers themselves.
+    """
+
+    plan: BucketPlan
+    buckets: tuple[int, ...]
+    plane_dtypes: tuple[str, ...]
+    plane_sizes: tuple[int, ...]
+    bucket_plane: tuple[int, ...]
+    bucket_offsets: tuple[int, ...]
+    bucket_numels: tuple[int, ...]
+    seg_offsets: tuple[tuple[int, ...], ...]
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "_pos", {b: i for i, b in enumerate(self.buckets)}
+        )
+
+    # ---- lookups ----------------------------------------------------------
+    def index_of(self, b: int) -> int:
+        return self._pos[b]
+
+    def covers(self, b: int) -> bool:
+        return b in self._pos
+
+    def slot(self, b: int) -> tuple[int, int, int]:
+        """-> (plane index, element offset, extent) of bucket ``b``."""
+        i = self._pos[b]
+        return self.bucket_plane[i], self.bucket_offsets[i], self.bucket_numels[i]
+
+    def total_elements(self) -> int:
+        return sum(self.plane_sizes)
+
+    def nbytes(self) -> int:
+        return sum(
+            n * np.dtype(d).itemsize
+            for n, d in zip(self.plane_sizes, self.plane_dtypes)
+        )
+
+    # ---- buffers ----------------------------------------------------------
+    def bucket_view(self, planes: Sequence[jax.Array], b: int) -> jax.Array:
+        """Bucket ``b``'s payload — a static-offset slice, not a copy."""
+        p, off, n = self.slot(b)
+        return planes[p][off : off + n]
+
+    def assemble(self, pieces: dict[int, Sequence[jax.Array]]) -> list[jax.Array]:
+        """Build the arena planes from per-bucket segment pieces — ONE
+        fused op per plane.
+
+        ``pieces[b]`` holds bucket ``b``'s per-segment values (any shape;
+        flattened and cast to the plane dtype here).  Because the layout
+        places buckets and segments back-to-back in plan order,
+        concatenating the pieces in that order IS the packed plane: the
+        whole pack pass lowers to a single HLO concatenate per plane
+        instead of a per-bucket rebuild or a dynamic-update-slice chain.
+        Buckets the layout doesn't cover are ignored; every covered bucket
+        must be present.
+        """
+        per_plane: list[list[jax.Array]] = [[] for _ in self.plane_dtypes]
+        for b in self.buckets:
+            i = self._pos[b]
+            p = self.bucket_plane[i]
+            dt = np.dtype(self.plane_dtypes[p])
+            vals = pieces[b]
+            segs = self.plan.buckets[b].segments
+            if len(vals) != len(segs):
+                raise ValueError(
+                    f"bucket {b}: {len(vals)} pieces for {len(segs)} segments"
+                )
+            per_plane[p].extend(v.reshape(-1).astype(dt) for v in vals)
+        return [
+            jnp.concatenate(vs)
+            if vs else jnp.zeros(0, np.dtype(self.plane_dtypes[p]))
+            for p, vs in enumerate(per_plane)
+        ]
+
+    def unpack_bucket(self, b: int, flat: jax.Array) -> list[jax.Array]:
+        """Split a bucket-sized flat vector back into segment-shaped pieces
+        using static slices (the zero-copy replacement for
+        ``stages._split_like`` / ``bucketing.scatter_bucket``)."""
+        i = self._pos[b]
+        plan = self.plan
+        bucket = plan.buckets[b]
+        base = self.bucket_offsets[i]
+        out = []
+        for seg, off in zip(bucket.segments, self.seg_offsets[i]):
+            shape = segment_shape(plan, seg)
+            n = int(np.prod(shape, dtype=np.int64))
+            rel = off - base
+            out.append(flat[rel : rel + n].reshape(shape))
+        return out
+
+
+def build_layout(
+    plan: BucketPlan,
+    selected: Iterable[int] | None = None,
+    *,
+    wire_dtype: Any = None,
+) -> ArenaLayout:
+    """Compute the static arena layout for ``selected`` buckets (default:
+    every bucket) — pure Python over plan metadata, no tracing.
+
+    ``wire_dtype`` pins every bucket's element type (the ``WireCast`` cast
+    path); otherwise each bucket uses its promoted :func:`bucket_dtype`.
+    """
+    if selected is None:
+        covered = list(range(plan.num_buckets))
+    else:
+        covered = sorted(dict.fromkeys(int(b) for b in selected))
+    wd = np.dtype(wire_dtype) if wire_dtype is not None else None
+
+    plane_of: dict[str, int] = {}
+    plane_dtypes: list[str] = []
+    plane_sizes: list[int] = []
+    bucket_plane: list[int] = []
+    bucket_offsets: list[int] = []
+    bucket_numels: list[int] = []
+    seg_offsets: list[tuple[int, ...]] = []
+
+    for b in covered:
+        bucket = plan.buckets[b]
+        dt = wd if wd is not None else bucket_dtype(plan, bucket)
+        name = np.dtype(dt).name
+        if name not in plane_of:
+            plane_of[name] = len(plane_dtypes)
+            plane_dtypes.append(name)
+            plane_sizes.append(0)
+        p = plane_of[name]
+        off = plane_sizes[p]
+        offs = []
+        cur = off
+        for seg in bucket.segments:
+            offs.append(cur)
+            cur += seg.numel(plan.leaf_shapes[seg.leaf_idx])
+        extent = cur - off
+        assert extent == bucket.numel, (extent, bucket.numel)
+        bucket_plane.append(p)
+        bucket_offsets.append(off)
+        bucket_numels.append(extent)
+        seg_offsets.append(tuple(offs))
+        plane_sizes[p] = cur
+
+    return ArenaLayout(
+        plan=plan,
+        buckets=tuple(covered),
+        plane_dtypes=tuple(plane_dtypes),
+        plane_sizes=tuple(plane_sizes),
+        bucket_plane=tuple(bucket_plane),
+        bucket_offsets=tuple(bucket_offsets),
+        bucket_numels=tuple(bucket_numels),
+        seg_offsets=tuple(seg_offsets),
+    )
+
+
+def pack_leaves(
+    layout: ArenaLayout, leaves: Sequence[jax.Array]
+) -> list[jax.Array]:
+    """Pack leaf arrays into arena planes — one fused op per plane.
+
+    Pure data movement (plus the plane-dtype promotion ``jnp.concatenate``
+    would apply on the legacy path): every covered bucket's segment slices
+    land at their planned offsets, so the result's ``bucket_view`` is
+    bitwise what ``bucketing.gather_bucket`` returns — but the whole step
+    packs once instead of once per bucket.
+    """
+    pieces = {
+        b: [
+            bk._slice_segment(leaves[seg.leaf_idx], seg)
+            for seg in layout.plan.buckets[b].segments
+        ]
+        for b in layout.buckets
+    }
+    return layout.assemble(pieces)
+
+
+def leaf_cover(plan: BucketPlan) -> list[list[tuple[int, int, bk.Segment]] | None]:
+    """Per-leaf ordered ``(bucket, seg_pos, Segment)`` coverage.
+
+    ``build_plan`` tiles every leaf with ascending contiguous row (and
+    sub-axis) ranges, in bucket order — which makes leaf *reassembly* a
+    single concatenate instead of a per-segment update-slice chain
+    (:func:`gather_leaves`).  Entries are validated; a leaf whose coverage
+    is not a contiguous ascending tiling yields ``None`` (callers fall
+    back to the scatter path)."""
+    cover: list[list[tuple[int, int, bk.Segment]]] = [
+        [] for _ in plan.leaf_shapes
+    ]
+    for b, bucket in enumerate(plan.buckets):
+        for si, seg in enumerate(bucket.segments):
+            cover[seg.leaf_idx].append((b, si, seg))
+    out: list[list[tuple[int, int, bk.Segment]] | None] = []
+    for li, entries in enumerate(cover):
+        shape = plan.leaf_shapes[li]
+        rows = shape[0] if shape else 1
+        ok = bool(entries)
+        r = 0
+        i = 0
+        while ok and i < len(entries):
+            seg = entries[i][2]
+            if seg.row_lo != r:
+                ok = False
+                break
+            if seg.sub_axis is None:
+                r = seg.row_hi
+                i += 1
+                continue
+            # a run of sub-axis splits of one row block must tile the axis
+            dim = shape[seg.sub_axis]
+            c = 0
+            while i < len(entries):
+                s2 = entries[i][2]
+                if (
+                    s2.row_lo != seg.row_lo
+                    or s2.sub_axis != seg.sub_axis
+                    or s2.sub_lo != c
+                ):
+                    break
+                c = s2.sub_hi
+                i += 1
+            if c != dim:
+                ok = False
+            r = seg.row_hi
+        out.append(entries if ok and r == rows else None)
+    return out
+
+
+def gather_leaves(
+    plan: BucketPlan,
+    piece: Any,
+    like: Sequence[jax.Array],
+) -> list[jax.Array]:
+    """Reassemble full leaves from per-segment pieces — the zero-copy
+    inverse of :func:`pack_leaves`.
+
+    ``piece(b, si, seg)`` returns the segment-shaped value for segment
+    ``si`` of bucket ``b`` (or ``None`` for "zero": an unselected bucket's
+    contribution).  Each leaf is rebuilt with at most one concatenate per
+    split axis — replacing the legacy per-segment
+    ``dynamic_update_slice`` chain — and cast to ``like``'s dtype.  Leaves
+    whose coverage :func:`leaf_cover` rejects fall back to the scatter
+    path.
+    """
+    cover = leaf_cover(plan)
+    out: list[jax.Array] = []
+    for li, entries in enumerate(cover):
+        ref = like[li]
+        shape = plan.leaf_shapes[li]
+        if entries is None:  # defensive: non-contiguous coverage
+            leaf = jnp.zeros(ref.shape, ref.dtype)
+            for b, bucket in enumerate(plan.buckets):
+                for si, seg in enumerate(bucket.segments):
+                    if seg.leaf_idx != li:
+                        continue
+                    v = piece(b, si, seg)
+                    if v is not None:
+                        leaf = bk._update_segment(leaf, seg, v)
+            out.append(leaf)
+            continue
+
+        def val(b, si, seg):
+            v = piece(b, si, seg)
+            if v is None:
+                return jnp.zeros(segment_shape(plan, seg), ref.dtype)
+            return v.astype(ref.dtype)
+
+        blocks: list[jax.Array] = []
+        i = 0
+        while i < len(entries):
+            b, si, seg = entries[i]
+            if seg.sub_axis is None:
+                blocks.append(val(b, si, seg))
+                i += 1
+                continue
+            parts = []
+            while i < len(entries) and entries[i][2].row_lo == seg.row_lo:
+                b2, s2, seg2 = entries[i]
+                parts.append(val(b2, s2, seg2))
+                i += 1
+            blocks.append(
+                parts[0] if len(parts) == 1
+                else jnp.concatenate(parts, axis=seg.sub_axis)
+            )
+        leaf = blocks[0] if len(blocks) == 1 else jnp.concatenate(blocks, axis=0)
+        out.append(leaf.reshape(ref.shape).astype(ref.dtype))
+    return out
+
+
+__all__ = [
+    "ArenaLayout",
+    "bucket_dtype",
+    "build_layout",
+    "gather_leaves",
+    "leaf_cover",
+    "pack_leaves",
+    "segment_shape",
+]

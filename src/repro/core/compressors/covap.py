@@ -37,6 +37,7 @@ class COVAP(SyncPipeline):
         ef_ascend_range: float = 0.1,
         wire_dtype: str = "",
         use_ef_kernel: bool | None = None,
+        **opts,
     ):
         """``wire_dtype='bfloat16'`` additionally halves the wire volume of
         the selected buckets (beyond-paper: composes 2x with the filter's
@@ -59,6 +60,7 @@ class COVAP(SyncPipeline):
             ef_flag=bool(ef),
             wire_dtype=wire_dtype,
             use_ef_kernel=use_ef_kernel,
+            **opts,
         )
         self.interval = interval
         self.use_ef = bool(ef)

@@ -20,12 +20,14 @@ from .base import register
 
 @register("fp8wire")
 class FP8Wire(SyncPipeline):
-    def __init__(self, block: int = 8192, seed: int = 0, ef: bool = True):
+    def __init__(self, block: int = 8192, seed: int = 0, ef: bool = True,
+                 **opts):
         super().__init__(
             wire=FP8Block(block),
             ef=ErrorFeedback() if ef else None,
             seed=seed,
             block=block,
+            **opts,
         )
         self.block = int(block)
         self.use_ef = ef

@@ -24,12 +24,14 @@ from .base import register
 
 @register("oktopk")
 class OkTopK(SyncPipeline):
-    def __init__(self, ratio: float = 0.01, seed: int = 0, ef: bool = True):
+    def __init__(self, ratio: float = 0.01, seed: int = 0, ef: bool = True,
+                 **opts):
         super().__init__(
             wire=OkTopKRoute(ratio),
             ef=ErrorFeedback() if ef else None,
             seed=seed,
             ratio=ratio,
+            **opts,
         )
         self.ratio = float(ratio)
         self.use_ef = ef

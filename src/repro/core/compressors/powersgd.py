@@ -23,12 +23,14 @@ from .base import register
 
 @register("powersgd")
 class PowerSGD(SyncPipeline):
-    def __init__(self, rank: int = 2, seed: int = 0, ef: bool = True):
+    def __init__(self, rank: int = 2, seed: int = 0, ef: bool = True,
+                 **opts):
         super().__init__(
             wire=LowRank(rank, seed=seed),
             ef=ErrorFeedback() if ef else None,
             seed=seed,
             rank=rank,
+            **opts,
         )
         self.rank = int(rank)
         self.use_ef = bool(ef)

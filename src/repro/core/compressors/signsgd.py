@@ -14,10 +14,11 @@ from .base import register
 
 @register("efsignsgd")
 class EFSignSGD(SyncPipeline):
-    def __init__(self, seed: int = 0, ef: bool = True):
+    def __init__(self, seed: int = 0, ef: bool = True, **opts):
         super().__init__(
             wire=SignCompress(),
             ef=ErrorFeedback() if ef else None,
             seed=seed,
+            **opts,
         )
         self.use_ef = ef

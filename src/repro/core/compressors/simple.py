@@ -18,13 +18,14 @@ from .base import register
 
 @register("none")
 class NoCompression(SyncPipeline):
-    def __init__(self, per_bucket: bool = True):
-        super().__init__(wire=WireCast(None), per_bucket=per_bucket)
+    def __init__(self, per_bucket: bool = True, **opts):
+        super().__init__(wire=WireCast(None), per_bucket=per_bucket, **opts)
         self.per_bucket = per_bucket
 
 
 @register("fp16")
 class HalfPrecision(SyncPipeline):
-    def __init__(self, wire_dtype: str = "bfloat16"):
-        super().__init__(wire=WireCast(wire_dtype), wire_dtype=wire_dtype)
+    def __init__(self, wire_dtype: str = "bfloat16", **opts):
+        super().__init__(wire=WireCast(wire_dtype), wire_dtype=wire_dtype,
+                         **opts)
         self.wire_dtype = jnp.dtype(wire_dtype)

@@ -21,12 +21,14 @@ from .base import register
 class TopK(SyncPipeline):
     """Aji & Heafield sparse communication: largest-|g| k fraction."""
 
-    def __init__(self, ratio: float = 0.01, seed: int = 0, ef: bool = True):
+    def __init__(self, ratio: float = 0.01, seed: int = 0, ef: bool = True,
+                 **opts):
         super().__init__(
             wire=stages.TopK(ratio),
             ef=ErrorFeedback() if ef else None,
             seed=seed,
             ratio=ratio,
+            **opts,
         )
         self.ratio = float(ratio)
         self.use_ef = ef
@@ -38,7 +40,8 @@ class DGC(SyncPipeline):
     clipping before selection (momentum correction folded into EF)."""
 
     def __init__(
-        self, ratio: float = 0.001, clip_norm: float = 1.0, seed: int = 0
+        self, ratio: float = 0.001, clip_norm: float = 1.0, seed: int = 0,
+        **opts,
     ):
         super().__init__(
             wire=stages.TopK(ratio, clip_norm=clip_norm),
@@ -46,6 +49,7 @@ class DGC(SyncPipeline):
             seed=seed,
             ratio=ratio,
             clip_norm=clip_norm,
+            **opts,
         )
         self.ratio = float(ratio)
         self.clip_norm = float(clip_norm)
@@ -57,12 +61,14 @@ class RandomK(SyncPipeline):
     """Stich et al. sparsified SGD: k uniformly random coordinates, shared
     PRNG -> dense psum of the selected values (no index traffic)."""
 
-    def __init__(self, ratio: float = 0.01, seed: int = 0, ef: bool = True):
+    def __init__(self, ratio: float = 0.01, seed: int = 0, ef: bool = True,
+                 **opts):
         super().__init__(
             wire=stages.RandomK(ratio),
             ef=ErrorFeedback() if ef else None,
             seed=seed,
             ratio=ratio,
+            **opts,
         )
         self.ratio = float(ratio)
         self.use_ef = ef

@@ -25,6 +25,15 @@ analytic timeline.  This module closes that gap:
 ``launch.hlo_analysis.check_interleaving`` proves the mechanism on compiled
 modules: with the hooks, at least one bucket collective is structurally
 independent of the backward scan's while loop; post-hoc, none is.
+
+With the zero-copy arena on (``use_arena`` compressor option /
+``TrainConfig.arena``, DESIGN.md §12), the hook's backward sources its
+payload from the bucket's contiguous arena slot instead of per-segment
+collectives: ``execute_bucket`` packs the slices with the fused
+``pack_ef_cast`` pass (EF compensation + wire cast + placement in one
+sweep), issues ONE collective over the static slot view, and splits the
+result with static slices — same bits, fewer copies, one collective per
+bucket.
 """
 from __future__ import annotations
 

@@ -147,6 +147,44 @@ def speedup_gc_ovlp(
     return P * ls / total
 
 
+# ---- pack-overhead term (zero-copy arena, DESIGN.md §12) --------------------
+
+def pack_overhead_s(schedule, *, hbm_bw: float, ef: bool = False) -> float:
+    """HBM streaming seconds of one phase's arena pack pass.
+
+    The fused ``pack_ef_cast`` pass reads each selected bucket's gradient
+    once and writes its wire-dtype arena slot once; with error feedback it
+    additionally reads the residual and writes the new one for EVERY
+    bucket (unselected buckets update their residual too, and their
+    gradient is read for the compensation).  Keeping this term explicit is
+    what keeps modeled vs achieved overlap honest: the paper's "near-zero
+    compression overhead" is near-zero *because* it is one streaming pass,
+    not because it is free.
+
+    Returns 0.0 for leaf-granularity schedules (no arena path).
+    """
+    import numpy as np
+
+    plan = schedule.plan
+    if plan is None or schedule.granularity != "bucket":
+        return 0.0
+    total = 0
+    seen: set[int] = set()
+    for b, call in zip(schedule.selected, schedule.calls):
+        if b in seen:
+            continue
+        seen.add(b)
+        bucket = plan.buckets[b]
+        total += bucket.nbytes  # read g
+        total += bucket.numel * np.dtype(call.wire_dtype).itemsize  # write wire
+    if ef:
+        for b, bucket in enumerate(plan.buckets):
+            total += 2 * bucket.nbytes  # read r, write r'
+            if b not in seen:
+                total += bucket.nbytes  # read g for the residual update
+    return total / hbm_bw
+
+
 # ---- schedule-driven timeline (plan/execute split) --------------------------
 
 def schedule_comm_times(
@@ -177,6 +215,7 @@ def simulate_schedule(
     world: int,
     link_bw: float,
     t_compress: float = 0.0,
+    t_pack: float = 0.0,
     data_dependency: bool = False,
     ready_order: bool = False,
 ) -> dict:
@@ -189,11 +228,16 @@ def simulate_schedule(
     ``ready_order=True`` lays the timeline out in the overlap engine's
     actual issue order (``bucketing.ReadyOrder``: head buckets first,
     embedding last) instead of plan order — the faithful model of the
-    fused execution path."""
+    fused execution path.
+
+    ``t_pack`` is the arena pack pass (:func:`pack_overhead_s`): like
+    ``t_compress`` it rides on the compute lane, spread over buckets
+    proportionally — each bucket's slot is packed right before its
+    collective can issue."""
     plan = schedule.plan
     numels = plan.bucket_numels()
     total = sum(numels) or 1
-    comp = [(t_comp + t_compress) * n / total for n in numels]
+    comp = [(t_comp + t_compress + t_pack) * n / total for n in numels]
     comm = schedule_comm_times(schedule, world=world, link_bw=link_bw)
     if ready_order and schedule.granularity == "bucket":
         from .bucketing import build_ready_order

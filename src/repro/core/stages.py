@@ -35,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from . import arena as ar
 from . import bucketing as bk
 from .bucketing import Bucket, BucketPlan, build_ready_order
 from .error_feedback import EFSchedule, compensate, init_residual
@@ -51,10 +52,9 @@ from .comm import (
 
 
 def _bucket_dtype(plan: BucketPlan, bucket: Bucket) -> np.dtype:
-    """Dtype of the flattened bucket vector (mixed buckets promote)."""
-    return np.result_type(
-        *[plan.leaf_dtypes[s.leaf_idx] for s in bucket.segments]
-    )
+    """Dtype of the flattened bucket vector (mixed buckets promote) —
+    canonical definition lives in :func:`repro.core.arena.bucket_dtype`."""
+    return ar.bucket_dtype(plan, bucket)
 
 
 # ---------------------------------------------------------------------------
@@ -672,6 +672,119 @@ class SyncPipeline(Compressor):
             use = not INTERPRET
         return bool(use)
 
+    # ---- zero-copy arena path (core/arena.py, DESIGN.md §12) --------------
+    def _arena_on(self) -> bool:
+        """The ``use_arena`` compressor option: bucket payloads live as
+        static-offset views of per-phase flat planes instead of per-step
+        ``concatenate`` / ``dynamic_slice`` rebuilds.  Off by default — the
+        legacy op order stays pinned; arena-on is bitwise-equal for
+        uniform-dtype models (mixed-dtype buckets promote per
+        :func:`arena.bucket_dtype`, exactly as ``jnp.concatenate`` would,
+        so the flat wires match there too)."""
+        return bool(self.options.get("use_arena", False))
+
+    def _use_pack_kernel(self, g, r, coeff) -> bool:
+        """Fused Pallas pack kernel (kernels/pack_ef_cast.pack_ef_cast) on
+        the arena pack pass: one streaming pass computes ``t = g + c*r``,
+        the wire-dtype cast, and the residual split — replacing the
+        flatten -> compensate -> cast triple materialisation.
+
+        Applicability: EF present, ``WireCast`` wire (dense or bf16/f16
+        cast), f32 operands.  Engagement mirrors ``_use_ef_kernel``: on by
+        default on TPU, CPU opt-in via ``use_pack_kernel=True`` (interpret
+        mode emits a single-rounding FMA for ``g + c*r``, so the CPU
+        default stays on the bitwise-identical jnp reference)."""
+        if not (
+            coeff is not None
+            and r is not None
+            and isinstance(self.wire, WireCast)
+            and g.dtype == jnp.float32
+            and r.dtype == jnp.float32
+        ):
+            return False
+        wd = self.wire.wire_dtype
+        if wd is not None and wd not in (
+            jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16)
+        ):
+            return False
+        use = self.options.get("use_pack_kernel")
+        if use is None:
+            from ..kernels.common import INTERPRET
+
+            use = not INTERPRET
+        return bool(use)
+
+    def _pack_segment(self, g, r, coeff, *, selected: bool):
+        """One segment through the fused pack + EF + cast pass.
+
+        Returns ``(wire_flat, resid)``: the flat wire-dtype values destined
+        for the segment's arena slot (zeros for an unselected bucket —
+        never written) and the new residual in the segment's shape
+        (``None`` when EF is off)."""
+        gf = g.reshape(-1)
+        wd = self.wire.wire_dtype if isinstance(self.wire, WireCast) else None
+        if self._use_pack_kernel(g, r, coeff):
+            from ..kernels.pack_ef_cast import pack_ef_cast
+
+            w, rnew = pack_ef_cast(
+                gf, r.reshape(-1).astype(g.dtype), coeff,
+                selected=selected,
+                wire_dtype=wd.name if wd is not None else None,
+            )
+        else:
+            from ..kernels import ref as kref
+
+            w, rnew = kref.pack_ef_cast_ref(
+                gf,
+                r.reshape(-1).astype(g.dtype) if r is not None else None,
+                coeff, selected=selected, wire_dtype=wd,
+            )
+        if rnew is not None:
+            rnew = rnew.reshape(g.shape)
+        return w, (rnew if r is not None else None)
+
+    def _execute_bucket_arena(
+        self, schedule, b, g_slices, r_slices, *, coeff, axis_names
+    ):
+        """Arena form of one segmented bucket's sync: pack the segments
+        into the bucket's contiguous slot (fused EF + cast, static
+        offsets), ONE collective over the slot view, split the result with
+        static slices.  vs. the legacy per-segment path: no per-segment
+        collectives, no dynamic-slice chains — and bitwise-identical
+        outputs for uniform-dtype buckets (elementwise ops and ``pmean``
+        commute with layout).  A MIXED-dtype bucket reduces at the
+        promoted plane dtype (legacy reduces each segment at its own
+        dtype), so there the sum's bits — and the dense wire bytes vs the
+        planned ``bucket.nbytes`` — legitimately differ; the pinned
+        parity guarantee (TrainConfig.arena) is scoped to uniform-dtype
+        models."""
+        plan = schedule.plan
+        selected = b in schedule.selected
+        layout = ar.build_layout(
+            plan, (b,),
+            wire_dtype=(
+                self.wire.wire_dtype
+                if isinstance(self.wire, WireCast) else None
+            ),
+        )
+        ef_on = r_slices is not None
+        wires, resids = [], []
+        for g, r in zip(
+            g_slices, r_slices if ef_on else (None,) * len(g_slices)
+        ):
+            w, rnew = self._pack_segment(g, r, coeff, selected=selected)
+            wires.append(w)
+            resids.append(rnew)
+        if not selected:
+            return None, (resids if ef_on else None)
+        planes = layout.assemble({b: wires})
+        xm = pmean(layout.bucket_view(planes, b), axis_names)
+        synced = [
+            piece.astype(g.dtype)
+            for piece, g in zip(layout.unpack_bucket(b, xm), g_slices)
+        ]
+        return synced, (resids if ef_on else None)
+
     def _ef_segment(self, g, r, coeff, *, selected: bool, axis_names):
         """One segment slice through EF ∘ filter-decision ∘ wire.
 
@@ -742,6 +855,11 @@ class SyncPipeline(Compressor):
                              "use execute_leaf_one")
         selected = b in schedule.selected
         if getattr(self.wire, "segmented", False):
+            if self._arena_on():
+                return self._execute_bucket_arena(
+                    schedule, b, g_slices, r_slices,
+                    coeff=coeff, axis_names=axis_names,
+                )
             synced, resids = [], []
             for g, r in zip(
                 g_slices,
@@ -774,12 +892,85 @@ class SyncPipeline(Compressor):
         return self.wire.execute_leaf(t, q, axis_names)
 
     # ---- whole-tree execute paths, rebuilt on the granular API ------------
+    def _execute_segmented_arena(self, schedule, grads, state, step, axis_names):
+        """Arena form of :meth:`_execute_segmented`: ONE pack pass writes
+        every selected bucket's compensated, wire-cast payload into its
+        static slot (fused pack kernel where applicable), each bucket's
+        collective runs over a contiguous slice view, and results scatter
+        back through static-offset segment writes — no per-bucket
+        ``concatenate`` rebuilds, no ``dynamic_slice_in_dim`` chains.
+        Unselected buckets never touch the arena: their residual update is
+        the same fused pack pass with the wire write elided."""
+        plan = schedule.plan
+        ef_on = self.ef is not None and _state_present(state)
+        coeff = self.ef_coefficient(step) if ef_on else None
+
+        treedef = jax.tree_util.tree_structure(grads)
+        leaves = jax.tree_util.tree_leaves(grads)
+        r_leaves = jax.tree_util.tree_leaves(state) if ef_on else None
+
+        sel = dict.fromkeys(schedule.selected)  # unique, order kept
+        wd = self.wire.wire_dtype if isinstance(self.wire, WireCast) else None
+        layout = ar.build_layout(plan, sel, wire_dtype=wd)
+
+        # ---- pack pass: one streaming traversal of the gradient ----------
+        wire_pieces: dict[int, list] = {}
+        resid_pieces: dict[int, list] = {}
+        todo = range(plan.num_buckets) if ef_on else sel
+        for b in todo:
+            selected = b in sel
+            pieces, rps = [], []
+            for seg in plan.buckets[b].segments:
+                g = bk._slice_segment(leaves[seg.leaf_idx], seg)
+                r = (
+                    bk._slice_segment(r_leaves[seg.leaf_idx], seg)
+                    if ef_on else None
+                )
+                w, rnew = self._pack_segment(g, r, coeff, selected=selected)
+                pieces.append(w)
+                rps.append(rnew)
+            if selected:
+                wire_pieces[b] = pieces
+            if ef_on:
+                resid_pieces[b] = rps
+        planes = layout.assemble(wire_pieces)
+
+        # ---- wire pass: one collective per bucket, over a slice view -----
+        synced_pieces = {
+            b: layout.unpack_bucket(
+                b, pmean(layout.bucket_view(planes, b), axis_names)
+            )
+            for b in sel
+        }
+
+        # ---- reassembly: one concat per leaf, no update-slice chains -----
+        out_leaves = ar.gather_leaves(
+            plan,
+            lambda b, si, seg: (
+                synced_pieces[b][si] if b in synced_pieces else None
+            ),
+            leaves,
+        )
+        out = jax.tree_util.tree_unflatten(treedef, out_leaves)
+        if ef_on:
+            resid_leaves = ar.gather_leaves(
+                plan, lambda b, si, seg: resid_pieces[b][si], leaves
+            )
+            new_state = jax.tree_util.tree_unflatten(treedef, resid_leaves)
+        else:
+            new_state = state
+        return out, new_state
+
     def _execute_segmented(self, schedule, grads, state, step, axis_names):
         """Sharding-preserving path (COVAP / dense): per-segment slices,
         zero gather/scatter copies for the common whole-leaf case.  With EF
         on, every bucket (selected or not) flows through
         :meth:`execute_bucket` so the residual update fuses with the
         compensation (ef_covap kernel)."""
+        if self._arena_on():
+            return self._execute_segmented_arena(
+                schedule, grads, state, step, axis_names
+            )
         plan = schedule.plan
         ef_on = self.ef is not None and _state_present(state)
         coeff = self.ef_coefficient(step) if ef_on else None
@@ -828,10 +1019,69 @@ class SyncPipeline(Compressor):
         )
         return out, new_state
 
+    def _execute_flat_arena(self, schedule, grads, state, step, axis_names):
+        """Arena form of :meth:`_execute_flat`: the compensated gradient is
+        packed ONCE into per-dtype planes (static offsets, the exact
+        element order ``gather_bucket`` produces), each selected bucket's
+        wire stage consumes a static slice view, and synced/sent values
+        return through static-slice unpacks — bitwise-identical to the
+        concat/``_split_like`` path for every flat wire."""
+        plan = schedule.plan
+        ef_on = self.ef is not None and _state_present(state)
+        t = self.ef.compensated(grads, state, step) if ef_on else grads
+
+        treedef = jax.tree_util.tree_structure(t)
+        leaves = jax.tree_util.tree_leaves(t)
+
+        sel = dict.fromkeys(schedule.selected)  # unique, order kept
+        layout = ar.build_layout(plan, sel)
+        planes = ar.pack_leaves(layout, leaves)
+
+        base_key = jax.random.PRNGKey(self.seed)
+        base_key = jax.random.fold_in(base_key, jnp.asarray(step, jnp.int32))
+        synced_pieces: dict[int, list] = {}
+        sent_pieces: dict[int, list] = {}
+        for b in sel:
+            key = jax.random.fold_in(base_key, plan.buckets[b].index)
+            synced_flat, sent_flat = self.wire.execute_bucket(
+                layout.bucket_view(planes, b), key, axis_names
+            )
+            synced_pieces[b] = layout.unpack_bucket(b, synced_flat)
+            if ef_on:
+                sent_pieces[b] = layout.unpack_bucket(b, sent_flat)
+        out_leaves = ar.gather_leaves(
+            plan,
+            lambda b, si, seg: (
+                synced_pieces[b][si] if b in synced_pieces else None
+            ),
+            leaves,
+        )
+        out = jax.tree_util.tree_unflatten(treedef, out_leaves)
+        if ef_on:
+            sent_leaves = ar.gather_leaves(
+                plan,
+                lambda b, si, seg: (
+                    sent_pieces[b][si] if b in sent_pieces else None
+                ),
+                leaves,
+            )
+            new_state = jax.tree.map(
+                lambda a, b: a - b,
+                jax.tree_util.tree_unflatten(treedef, leaves),
+                jax.tree_util.tree_unflatten(treedef, sent_leaves),
+            )
+        else:
+            new_state = state
+        return out, new_state
+
     def _execute_flat(self, schedule, grads, state, step, axis_names):
         """Flat-bucket path (sparsifiers / sign / fp8): gather each selected
         bucket to a vector, run the wire stage, scatter back; classic EF
         residual' = t - sent_local."""
+        if self._arena_on():
+            return self._execute_flat_arena(
+                schedule, grads, state, step, axis_names
+            )
         plan = schedule.plan
         ef_on = self.ef is not None and _state_present(state)
         t = self.ef.compensated(grads, state, step) if ef_on else grads

@@ -14,6 +14,39 @@ def ef_update_ref(g, r, coeff, *, selected: bool):
     return jnp.zeros_like(t), t
 
 
+def pack_ef_cast_ref(g, r, coeff, *, selected: bool, wire_dtype=None):
+    """Fused pack + error feedback + wire cast (arena pack pass).
+
+    ``t = g + coeff * r`` (``r=None`` -> ``t = g``); for a *selected*
+    bucket the wire value is ``t`` cast to ``wire_dtype`` (identity when
+    ``None``) and the residual is the quantisation error ``t - cast(t)``
+    (zero without a cast); an *unselected* bucket sends nothing and keeps
+    the whole compensated gradient as its residual.
+
+    Every expression matches the legacy segmented path
+    (``stages.WireCast.execute_segment`` + ``stages.SyncPipeline._ef_segment``)
+    op-for-op — including the ``coeff * r.astype(g.dtype)`` promotion and
+    the ``coeff=None`` classic-EF plain add — so the jnp fallback is
+    bitwise-identical to arena-off.  Returns ``(wire, r_new)``; ``r_new``
+    is ``None`` when ``r`` is.
+    """
+    if r is None:
+        t = g
+    elif coeff is None:
+        t = g + r.astype(g.dtype)
+    else:
+        t = g + coeff * r.astype(g.dtype)
+    wd = jnp.dtype(wire_dtype) if wire_dtype is not None else None
+    if not selected:
+        zero = jnp.zeros_like(t if wd is None else t.astype(wd))
+        return zero, (t if r is not None else None)
+    if wd is None or t.dtype == wd:
+        return t, (jnp.zeros_like(t) if r is not None else None)
+    w = t.astype(wd)
+    rnew = t - w.astype(t.dtype)
+    return w, (rnew if r is not None else None)
+
+
 def quantize_fp8_ref(x, *, block: int = 8192):
     n = x.shape[0]
     pad = (-n) % block

@@ -162,17 +162,23 @@ def computation_multipliers(hlo_text: str) -> dict[str, int]:
     return {k: max(v, 0) for k, v in mult.items()}
 
 
-def collective_summary(hlo_text: str, trip_aware: bool = True) -> dict:
-    comps, entry = _split_computations(hlo_text)
+def _weighted_computations(hlo_text: str, trip_aware: bool):
+    """Yield ``(lines, multiplier)`` per computation — the shared scan
+    under :func:`collective_summary` and :func:`count_data_movement`
+    (multiplier = while-loop trip weighting, 1 for unreferenced)."""
+    comps, _ = _split_computations(hlo_text)
     mults = computation_multipliers(hlo_text) if trip_aware else {}
+    for name, lines in (comps.items() if comps else [("", hlo_text.splitlines())]):
+        m = mults.get(name, 1) if trip_aware else 1
+        yield lines, (m if m != 0 else 1)  # 0 = unreferenced (conservative)
+
+
+def collective_summary(hlo_text: str, trip_aware: bool = True) -> dict:
     by_kind: dict[str, dict] = {}
     total_ops = 0
     buffer_bytes = 0
     wire = 0
-    for name, lines in (comps.items() if comps else [("", hlo_text.splitlines())]):
-        m = mults.get(name, 1) if trip_aware else 1
-        if m == 0:
-            m = 1  # unreferenced (conservative)
+    for lines, m in _weighted_computations(hlo_text, trip_aware):
         for op in parse_collectives("\n".join(lines)):
             total_ops += m
             d = by_kind.setdefault(op.kind, {"count": 0, "bytes": 0})
@@ -314,6 +320,66 @@ def check_interleaving(hlo_text: str, *, min_bytes: int = 1024) -> InterleaveRep
         first_collective_pos=min(colls) if colls else -1,
         last_grad_pos=last_grad,
     )
+
+
+# ---------------------------------------------------------------------------
+# data-movement (copy-chain) accounting — the zero-copy arena gate (§12)
+# ---------------------------------------------------------------------------
+
+# the opcodes a gather/scatter bucket rebuild materialises as: explicit
+# copies, per-segment concatenates, and the dynamic-slice /
+# dynamic-update-slice chains of flat-vector splits.  Static `slice` ops
+# are intentionally NOT counted: an arena bucket view IS a slice, and XLA
+# serves it without touching HBM when it feeds a collective directly.
+DATA_MOVEMENT_OPS = frozenset(
+    {"copy", "concatenate", "dynamic-slice", "dynamic-update-slice"}
+)
+
+
+def count_data_movement(
+    hlo_text: str,
+    *,
+    ops: frozenset[str] | None = None,
+    trip_aware: bool = True,
+) -> dict:
+    """Count data-movement opcodes over every computation of a compiled
+    module (fusion bodies included; while-loop bodies weighted by trip
+    count like :func:`collective_summary`).
+
+    Returns ``{opcode: count, ..., "total": n}`` — the number the arena
+    gate compares between an arena-on and an arena-off build of the same
+    step: losing the per-segment concat/split chains must show up as
+    strictly fewer of these ops (``benchmarks.arena_check`` /
+    ``tests/test_arena.py``).
+    """
+    ops = DATA_MOVEMENT_OPS if ops is None else ops
+    out: dict[str, int] = {k: 0 for k in sorted(ops)}
+    total = 0
+    for lines, m in _weighted_computations(hlo_text, trip_aware):
+        for raw in lines:
+            s = raw.strip()
+            if "=" not in s:
+                continue
+            _, rhs = s.split("=", 1)
+            om = _OPCODE_RE.search(rhs)
+            if om and om.group(1) in ops:
+                out[om.group(1)] += m
+                total += m
+    out["total"] = total
+    return out
+
+
+def data_movement_delta(hlo_off: str, hlo_on: str) -> dict:
+    """Arena gate digest: data-movement counts of the legacy (``off``) vs
+    arena (``on``) build of one step, plus the delta.  ``delta["total"]``
+    must be positive for the arena claim to hold."""
+    off = count_data_movement(hlo_off)
+    on = count_data_movement(hlo_on)
+    return {
+        "off": off,
+        "on": on,
+        "delta": {k: off[k] - on[k] for k in off},
+    }
 
 
 # ---------------------------------------------------------------------------

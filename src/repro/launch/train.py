@@ -65,6 +65,10 @@ def main():
     ap.add_argument("--adaptive", action="store_true",
                     help="arm the adaptive runtime: re-plan the interval "
                          "online from measured CCR")
+    ap.add_argument("--arena", action="store_true",
+                    help="zero-copy gradient arena: statically-planned "
+                         "flat bucket buffers + fused pack/EF/cast pass "
+                         "(bitwise-equal payloads, fewer copies)")
     ap.add_argument("--history-out", default="")
     args = ap.parse_args()
     if args.interval == "adaptive":
@@ -84,7 +88,7 @@ def main():
     tc = TrainConfig(
         compressor=args.compressor, interval=interval,
         log_every=args.log_every, steps=args.steps,
-        overlap=args.overlap,
+        overlap=args.overlap, arena=args.arena,
     )
     tr = Trainer(model, opt, tc)
     print(f"[plan] {tr.plan.num_buckets} buckets, "

@@ -81,12 +81,21 @@ class TrainConfig:
     # comm with the remaining backward compute.  Segmented bucket pipelines
     # only (COVAP / none / fp16).
     overlap: str = "post"
+    # zero-copy gradient arena (core/arena.py, DESIGN.md §12): bucket
+    # payloads become static-offset views of per-phase flat planes — one
+    # pack pass per step (fused EF + wire cast), one collective per bucket
+    # over a contiguous slice, static-slice unpacks on the way back —
+    # instead of per-bucket concatenate / dynamic_slice rebuilds.
+    # Bitwise-equal to the default path for uniform-dtype models.
+    arena: bool = False
 
 
 def make_compressor(tc: TrainConfig) -> Compressor:
     opts = dict(tc.compressor_options)
     if tc.compressor == "covap":
         opts.setdefault("interval", tc.interval)
+    if tc.arena:
+        opts.setdefault("use_arena", True)
     return get_compressor(tc.compressor, **opts)
 
 

@@ -1,0 +1,441 @@
+"""Zero-copy gradient arena (core/arena.py, DESIGN.md §12): layout
+properties, pack→unpack bit-for-bit round-trips vs the concat/_split_like
+reference, arena-on == arena-off execute parity for every registered
+compressor, full-phase-cycle trainer parity (single-process and 8-worker
+CPU mesh), the fused pack kernel, and the HLO copy-count gate."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import arena as ar
+from repro.core import bucketing as bk
+from repro.core import build_plan, get_compressor
+from repro.core.compressors import available
+from repro.core.stages import _bucket_dtype, _split_like
+from repro.kernels import ref as kref
+from repro.kernels.pack_ef_cast import pack_ef_cast
+
+_SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def make_tree(shapes, dtypes=None):
+    dtypes = dtypes or [jnp.float32] * len(shapes)
+    key = jax.random.PRNGKey(7)
+    return {
+        f"leaf{i}": jax.random.normal(
+            jax.random.fold_in(key, i), s, jnp.float32
+        ).astype(d)
+        for i, (s, d) in enumerate(zip(shapes, dtypes))
+    }
+
+
+shape_strategy = st.lists(
+    st.one_of(
+        st.tuples(st.integers(1, 40)),
+        st.tuples(st.integers(1, 12), st.integers(1, 64)),
+        st.tuples(st.integers(1, 6), st.integers(1, 16), st.integers(1, 32)),
+    ),
+    min_size=1,
+    max_size=8,
+)
+
+
+# ---------------------------------------------------------------------------
+# layout properties
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(shapes=shape_strategy, interval=st.integers(1, 6),
+       bucket_kb=st.sampled_from([1, 4, 16]))
+def test_offsets_exactly_partition_buckets(shapes, interval, bucket_kb):
+    """Per bucket: segment offsets are ascending, back-to-back, and their
+    extents sum to the bucket's numel; per plane: bucket slots tile the
+    plane exactly (no gaps, no overlap)."""
+    tree = make_tree(shapes)
+    plan = build_plan(tree, bucket_bytes=bucket_kb * 1024, max_buckets=64,
+                      interval=interval)
+    layout = ar.build_layout(plan)
+    plane_cursor = [0] * len(layout.plane_dtypes)
+    for b in layout.buckets:
+        i = layout.index_of(b)
+        p, off, n = layout.slot(b)
+        assert off == plane_cursor[p], "bucket slots must tile the plane"
+        plane_cursor[p] += n
+        bucket = plan.buckets[b]
+        assert n == bucket.numel
+        cur = off
+        for seg, so in zip(bucket.segments, layout.seg_offsets[i]):
+            assert so == cur, "segments must be back-to-back"
+            cur += seg.numel(plan.leaf_shapes[seg.leaf_idx])
+        assert cur == off + n
+    assert plane_cursor == list(layout.plane_sizes)
+    assert layout.total_elements() == plan.total_numel()
+
+
+def test_dtype_promotion_matches_bucket_dtype():
+    """A mixed bf16+f32 bucket's plane dtype is exactly ``_bucket_dtype``'s
+    promotion (f32), and a pinned wire dtype overrides it."""
+    tree = make_tree(
+        [(8, 4), (8, 4), (6,)],
+        [jnp.bfloat16, jnp.float32, jnp.bfloat16],
+    )
+    plan = build_plan(tree, bucket_bytes=1 << 20, max_buckets=4, interval=1)
+    layout = ar.build_layout(plan)
+    for b in layout.buckets:
+        i = layout.index_of(b)
+        want = _bucket_dtype(plan, plan.buckets[b])
+        got = np.dtype(layout.plane_dtypes[layout.bucket_plane[i]])
+        assert got == want, (b, got, want)
+    pinned = ar.build_layout(plan, wire_dtype=jnp.bfloat16)
+    assert set(pinned.plane_dtypes) == {"bfloat16"}
+
+
+@settings(max_examples=20, deadline=None)
+@given(shapes=shape_strategy, interval=st.integers(1, 6))
+def test_pack_unpack_roundtrip_vs_concat_reference(shapes, interval):
+    """``pack_leaves`` + ``bucket_view`` is bitwise ``gather_bucket``;
+    ``unpack_bucket`` is bitwise ``_split_like``; ``gather_leaves`` of the
+    pieces reconstructs the exact leaves."""
+    tree = make_tree(shapes)
+    plan = build_plan(tree, bucket_bytes=2048, max_buckets=32,
+                      interval=interval)
+    leaves = jax.tree_util.tree_leaves(tree)
+    layout = ar.build_layout(plan)
+    planes = ar.pack_leaves(layout, leaves)
+    pieces = {}
+    for b, bucket in enumerate(plan.buckets):
+        flat_ref = bk.gather_bucket(plan, leaves, bucket)
+        view = layout.bucket_view(planes, b)
+        np.testing.assert_array_equal(np.asarray(view), np.asarray(flat_ref))
+        slices = [x for _, x in bk.segment_slices(plan, leaves, bucket)]
+        ref_pieces = _split_like(slices, flat_ref)
+        got_pieces = layout.unpack_bucket(b, view)
+        for gp, rp in zip(got_pieces, ref_pieces):
+            np.testing.assert_array_equal(np.asarray(gp), np.asarray(rp))
+        pieces[b] = got_pieces
+    rebuilt = ar.gather_leaves(
+        plan, lambda b, si, seg: pieces[b][si], leaves
+    )
+    for got, want in zip(rebuilt, leaves):
+        assert got.dtype == want.dtype
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_gather_leaves_fallback_on_noncontiguous_cover():
+    """A plan whose segment order breaks the ascending tiling must route
+    through the scatter fallback — including a wire-dtype (bf16) piece
+    cast back into an f32 leaf (``_update_segment`` casts)."""
+    import dataclasses
+
+    tree = {"a": jnp.ones((8, 4), jnp.float32)}
+    plan = build_plan(tree, bucket_bytes=64, max_buckets=8, interval=1)
+    assert plan.num_buckets >= 2
+    b = list(plan.buckets)
+    b[0], b[1] = (dataclasses.replace(b[1], index=0),
+                  dataclasses.replace(b[0], index=1))
+    plan2 = dataclasses.replace(plan, buckets=tuple(b))
+    assert ar.leaf_cover(plan2)[0] is None
+    leaves = [jnp.zeros((8, 4), jnp.float32)]
+    pieces = {
+        bi: [jnp.ones(ar.segment_shape(plan2, s), jnp.bfloat16)
+             for s in bkt.segments]
+        for bi, bkt in enumerate(plan2.buckets)
+    }
+    out = ar.gather_leaves(plan2, lambda b_, si, seg: pieces[b_][si], leaves)
+    assert out[0].dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(out[0]), 1.0)
+
+
+def test_leaf_cover_contiguous_for_arch_plans():
+    from repro.configs import get_reduced
+    from repro.models import build_model
+
+    for arch in ("gpt2-paper", "deepseek-moe-16b"):
+        cfg = get_reduced(arch)
+        shapes = jax.eval_shape(build_model(cfg).init, jax.random.PRNGKey(0))
+        plan = build_plan(shapes, bucket_bytes=1 << 13, max_buckets=64,
+                          interval=4)
+        cover = ar.leaf_cover(plan)
+        assert all(c is not None for c in cover), arch
+
+
+# ---------------------------------------------------------------------------
+# execute parity: arena-on == arena-off for all registered compressors
+# ---------------------------------------------------------------------------
+
+_COMP_OPTS = {
+    "covap": {"interval": 2},
+    "topk": {"ratio": 0.2},
+    "dgc": {},
+    "randomk": {"ratio": 0.2},
+    "oktopk": {"ratio": 0.2},
+    "fp8wire": {"block": 64},
+}
+
+
+@pytest.mark.parametrize("name", available())
+def test_arena_execute_parity_all_compressors(name):
+    """Two steps (residual feedback exercised) of every registered scheme:
+    synced gradients AND compressor state bit-for-bit arena-on vs off."""
+    opts = _COMP_OPTS.get(name, {})
+    tree = make_tree([(16, 8), (32, 4), (5,), ()])
+    grads = jax.tree.map(lambda x: x * 0.1, tree)
+    plan = build_plan(tree, bucket_bytes=256, max_buckets=8, interval=2)
+    ca = get_compressor(name, **opts, use_arena=True)
+    cb = get_compressor(name, **opts)
+    sa, sb = ca.init_state(tree, plan), cb.init_state(tree, plan)
+    for step in range(2):
+        outa, sa, _ = ca.execute(ca.plan_phase(plan, step % 2), grads, sa,
+                                 step=step)
+        outb, sb, _ = cb.execute(cb.plan_phase(plan, step % 2), grads, sb,
+                                 step=step)
+        for x, y in zip(jax.tree.leaves((outa, sa)),
+                        jax.tree.leaves((outb, sb))):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_arena_execute_parity_wire_cast():
+    """The bf16 wire-cast path: quantisation-error residual bit-for-bit."""
+    tree = make_tree([(16, 8), (32, 4)])
+    grads = jax.tree.map(lambda x: x * 0.1, tree)
+    plan = build_plan(tree, bucket_bytes=256, max_buckets=8, interval=2)
+    for name, opts in (("fp16", {}),
+                       ("covap", {"interval": 2, "wire_dtype": "bfloat16"})):
+        ca = get_compressor(name, **opts, use_arena=True)
+        cb = get_compressor(name, **opts)
+        sa, sb = ca.init_state(tree, plan), cb.init_state(tree, plan)
+        for step in range(3):
+            outa, sa, _ = ca.execute(ca.plan_phase(plan, step % 2), grads,
+                                     sa, step=step)
+            outb, sb, _ = cb.execute(cb.plan_phase(plan, step % 2), grads,
+                                     sb, step=step)
+            for x, y in zip(jax.tree.leaves((outa, sa)),
+                            jax.tree.leaves((outb, sb))):
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# trainer parity: full phase cycle, post and fused overlap
+# ---------------------------------------------------------------------------
+
+def _train(compressor, overlap, arena, steps=5):
+    from repro.configs import get_reduced
+    from repro.data import DataConfig, make_loader
+    from repro.models import build_model
+    from repro.optim import adamw
+    from repro.train.trainer import TrainConfig, Trainer
+
+    cfg = get_reduced("gpt2-paper").with_(vocab_size=256)
+    model = build_model(cfg)
+    tc = TrainConfig(
+        compressor=compressor, interval=4, bucket_bytes=1 << 14,
+        max_buckets=32, log_every=10 ** 9, overlap=overlap, arena=arena,
+    )
+    tr = Trainer(model, adamw(3e-3), tc)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8,
+                    corpus_tokens=1 << 14)
+    loader = iter(make_loader(dc))
+    for _ in range(steps):
+        batch = next(loader)
+        fn = tr._phase_fn(state["step"] % tr.num_phases)
+        p, o, c, m = fn(state["params"], state["opt"], state["comp"], batch,
+                        jnp.int32(state["step"]))
+        state = {"params": p, "opt": o, "comp": c, "step": state["step"] + 1}
+    return state
+
+
+def _assert_tree_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("compressor", ["covap", "none", "fp16"])
+@pytest.mark.parametrize("overlap", ["post", "fused"])
+def test_arena_equals_legacy_full_cycle(compressor, overlap):
+    """Full covap cycle (4 phases) + 1: params AND EF residuals bit-for-bit
+    arena-on vs arena-off, on both overlap paths."""
+    base = _train(compressor, "post", arena=False)
+    got = _train(compressor, overlap, arena=True)
+    _assert_tree_equal(base["params"], got["params"])
+    _assert_tree_equal(base["comp"], got["comp"])
+
+
+_MESH_SUB = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.configs import get_reduced
+from repro.data import DataConfig, make_loader
+from repro.models import build_model
+from repro.optim import adamw
+from repro.train.trainer import TrainConfig, Trainer
+
+mesh = Mesh(np.array(jax.devices()[:8]), ("data",))
+cfg = get_reduced("gpt2-paper").with_(vocab_size=256)
+model = build_model(cfg)
+
+def run(overlap, arena, compressor, steps=5):
+    tc = TrainConfig(compressor=compressor, interval=4, bucket_bytes=1 << 14,
+                     max_buckets=32, log_every=10 ** 9, overlap=overlap,
+                     arena=arena)
+    tr = Trainer(model, adamw(3e-3), tc, mesh=mesh, dp_axes=("data",))
+    state = tr.init_state(jax.random.PRNGKey(0))
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8,
+                    corpus_tokens=1 << 14)
+    loader = iter(make_loader(dc))
+    for _ in range(steps):
+        batch = next(loader)
+        fn = tr._phase_fn(state["step"] % tr.num_phases)
+        p, o, c, m = fn(state["params"], state["opt"], state["comp"], batch,
+                        jnp.int32(state["step"]))
+        state = {"params": p, "opt": o, "comp": c,
+                 "step": state["step"] + 1}
+    return state
+
+for compressor in ("covap", "none", "fp16"):
+    base = run("post", False, compressor)
+    for overlap in ("post", "fused"):
+        got = run(overlap, True, compressor)
+        for x, y in zip(jax.tree.leaves((base["params"], base["comp"])),
+                        jax.tree.leaves((got["params"], got["comp"]))):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    print(compressor, "EQUAL")
+"""
+
+
+def test_arena_equals_legacy_on_cpu_mesh():
+    """The acceptance criterion: arena-on == arena-off bit-for-bit (params
+    AND EF residuals) over a full phase cycle on an 8-worker CPU mesh, for
+    covap/none/fp16, post and fused."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_MESH_SUB)],
+        capture_output=True, text=True, timeout=560, env=env,
+    )
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
+    assert r.stdout.count("EQUAL") == 3
+
+
+# ---------------------------------------------------------------------------
+# fused pack kernel
+# ---------------------------------------------------------------------------
+
+def test_pack_kernel_matches_ref():
+    key = jax.random.PRNGKey(3)
+    g = jax.random.normal(key, (1000,), jnp.float32)
+    r = jax.random.normal(jax.random.fold_in(key, 1), (1000,), jnp.float32)
+    coeff = jnp.float32(0.7)
+    for selected in (True, False):
+        for wd in (None, "bfloat16", "float16"):
+            w, rn = pack_ef_cast(g, r, coeff, selected=selected,
+                                 wire_dtype=wd, block=256)
+            wr, rr = kref.pack_ef_cast_ref(g, r, coeff, selected=selected,
+                                           wire_dtype=wd)
+            assert w.dtype == wr.dtype
+            np.testing.assert_allclose(
+                np.asarray(w, np.float32), np.asarray(wr, np.float32),
+                rtol=1e-6, atol=1e-6,
+            )
+            np.testing.assert_allclose(np.asarray(rn), np.asarray(rr),
+                                       rtol=1e-5, atol=1e-5)
+
+
+def test_pack_kernel_bitwise_on_exact_products():
+    """Where c*r is exactly representable the FMA and the 2-op form agree
+    bitwise (same convention as the ef_covap kernel)."""
+    g = jnp.arange(512, dtype=jnp.float32)
+    r = jnp.full((512,), 0.5, jnp.float32)
+    for wd in (None, "bfloat16"):
+        w, rn = pack_ef_cast(g, r, jnp.float32(1.0), selected=True,
+                             wire_dtype=wd, block=128)
+        wr, rr = kref.pack_ef_cast_ref(g, r, jnp.float32(1.0), selected=True,
+                                       wire_dtype=wd)
+        np.testing.assert_array_equal(np.asarray(w, np.float32),
+                                      np.asarray(wr, np.float32))
+        np.testing.assert_array_equal(np.asarray(rn), np.asarray(rr))
+
+
+def test_pack_ref_matches_legacy_segment_ops():
+    """The ref pack IS the legacy ``_ef_segment`` + ``execute_segment``
+    op sequence: compensate, cast, quantisation-error residual."""
+    key = jax.random.PRNGKey(9)
+    g = jax.random.normal(key, (257,), jnp.float32)
+    r = jax.random.normal(jax.random.fold_in(key, 1), (257,), jnp.float32)
+    coeff = jnp.float32(0.3)
+    t = g + coeff * r
+    # no cast, selected: wire = t, residual = 0
+    w, rn = kref.pack_ef_cast_ref(g, r, coeff, selected=True, wire_dtype=None)
+    np.testing.assert_array_equal(np.asarray(w), np.asarray(t))
+    np.testing.assert_array_equal(np.asarray(rn), 0.0)
+    # bf16 cast, selected: wire = t.astype(bf16), residual = t - wire
+    w, rn = kref.pack_ef_cast_ref(g, r, coeff, selected=True,
+                                  wire_dtype=jnp.bfloat16)
+    xw = t.astype(jnp.bfloat16)
+    np.testing.assert_array_equal(np.asarray(w, np.float32),
+                                  np.asarray(xw, np.float32))
+    np.testing.assert_array_equal(np.asarray(rn),
+                                  np.asarray(t - xw.astype(t.dtype)))
+    # unselected: residual carries the whole compensated gradient
+    _, rn = kref.pack_ef_cast_ref(g, r, coeff, selected=False, wire_dtype=None)
+    np.testing.assert_array_equal(np.asarray(rn), np.asarray(t))
+
+
+def test_pack_fused_speedup_gate():
+    """kernel_bench's pack case: the fused single-pass pack must beat the
+    unfused triple-materialisation path by >= 1.5x on CPU (measured ~4x;
+    best-of-two to absorb CI jitter)."""
+    from benchmarks.kernel_bench import run as kb_run
+
+    def speedup():
+        rows = {name: derived for name, _, derived in kb_run(smoke=True)}
+        d = rows["kernel/pack_unfused"]
+        return float(d.split("speedup_fused=")[1])
+
+    s = speedup()
+    if s < 1.5:
+        s = max(s, speedup())
+    assert s >= 1.5, f"fused pack speedup {s:.2f}x < 1.5x"
+
+
+# ---------------------------------------------------------------------------
+# HLO copy-count gate
+# ---------------------------------------------------------------------------
+
+def test_hlo_gate_fewer_copies_than_concat_path():
+    """The arena build of one execute phase must issue strictly fewer
+    data-movement ops than the legacy path, with the per-segment
+    dynamic-update-slice chains gone entirely (pre-optimisation HLO —
+    what the traced program asks of the compiler)."""
+    from repro.launch.hlo_analysis import count_data_movement
+
+    tree = make_tree([(24, 16), (24, 16), (16, 8), (40,)])
+    grads = jax.tree.map(lambda x: x * 0.1, tree)
+    plan = build_plan(tree, bucket_bytes=1024, max_buckets=16, interval=2)
+
+    def lowered(name, use_arena, **opts):
+        comp = get_compressor(name, **opts, use_arena=use_arena)
+        state = comp.init_state(tree, plan)
+        sched = comp.plan_phase(plan, 0)
+
+        def f(g, s):
+            out, ns, _ = comp.execute(sched, g, s, step=1)
+            return out, ns
+
+        return jax.jit(f).lower(grads, state).as_text(dialect="hlo")
+
+    for name, opts in (("covap", {"interval": 2}), ("topk", {"ratio": 0.1})):
+        off = count_data_movement(lowered(name, False, **opts))
+        on = count_data_movement(lowered(name, True, **opts))
+        assert on["total"] < off["total"], (name, off, on)
+        assert on["dynamic-update-slice"] == 0, (name, on)

@@ -24,6 +24,17 @@ PARITY_ARCHS = [
 @pytest.mark.parametrize("arch", PARITY_ARCHS)
 def test_decode_matches_prefill(arch):
     cfg = get_reduced(arch)
+    if cfg.num_experts > 0:
+        # MoE capacity dropping is BATCH-SIZE dependent: prefill routes
+        # B*S tokens competing for C = ceil(N*k/E * cf) slots per expert
+        # while decode routes B tokens per call, so with a tight capacity
+        # factor prefill drops assignments decode keeps (~11% of logits
+        # off by O(1) at the seed's cf=1.25) — an inherent property of
+        # GShard/Switch semantics, not a cache bug.  Parity is exact
+        # whenever nothing is dropped, so this test pins the cache/scan
+        # machinery under the drop-free capacity cf = E (worst case: all
+        # N*k assignments land on one expert).
+        cfg = cfg.with_(moe_capacity_factor=float(cfg.num_experts))
     model = build_model(cfg)
     key = jax.random.PRNGKey(0)
     params = model.init(key)
