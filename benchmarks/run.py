@@ -33,6 +33,7 @@ from . import (
     fig11_scaling,
     kernel_bench,
     overlap_check,
+    sharded_check,
     table1_ccr,
     table2_overhead,
     table3_gc_overlap,
@@ -53,6 +54,7 @@ MODULES = {
     "adaptive": adaptive_runtime,
     "overlap": overlap_check,
     "arena": arena_check,
+    "sharded": sharded_check,
 }
 
 # fast modules only: no training loops, no heavy jit — the CI smoke gate.
@@ -61,9 +63,12 @@ MODULES = {
 # HLO interleaving gate (compiles ONE fused step on an 8-worker CPU mesh
 # and fails unless collectives are scheduled inside the backward pass);
 # "arena" is the zero-copy gate (fails unless the arena build issues fewer
-# data-movement ops than the concat path).
+# data-movement ops than the concat path); "sharded" is the sharded-sync
+# placement gate (fails unless the compiled sharded step reduce-scatters
+# before the final gradient fusion with the deferred param all-gathers at
+# the step head, and the exposed wire bytes are <= 0.6x all-reduce).
 SMOKE_MODULES = ("table1", "table3", "table5", "fig5", "fig11", "kernels",
-                 "adaptive", "overlap", "arena")
+                 "adaptive", "overlap", "arena", "sharded")
 
 _REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
@@ -98,6 +103,15 @@ def build_snapshot(all_rows: list[tuple]) -> dict:
     pack_us = kernel_rows.get("kernel/pack_fused", (None, ""))[0]
     m = re.search(r"speedup_fused=([\d.]+)",
                   kernel_rows.get("kernel/pack_unfused", (0, ""))[1])
+    # sharded-sync gate results (benchmarks/sharded_check.py): the
+    # schedule-level exposed-bytes ratio vs all-reduce and the compiled
+    # placement counts, recorded alongside the existing fields
+    sharded_rows = {name: derived for name, _, derived in all_rows
+                    if name.startswith("sharded/")}
+    ms = re.search(r"ratio=([\d.]+)",
+                   sharded_rows.get("sharded/exposed_ratio", ""))
+    mp = re.search(r"rs_before_final_grad=(\d+)",
+                   sharded_rows.get("sharded/placement", ""))
     return {
         "schema": 1,
         "unix_time": int(time.time()),
@@ -110,6 +124,8 @@ def build_snapshot(all_rows: list[tuple]) -> dict:
         "pack_overhead_us_modeled": tune_row["pack_overhead_us"],
         "pack_kernel_us": pack_us,
         "pack_fused_speedup": float(m.group(1)) if m else None,
+        "sharded_exposed_ratio": float(ms.group(1)) if ms else None,
+        "sharded_rs_before_final_grad": int(mp.group(1)) if mp else None,
     }
 
 

@@ -16,15 +16,19 @@ if [[ "$what" == "all" || "$what" == "tests" ]]; then
 fi
 
 if [[ "$what" == "all" || "$what" == "bench" ]]; then
-    echo "== smoke benchmarks (incl. HLO overlap + arena copy-count gates) =="
-    # the smoke set contains two HLO gates: "overlap" compiles one fused
+    echo "== smoke benchmarks (incl. HLO overlap + arena + sharded gates) =="
+    # the smoke set contains three HLO gates: "overlap" compiles one fused
     # COVAP step on an 8-worker CPU mesh and FAILS unless the compiled
     # module schedules bucket collectives inside the backward pass;
     # "arena" lowers the covap/topk execute paths arena-off vs arena-on
     # and FAILS unless the arena build issues fewer data-movement ops
-    # (and zero per-segment update-slice chains).  A BENCH_<n>.json perf
-    # snapshot (step wall time, bytes/worker, overlap frac, pack-kernel
-    # µs) is written to the repo root on every smoke run.
+    # (and zero per-segment update-slice chains); "sharded" compiles one
+    # sharded step and FAILS unless reduce-scatters precede the final
+    # gradient fusion with the deferred param all-gathers at the step
+    # head, and exposed wire bytes <= 0.6x all-reduce.  A BENCH_<n>.json
+    # perf snapshot (step wall time, bytes/worker, overlap frac,
+    # pack-kernel µs, sharded exposed ratio) is written to the repo root
+    # on every smoke run.
     python -m benchmarks.run --smoke > /dev/null
     echo "smoke benchmarks OK"
 fi

@@ -200,6 +200,7 @@ def fit(
     autotune=None,
     overlap: str = "post",
     arena: bool = False,
+    sync: str = "allreduce",
 ) -> FitResult:
     """Train ``arch`` with a GC scheme; ``interval="auto"`` applies the
     paper's ``I = ceil(CCR)`` from the analytic profiler end-to-end.
@@ -223,7 +224,16 @@ def fit(
     bucket payloads become static-offset views of statically-planned flat
     buffers, packed once per step by the fused pack/EF/cast pass —
     bitwise-equal results with the per-bucket gather/scatter copies gone;
-    composes with both overlap modes."""
+    composes with both overlap modes.
+
+    ``sync="sharded"`` swaps each selected bucket's all-reduce for a
+    reduce-scatter + deferred param all-gather (DESIGN.md §13): the
+    optimizer's meaningful updates land on the local 1/W shard and the
+    gather of updated params rides the NEXT step's forward pass, halving
+    the communication exposed behind the backward pass.  Segmented bucket
+    compressors only (covap/none/fp16); composes with both overlap modes
+    and the arena; parity with ``"allreduce"`` is pinned bit-for-bit
+    (tests/test_sharded_sync.py)."""
     cfg = _config(arch, reduced=reduced, vocab_size=vocab_size)
     model = build_model(cfg)
     dp_world = dp_workers
@@ -245,6 +255,7 @@ def fit(
         log_every=log_every,
         overlap=overlap,
         arena=arena,
+        sync=sync,
     )
     tr = Trainer(
         model, _optimizer(optimizer, lr, steps), tc,
@@ -285,20 +296,22 @@ def plan_report(
     bucket_bytes: int = 1 << 14,
     max_buckets: int = 32,
     hw: HardwareSpec | None = None,
+    sync: str = "allreduce",
 ) -> dict:
     """Everything static about a run — interval resolution, per-phase
     ``CommSchedule``s, analytic step times, residual CCR — computed without
-    tracing or compiling anything."""
+    tracing or compiling anything.  ``sync="sharded"`` reports the
+    reduce-scatter decomposition's exposed/deferred byte split per phase."""
     hw = hw or HardwareSpec.cloud_v100_30gbps()
     cfg, choice, plan, times = _static_setup(
         arch, reduced=reduced, interval=interval, seq_len=seq_len,
         global_batch=global_batch, dp_workers=dp_workers,
         bucket_bytes=bucket_bytes, max_buckets=max_buckets, hw=hw,
     )
-    comp = get_compressor(
-        compressor, **_compressor_opts(compressor, compressor_options,
-                                       choice.interval)
-    )
+    opts = _compressor_opts(compressor, compressor_options, choice.interval)
+    if sync != "allreduce":
+        opts.setdefault("sync", sync)
+    comp = get_compressor(compressor, **opts)
     schedules = plan_all_phases(comp, plan, world=dp_workers)
     return {
         "arch": cfg.name,

@@ -87,6 +87,14 @@ class ArenaLayout:
     bucket_offsets: tuple[int, ...]
     bucket_numels: tuple[int, ...]
     seg_offsets: tuple[tuple[int, ...], ...]
+    # slot alignment (sharded sync, DESIGN.md §13): every bucket slot's
+    # extent is rounded up to a multiple of ``align`` so the slot view is
+    # evenly partitionable into W = align worker shards for a
+    # reduce-scatter.  ``bucket_numels`` holds the PADDED extents; the
+    # zero-filled tail of a slot (extent - bucket.numel elements) is packed
+    # by ``assemble``, reduced like real payload, and ignored by
+    # ``unpack_bucket`` (segment offsets address only real elements).
+    align: int = 1
 
     def __post_init__(self):
         object.__setattr__(
@@ -145,6 +153,9 @@ class ArenaLayout:
                     f"bucket {b}: {len(vals)} pieces for {len(segs)} segments"
                 )
             per_plane[p].extend(v.reshape(-1).astype(dt) for v in vals)
+            pad = self.bucket_numels[i] - self.plan.buckets[b].numel
+            if pad:
+                per_plane[p].append(jnp.zeros(pad, dt))
         return [
             jnp.concatenate(vs)
             if vs else jnp.zeros(0, np.dtype(self.plane_dtypes[p]))
@@ -168,23 +179,37 @@ class ArenaLayout:
         return out
 
 
+def aligned_numel(numel: int, align: int) -> int:
+    """Slot extent of a bucket under W-aligned padding — the element count
+    that actually crosses the wire on the sharded path (planner-side
+    counterpart of ``build_layout(align=)``)."""
+    align = max(int(align), 1)
+    return -(-int(numel) // align) * align
+
+
 def build_layout(
     plan: BucketPlan,
     selected: Iterable[int] | None = None,
     *,
     wire_dtype: Any = None,
+    align: int = 1,
 ) -> ArenaLayout:
     """Compute the static arena layout for ``selected`` buckets (default:
     every bucket) — pure Python over plan metadata, no tracing.
 
     ``wire_dtype`` pins every bucket's element type (the ``WireCast`` cast
     path); otherwise each bucket uses its promoted :func:`bucket_dtype`.
+    ``align`` (sharded sync) rounds every slot's extent up to a multiple —
+    pass the DP world size so each slot partitions evenly into worker
+    shards for a reduce-scatter; the padding is zero-filled tail elements
+    that never map to a segment.
     """
     if selected is None:
         covered = list(range(plan.num_buckets))
     else:
         covered = sorted(dict.fromkeys(int(b) for b in selected))
     wd = np.dtype(wire_dtype) if wire_dtype is not None else None
+    align = max(int(align), 1)
 
     plane_of: dict[str, int] = {}
     plane_dtypes: list[str] = []
@@ -211,11 +236,12 @@ def build_layout(
             cur += seg.numel(plan.leaf_shapes[seg.leaf_idx])
         extent = cur - off
         assert extent == bucket.numel, (extent, bucket.numel)
+        extent = -(-extent // align) * align  # W-aligned slot (zero tail)
         bucket_plane.append(p)
         bucket_offsets.append(off)
         bucket_numels.append(extent)
         seg_offsets.append(tuple(offs))
-        plane_sizes[p] = cur
+        plane_sizes[p] = off + extent
 
     return ArenaLayout(
         plan=plan,
@@ -226,6 +252,7 @@ def build_layout(
         bucket_offsets=tuple(bucket_offsets),
         bucket_numels=tuple(bucket_numels),
         seg_offsets=tuple(seg_offsets),
+        align=align,
     )
 
 
@@ -364,6 +391,7 @@ def gather_leaves(
 
 __all__ = [
     "ArenaLayout",
+    "aligned_numel",
     "bucket_dtype",
     "build_layout",
     "gather_leaves",

@@ -104,6 +104,64 @@ def all_gather(x: jax.Array, axis_names: Sequence[str]) -> jax.Array:
     return g
 
 
+def flat_axis_index(axis_names: Sequence[str]):
+    """Row-major flat worker index over (possibly multiple) named axes —
+    the shard-ownership index of the sharded sync path (worker ``w`` owns
+    shard ``w`` of every bucket slot)."""
+    idx = lax.axis_index(axis_names[0])
+    for ax in axis_names[1:]:
+        idx = idx * axis_size(ax) + lax.axis_index(ax)
+    return idx
+
+
+def reduce_scatter(
+    x: jax.Array, axis_names: Sequence[str], *, mean: bool = True
+) -> jax.Array:
+    """Reduce-scatter a flat vector over the DP axes: worker ``w`` receives
+    the reduced shard ``x[w*S:(w+1)*S]`` (``S = len(x) // W``; the caller
+    pads to a W-divisible length — ``arena.build_layout(align=W)``).
+
+    The mean divides the summed shard by ``W`` *after* the collective —
+    elementwise the exact op order of ``pmean`` (sum, then divide), so the
+    owned shard is bitwise what the all-reduce path computes.  The same
+    ``REPRO_PSUM_PROMOTE_BF16`` guard applies: XLA's CPU backend mishandles
+    narrow-dtype reduction computations, so bf16 operands are promoted to
+    f32 around the collective on the dry-run backend (TPU keeps bf16 on
+    the wire).  With no axes this is the identity (single-worker mode).
+    """
+    if not axis_names:
+        return x
+    axes = tuple(axis_names)
+
+    W = 1
+    for a in axes:
+        W *= axis_size(a)
+
+    def op(v, names):
+        s = lax.psum_scatter(v, names, scatter_dimension=0, tiled=True)
+        if mean:
+            s = s / jnp.asarray(W, v.dtype)
+        return s
+
+    if x.dtype == jnp.bfloat16 and _promote_bf16():
+        return op(x.astype(jnp.float32), axes).astype(jnp.bfloat16)
+    return op(x, axes)
+
+
+def all_gather_tiled(x: jax.Array, axis_names: Sequence[str]) -> jax.Array:
+    """Concatenating all-gather of per-worker shards along axis 0 — the
+    inverse of :func:`reduce_scatter`'s scatter (worker order matches
+    :func:`flat_axis_index`).  Pure data movement, so no dtype promotion is
+    needed (the bf16 CPU guard exists for *reduction* computations only).
+    Identity with no axes."""
+    if not axis_names:
+        return x
+    g = x
+    for ax in reversed(tuple(axis_names)):
+        g = lax.all_gather(g, ax, tiled=True)
+    return g
+
+
 class Compressor:
     """Base class.  Subclasses set ``name`` and implement the plan/execute
     pair (``plan_phase`` + ``execute``); ``sync`` composes the two."""

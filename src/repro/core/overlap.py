@@ -60,6 +60,77 @@ def supports_fused_overlap(compressor) -> bool:
     )
 
 
+def supports_sharded_sync(compressor) -> bool:
+    """Sharded sync (reduce-scatter + deferred param all-gather, DESIGN.md
+    §13) has the same structural requirement as fused overlap: a segmented
+    bucket pipeline whose wire payload is a dense slot view the collective
+    can partition evenly.  Value+index exchanges (top-k / sign / fp8
+    gathers) and leaf-granularity schemes have no W-divisible dense buffer
+    to scatter and stay on ``sync="allreduce"``."""
+    return supports_fused_overlap(compressor)
+
+
+def sharded_param_allgather(
+    pipeline: SyncPipeline,
+    schedule: CommSchedule,
+    params: Any,
+    *,
+    axis_names: Sequence[str] = (),
+) -> Any:
+    """The deferred half of sharded sync: freshen EVERY bucket's parameters
+    from their owners' updated shards (``schedule.deferred_calls``).
+
+    After a sharded step, worker ``w``'s parameters are authoritative only
+    on the shards ``w`` owns: for buckets selected that phase the owner
+    applied the reduce-scattered gradient, and for every other
+    once-selected bucket the optimizer's moment decay still moved the
+    params — correctly only where the moments themselves are
+    authoritative, i.e. on the owned shard again.  So the gather covers
+    the whole plan, exactly like ZeRO's per-step parameter all-gather,
+    not just the previous phase's selected buckets.  (Before a bucket's
+    first selection its moments are zero and every worker computes the
+    identical zero update, which is why the full-coverage gather is
+    correct from step 0 — it rebroadcasts values that already agree.)
+
+    Each bucket's param segments are packed into its W-aligned slot
+    (promoted bucket dtype — params go on the wire uncompressed), the
+    locally-owned shard sliced out, the shards all-gathered
+    (``comm.all_gather_tiled``), and the leaves rebuilt with
+    ``arena.gather_leaves``.
+
+    Issued at the HEAD of the step — before the forward pass touches any
+    parameter — so XLA's latency-hiding scheduler can overlap the gathers
+    with forward compute; that placement is what makes the AG half of the
+    schedule's bytes *deferred* rather than exposed.  Identity with no
+    axes (single worker).
+    """
+    from . import arena as ar
+    from .comm import all_gather_tiled, axis_size, flat_axis_index
+
+    if not axis_names or schedule.plan is None:
+        return params
+    plan = schedule.plan
+    W = 1
+    for a in axis_names:
+        W *= axis_size(a)
+    layout = ar.build_layout(plan, align=W)
+    treedef = jax.tree_util.tree_structure(params)
+    leaves = jax.tree_util.tree_leaves(params)
+    planes = ar.pack_leaves(layout, leaves)
+    w_idx = flat_axis_index(axis_names)
+    fresh_pieces = {}
+    for b in range(plan.num_buckets):
+        view = layout.bucket_view(planes, b)
+        S = view.shape[0] // W
+        shard = jax.lax.dynamic_slice_in_dim(view, w_idx * S, S)
+        full = all_gather_tiled(shard, axis_names)
+        fresh_pieces[b] = layout.unpack_bucket(b, full)
+    out_leaves = ar.gather_leaves(
+        plan, lambda b, si, seg: fresh_pieces[b][si], leaves
+    )
+    return jax.tree_util.tree_unflatten(treedef, out_leaves)
+
+
 def _assert_full_coverage(plan: bk.BucketPlan) -> None:
     """Every leaf element must be owned by exactly one bucket segment —
     otherwise some gradient would bypass the hooks unsynced."""
@@ -225,5 +296,7 @@ def overlapped_loss_and_grads(
 __all__ = [
     "install_hooks",
     "overlapped_loss_and_grads",
+    "sharded_param_allgather",
     "supports_fused_overlap",
+    "supports_sharded_sync",
 ]

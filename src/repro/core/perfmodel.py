@@ -233,7 +233,14 @@ def simulate_schedule(
     ``t_pack`` is the arena pack pass (:func:`pack_overhead_s`): like
     ``t_compress`` it rides on the compute lane, spread over buckets
     proportionally — each bucket's slot is packed right before its
-    collective can issue."""
+    collective can issue.
+
+    Sharded schedules (``schedule.sync == "sharded"``): the per-bucket
+    backward timeline carries only the reduce-scatter half
+    (``schedule.calls``); the deferred param all-gathers ride the NEXT
+    step's forward pass, so they are exposed only to the extent they
+    exceed ``t_before`` — the result gains ``deferred_comm`` and folds the
+    uncovered remainder into ``exposed_comm``/``total``."""
     plan = schedule.plan
     numels = plan.bucket_numels()
     total = sum(numels) or 1
@@ -247,7 +254,7 @@ def simulate_schedule(
         comm = [comm[b] for b in order]
     if data_dependency:
         t = t_before + sum(comp) + sum(comm)
-        return {
+        sim = {
             "total": t,
             "compute_end": t_before + sum(comp),
             "comm_end": t,
@@ -255,7 +262,20 @@ def simulate_schedule(
             "exposed_comm": sum(comm),
             "comm_total": float(sum(comm)),
         }
-    return simulate_overlap(t_before, comp, comm)
+    else:
+        sim = simulate_overlap(t_before, comp, comm)
+    deferred = getattr(schedule, "deferred_wire_bytes", None)
+    t_deferred = deferred(world) / link_bw if deferred is not None else 0.0
+    if t_deferred > 0.0:
+        # the AG half hides under the forward pass (t_before) of the next
+        # step; only the uncovered remainder extends the step
+        uncovered = max(0.0, t_deferred - t_before)
+        sim = dict(sim)
+        sim["deferred_comm"] = t_deferred
+        sim["exposed_comm"] = sim["exposed_comm"] + uncovered
+        sim["comm_total"] = sim["comm_total"] + t_deferred
+        sim["total"] = sim["total"] + uncovered
+    return sim
 
 
 def cycle_speedup(

@@ -39,10 +39,15 @@ class CollectiveCall:
     """
 
     target: str                # "bucket:3" | "leaf:2" | "pod-bucket:1"
-    op: str                    # "all_reduce" | "all_gather" | "all_to_all"
+    op: str                    # "all_reduce" | "reduce_scatter" | "all_gather" | "all_to_all"
     wire_dtype: str            # numpy dtype name of the wire payload
     payload_bytes: int
     index_bytes: int = 0
+    # a deferred call is planned in this phase but issued at the HEAD of the
+    # next step so it overlaps the forward pass (sharded sync's param
+    # all-gather, DESIGN.md §13) — it never contributes to the phase's
+    # *exposed* communication behind the backward pass.
+    deferred: bool = False
 
     @property
     def bytes_per_worker(self) -> int:
@@ -51,13 +56,22 @@ class CollectiveCall:
     def wire_bytes(self, world: int) -> float:
         """Bytes one worker actually moves for this call under the standard
         ring algorithms (paper SS II): all-reduce moves ``2(W-1)/W`` of the
-        buffer, an all-gather re-sends the local shard ``W-1`` times, an
-        all-to-all keeps ``1/W`` local."""
+        buffer, a reduce-scatter moves ``(W-1)/W`` of the buffer it feeds
+        in, an all-gather re-sends the local shard ``W-1`` times, an
+        all-to-all keeps ``1/W`` local.
+
+        Note the conventions per op: ``payload_bytes`` of a reduce-scatter
+        is the FULL per-worker input buffer (of which the worker keeps
+        ``1/W``), while an all-gather's is the LOCAL shard the worker
+        contributes — matching the per-worker *injected* bytes the HLO
+        parser reproduces (``launch.hlo_analysis``)."""
         if world <= 1:
             return 0.0
         b = float(self.bytes_per_worker)
         if self.op == "all_reduce":
             return 2.0 * (world - 1) / world * b
+        if self.op == "reduce_scatter":
+            return (world - 1) / world * b
         if self.op == "all_gather":
             return (world - 1) * b
         if self.op == "all_to_all":
@@ -89,13 +103,58 @@ class CommSchedule:
     # 0 is the first collective whose operand gradient lands.  Empty for
     # planners that predate the overlap engine (treated as plan order).
     ready_ranks: tuple[int, ...] = ()
+    # collective decomposition: "allreduce" (one all-reduce per bucket) or
+    # "sharded" (reduce-scatter the gradient, optimizer on the local shard,
+    # deferred all-gather of updated params at the next step's head —
+    # DESIGN.md §13).
+    sync: str = "allreduce"
+    # the deferred half of sharded sync: the param all-gathers issued at
+    # the HEAD of the next step, where they overlap the forward pass
+    # instead of extending this phase's sync tail.  They cover EVERY plan
+    # bucket, not just this phase's selected ones: any bucket that was ever
+    # selected keeps moving under the optimizer's moment decay, and only
+    # the shard owner holds its authoritative values.  Kept separate from
+    # ``calls`` so ``bytes_per_worker`` remains exactly what ``execute``'s
+    # compiled HLO shows (the RS half); the AG half cross-checks against
+    # the head/flush program.
+    deferred_calls: tuple[CollectiveCall, ...] = ()
 
     # ---- byte accounting --------------------------------------------------
     @property
     def bytes_per_worker(self) -> int:
-        """Exact bytes each worker injects this phase — the number the HLO
-        collective parser must reproduce (tests/test_hlo_and_specs.py)."""
+        """Exact bytes each worker injects inside ``execute`` this phase —
+        the number the HLO collective parser must reproduce
+        (tests/test_hlo_and_specs.py).  Excludes ``deferred_calls`` (issued
+        by the trainer at the next step's head)."""
         return sum(c.bytes_per_worker for c in self.calls)
+
+    @property
+    def exposed_bytes_per_worker(self) -> int:
+        """Bytes whose collective must complete before the optimizer can
+        step — the RS half under ``sync="sharded"``, everything under
+        ``"allreduce"``."""
+        return self.bytes_per_worker
+
+    @property
+    def deferred_bytes_per_worker(self) -> int:
+        """Bytes of the deferred param all-gathers (sharded sync) — they
+        ride the next step's forward pass instead of this phase's tail."""
+        return sum(c.bytes_per_worker for c in self.deferred_calls)
+
+    @property
+    def total_bytes_per_worker(self) -> int:
+        return self.bytes_per_worker + self.deferred_bytes_per_worker
+
+    def exposed_wire_bytes(self, world: int | None = None) -> float:
+        """Ring-amplified wire bytes of the exposed calls only — the
+        number the 0.6x sharded-vs-allreduce acceptance gate compares
+        (tests/test_sharded_sync.py)."""
+        w = self.world if world is None else world
+        return sum(c.wire_bytes(w) for c in self.calls)
+
+    def deferred_wire_bytes(self, world: int | None = None) -> float:
+        w = self.world if world is None else world
+        return sum(c.wire_bytes(w) for c in self.deferred_calls)
 
     @property
     def volume_ratio(self) -> float:
@@ -127,7 +186,7 @@ class CommSchedule:
         ops: dict[str, int] = {}
         for c in self.calls:
             ops[c.op] = ops.get(c.op, 0) + c.bytes_per_worker
-        return {
+        out = {
             "compressor": self.compressor,
             "phase": self.phase,
             "num_phases": self.num_phases,
@@ -138,7 +197,13 @@ class CommSchedule:
             "dense_bytes": self.dense_bytes,
             "volume_ratio": round(self.volume_ratio, 3),
             "bytes_by_op": ops,
+            "sync": self.sync,
         }
+        if self.sync != "allreduce":
+            out["exposed_bytes_per_worker"] = self.exposed_bytes_per_worker
+            out["deferred_bytes_per_worker"] = self.deferred_bytes_per_worker
+            out["total_bytes_per_worker"] = self.total_bytes_per_worker
+        return out
 
 
 def plan_all_phases(

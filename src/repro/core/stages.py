@@ -47,7 +47,9 @@ from .comm import (
     all_gather,
     axis_size,
     dense_bytes,
+    flat_axis_index,
     pmean,
+    reduce_scatter,
 )
 
 
@@ -283,13 +285,6 @@ class FP8Block(WireStage):
         return dec, local_sent
 
 
-def _flat_axis_index(axis_names):
-    idx = lax.axis_index(axis_names[0])
-    for ax in axis_names[1:]:
-        idx = idx * axis_size(ax) + lax.axis_index(ax)
-    return idx
-
-
 def _all_to_all(x, axis_names):
     """all-to-all over (possibly multiple) named axes; x: (W, ...)."""
     if len(axis_names) == 1:
@@ -380,7 +375,7 @@ class OkTopKRoute(WireStage):
         k_r = m // W
         _, ridx = lax.top_k(jnp.abs(dense), k_r)
         rvals = dense[ridx]
-        offset = _flat_axis_index(tuple(axis_names)) * region_size
+        offset = flat_axis_index(tuple(axis_names)) * region_size
         gidx = ridx + offset
 
         vals_all = all_gather(rvals, axis_names).reshape(-1)
@@ -508,6 +503,20 @@ class SyncPipeline(Compressor):
         self.seed = int(seed)
         if self.granularity == "leaf" and filter is not None:
             raise ValueError("CoarseFilter requires bucket granularity")
+        sync = self.options.get("sync", "allreduce") or "allreduce"
+        if sync not in ("allreduce", "sharded"):
+            raise ValueError(
+                f"sync must be 'allreduce' or 'sharded', got {sync!r}"
+            )
+        if sync == "sharded" and not (
+            self.granularity == "bucket"
+            and getattr(self.wire, "segmented", False)
+        ):
+            raise ValueError(
+                "sync='sharded' requires a segmented bucket pipeline "
+                f"(covap / none / fp16); {self.wire!r} must use "
+                "sync='allreduce'"
+            )
 
     # ---- composition sugar ------------------------------------------------
     @classmethod
@@ -533,6 +542,14 @@ class SyncPipeline(Compressor):
     @property
     def granularity(self) -> str:
         return getattr(self.wire, "granularity", "bucket")
+
+    @property
+    def sync_mode(self) -> str:
+        """Collective decomposition: ``"allreduce"`` (one all-reduce per
+        selected bucket — the classic path) or ``"sharded"`` (reduce-scatter
+        the compressed gradient, optimizer on the local shard, deferred
+        param all-gather at the next step's head — DESIGN.md §13)."""
+        return self.options.get("sync", "allreduce") or "allreduce"
 
     @property
     def stages(self) -> tuple:
@@ -562,12 +579,56 @@ class SyncPipeline(Compressor):
         return init_residual(params_like)
 
     # ---- plan -------------------------------------------------------------
+    def _plan_bucket_sharded(
+        self, plan: BucketPlan, bucket: Bucket, world: int
+    ) -> CollectiveCall:
+        """The exposed half of one bucket's sharded sync (DESIGN.md §13): a
+        reduce-scatter of the W-aligned wire slot.  ``payload_bytes`` is
+        the full padded input buffer at the wire dtype — the per-worker
+        *injected* bytes the HLO parser normalises a reduce-scatter result
+        to (``launch.hlo_analysis.collective_bytes_per_worker``)."""
+        W = max(int(world), 1)
+        padded = ar.aligned_numel(bucket.numel, W)
+        wd = _bucket_dtype(plan, bucket)
+        if isinstance(self.wire, WireCast) and self.wire.wire_dtype is not None:
+            wd = np.dtype(self.wire.wire_dtype)
+        return CollectiveCall(
+            f"bucket:{bucket.index}", "reduce_scatter", np.dtype(wd).name,
+            padded * np.dtype(wd).itemsize,
+        )
+
+    def _plan_deferred_allgather(
+        self, plan: BucketPlan, world: int
+    ) -> tuple[CollectiveCall, ...]:
+        """The deferred half of sharded sync: the param all-gathers the
+        trainer issues at the next step's head.  One call per plan bucket —
+        EVERY bucket, not just this phase's selected ones: once a bucket
+        has been selected its optimizer moments are nonzero, so its params
+        keep moving every step (Adam decay) and only the shard owner holds
+        authoritative values.  Payload is the LOCAL shard each worker
+        contributes, at the promoted PARAM dtype (updated parameters go on
+        the wire uncompressed — compression applies to gradients only)."""
+        W = max(int(world), 1)
+        calls = []
+        for bucket in plan.buckets:
+            padded = ar.aligned_numel(bucket.numel, W)
+            pd = _bucket_dtype(plan, bucket)
+            calls.append(
+                CollectiveCall(
+                    f"param-bucket:{bucket.index}", "all_gather",
+                    np.dtype(pd).name,
+                    (padded // W) * np.dtype(pd).itemsize, deferred=True,
+                )
+            )
+        return tuple(calls)
+
     def plan_phase(
         self, plan: BucketPlan, phase: int, *, world: int = 1
     ) -> CommSchedule:
         n = self.num_phases()
         ph = int(phase) % max(n, 1)
         ready_ranks: tuple[int, ...] = ()
+        sharded = self.sync_mode == "sharded"
         if self.granularity == "leaf":
             selected = tuple(range(len(plan.leaf_shapes)))
             calls = tuple(
@@ -586,7 +647,11 @@ class SyncPipeline(Compressor):
             ready = build_ready_order(plan)
             selected, calls, ranks = [], [], []
             for b in sel:
-                planned = self.wire.plan_bucket(plan, plan.buckets[b], world)
+                planned = (
+                    self._plan_bucket_sharded(plan, plan.buckets[b], world)
+                    if sharded
+                    else self.wire.plan_bucket(plan, plan.buckets[b], world)
+                )
                 for call in planned if isinstance(planned, tuple) else (planned,):
                     selected.append(b)
                     calls.append(call)
@@ -604,6 +669,10 @@ class SyncPipeline(Compressor):
             world=world,
             plan=plan,
             ready_ranks=ready_ranks,
+            sync="sharded" if sharded else "allreduce",
+            deferred_calls=(
+                self._plan_deferred_allgather(plan, world) if sharded else ()
+            ),
         )
 
     # ---- execute ----------------------------------------------------------
@@ -785,6 +854,74 @@ class SyncPipeline(Compressor):
         ]
         return synced, (resids if ef_on else None)
 
+    # ---- sharded sync (reduce-scatter over the arena, DESIGN.md §13) ------
+    def _reduce_scatter_slot(self, view, axis_names):
+        """One W-aligned slot view through the sharded collective: a
+        reduce-scatter (mean, same elementwise op order as ``pmean``) hands
+        this worker its reduced shard; the shard is placed back at its
+        owner offset in an otherwise-ZERO slot-sized vector.
+
+        The zeros are the sharded contract: only the locally-owned 1/W of
+        each bucket carries meaningful synced values — the optimizer's
+        updates elsewhere are dead compute whose results are overwritten by
+        the owner's shard when ``overlap.sharded_param_allgather`` runs at
+        the next step's head.  Single-worker (no axes): identity.
+        """
+        if not axis_names:
+            return reduce_scatter(view, axis_names)
+        W = 1
+        for a in axis_names:
+            W *= axis_size(a)
+        shard = reduce_scatter(view, axis_names)
+        start = flat_axis_index(axis_names) * (view.shape[0] // W)
+        return lax.dynamic_update_slice(
+            jnp.zeros_like(view), shard, (start,)
+        )
+
+    def _execute_bucket_sharded(
+        self, schedule, b, g_slices, r_slices, *, coeff, axis_names
+    ):
+        """Sharded form of one segmented bucket's sync: pack the segments
+        into the bucket's W-aligned contiguous slot (same fused EF + cast
+        pass as the arena path — ``pack_ef_cast_ref`` is op-for-op the
+        legacy ``_ef_segment`` math), reduce-scatter the slot view, and
+        return segment pieces that hold the reduced values at the
+        locally-owned shard and zeros elsewhere.  EF residuals are computed
+        locally BEFORE the collective, so they are bitwise the allreduce
+        path's residuals regardless of the decomposition."""
+        plan = schedule.plan
+        selected = b in schedule.selected
+        ef_on = r_slices is not None
+        wires, resids = [], []
+        for g, r in zip(
+            g_slices, r_slices if ef_on else (None,) * len(g_slices)
+        ):
+            w, rnew = self._pack_segment(g, r, coeff, selected=selected)
+            wires.append(w)
+            resids.append(rnew)
+        if not selected:
+            return None, (resids if ef_on else None)
+        W = 1
+        for a in axis_names:
+            W *= axis_size(a)
+        layout = ar.build_layout(
+            plan, (b,),
+            wire_dtype=(
+                self.wire.wire_dtype
+                if isinstance(self.wire, WireCast) else None
+            ),
+            align=W,
+        )
+        planes = layout.assemble({b: wires})
+        full = self._reduce_scatter_slot(
+            layout.bucket_view(planes, b), axis_names
+        )
+        synced = [
+            piece.astype(g.dtype)
+            for piece, g in zip(layout.unpack_bucket(b, full), g_slices)
+        ]
+        return synced, (resids if ef_on else None)
+
     def _ef_segment(self, g, r, coeff, *, selected: bool, axis_names):
         """One segment slice through EF ∘ filter-decision ∘ wire.
 
@@ -855,6 +992,11 @@ class SyncPipeline(Compressor):
                              "use execute_leaf_one")
         selected = b in schedule.selected
         if getattr(self.wire, "segmented", False):
+            if schedule.sync == "sharded":
+                return self._execute_bucket_sharded(
+                    schedule, b, g_slices, r_slices,
+                    coeff=coeff, axis_names=axis_names,
+                )
             if self._arena_on():
                 return self._execute_bucket_arena(
                     schedule, b, g_slices, r_slices,
@@ -911,7 +1053,12 @@ class SyncPipeline(Compressor):
 
         sel = dict.fromkeys(schedule.selected)  # unique, order kept
         wd = self.wire.wire_dtype if isinstance(self.wire, WireCast) else None
-        layout = ar.build_layout(plan, sel, wire_dtype=wd)
+        sharded = schedule.sync == "sharded"
+        W = 1
+        if sharded:
+            for a in axis_names:
+                W *= axis_size(a)
+        layout = ar.build_layout(plan, sel, wire_dtype=wd, align=W)
 
         # ---- pack pass: one streaming traversal of the gradient ----------
         wire_pieces: dict[int, list] = {}
@@ -936,9 +1083,16 @@ class SyncPipeline(Compressor):
         planes = layout.assemble(wire_pieces)
 
         # ---- wire pass: one collective per bucket, over a slice view -----
+        # (sharded: reduce-scatter the W-aligned slot instead of an
+        # all-reduce; the unpacked pieces carry zeros off the owned shard)
         synced_pieces = {
             b: layout.unpack_bucket(
-                b, pmean(layout.bucket_view(planes, b), axis_names)
+                b,
+                self._reduce_scatter_slot(
+                    layout.bucket_view(planes, b), axis_names
+                )
+                if sharded
+                else pmean(layout.bucket_view(planes, b), axis_names),
             )
             for b in sel
         }

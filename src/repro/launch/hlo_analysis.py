@@ -323,6 +323,95 @@ def check_interleaving(hlo_text: str, *, min_bytes: int = 1024) -> InterleaveRep
 
 
 # ---------------------------------------------------------------------------
+# sharded-sync placement checker (reduce-scatter/all-gather, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardedPlacementReport:
+    """Where a compiled sharded step schedules its two collective halves.
+
+    The sharded contract is structural: the gradient reduce-scatters must
+    be issuable inside the backward pass (like the overlap engine's
+    all-reduces — ``rs_before_final_grad`` counts RS starts scheduled
+    before the final gradient-producing heavy op), and the deferred param
+    all-gathers must sit at the HEAD of the step, before the backward even
+    begins (``ag_before_first_rs`` counts AG starts scheduled before the
+    first RS start — the forward pass they overlap lies between the two).
+    Bucket-sized collectives only (``min_bytes``).
+    """
+
+    num_reduce_scatter: int
+    num_all_gather: int
+    rs_before_final_grad: int
+    ag_before_first_rs: int
+    first_ag_pos: int
+    first_rs_pos: int
+    last_grad_pos: int
+
+    @property
+    def placed(self) -> bool:
+        """RS inside the backward pass AND AG at the step head."""
+        return (
+            self.num_reduce_scatter > 0
+            and self.num_all_gather > 0
+            and self.rs_before_final_grad >= 1
+            and self.ag_before_first_rs >= 1
+        )
+
+
+def check_sharded_placement(
+    hlo_text: str, *, min_bytes: int = 1024, world: int = 1
+) -> ShardedPlacementReport:
+    """Prove the sharded-sync dataflow on a compiled module: deferred param
+    all-gathers at the head (overlapping the forward), gradient
+    reduce-scatters issued before the final gradient-producing fusion
+    (overlapping the backward).  ``world`` is the mesh size the module was
+    compiled for: a reduce-scatter's RESULT is the 1/W shard of its
+    bucket, so the bucket-size filter for RS ops is ``min_bytes / world``
+    (all-gather results are the full gathered buffer and filter at
+    ``min_bytes`` directly).  Used by the ``sharded`` smoke gate
+    (``benchmarks/sharded_check.py``) and tests/test_sharded_sync.py."""
+    insts = _entry_instructions(hlo_text)
+    index = {name: i for i, (name, _, _, _) in enumerate(insts)}
+    n = len(insts)
+    ancestors: list[set[int]] = [set() for _ in range(n)]
+    for i, (_, _, _, operands) in enumerate(insts):
+        for d in operands:
+            j = index.get(d)
+            if j is not None and j < i:
+                ancestors[i].add(j)
+                ancestors[i] |= ancestors[j]
+
+    def issue_kind(opcode: str) -> str | None:
+        cm = _COLL_RE.fullmatch(opcode)
+        return cm.group(1) if cm else None
+
+    rs = [
+        i for i, (_, op, rb, _) in enumerate(insts)
+        if issue_kind(op) == "reduce-scatter"
+        and rb >= min_bytes // max(world, 1)
+    ]
+    ag = [
+        i for i, (_, op, rb, _) in enumerate(insts)
+        if issue_kind(op) == "all-gather" and rb >= min_bytes
+    ]
+    grad_ops: set[int] = set()
+    for c in rs:
+        grad_ops |= {j for j in ancestors[c] if insts[j][1] in _HEAVY_OPS}
+    last_grad = max(grad_ops) if grad_ops else -1
+    first_rs = min(rs) if rs else n
+    return ShardedPlacementReport(
+        num_reduce_scatter=len(rs),
+        num_all_gather=len(ag),
+        rs_before_final_grad=sum(1 for c in rs if c < last_grad),
+        ag_before_first_rs=sum(1 for c in ag if c < first_rs),
+        first_ag_pos=min(ag) if ag else -1,
+        first_rs_pos=first_rs if rs else -1,
+        last_grad_pos=last_grad,
+    )
+
+
+# ---------------------------------------------------------------------------
 # data-movement (copy-chain) accounting — the zero-copy arena gate (§12)
 # ---------------------------------------------------------------------------
 

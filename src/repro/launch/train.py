@@ -69,6 +69,12 @@ def main():
                     help="zero-copy gradient arena: statically-planned "
                          "flat bucket buffers + fused pack/EF/cast pass "
                          "(bitwise-equal payloads, fewer copies)")
+    ap.add_argument("--sync", default="allreduce",
+                    choices=["allreduce", "sharded"],
+                    help="collective decomposition: all-reduce per bucket "
+                         "(default) or reduce-scatter + deferred param "
+                         "all-gather at the next step's head (sharded "
+                         "optimizer step; halves the exposed wire volume)")
     ap.add_argument("--history-out", default="")
     args = ap.parse_args()
     if args.interval == "adaptive":
@@ -88,7 +94,7 @@ def main():
     tc = TrainConfig(
         compressor=args.compressor, interval=interval,
         log_every=args.log_every, steps=args.steps,
-        overlap=args.overlap, arena=args.arena,
+        overlap=args.overlap, arena=args.arena, sync=args.sync,
     )
     tr = Trainer(model, opt, tc)
     print(f"[plan] {tr.plan.num_buckets} buckets, "
@@ -98,6 +104,12 @@ def main():
     print(f"[schedule] mean {sr['mean_bytes_per_step']/1e6:.3f} MB/step "
           f"per worker (dense {sr['dense_bytes']/1e6:.3f} MB, "
           f"volume ratio {sr['volume_ratio']:.2f}x) — static plan, no tracing")
+    if args.sync == "sharded":
+        print(f"[schedule] sharded: "
+              f"{sr['mean_exposed_wire_bytes_per_step']/1e6:.3f} MB/step "
+              f"exposed wire (RS), "
+              f"{sr['mean_deferred_bytes_per_step']/1e6:.3f} MB/step "
+              f"deferred param AG riding the next forward pass")
 
     state = tr.init_state(jax.random.PRNGKey(0))
     if args.resume and args.ckpt_dir and checkpoint.latest_step(args.ckpt_dir) is not None:

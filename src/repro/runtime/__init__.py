@@ -16,6 +16,7 @@ from .controller import (
     ReplanController,
     ReplanDecision,
     as_autotune_config,
+    exposed_comm_scale,
 )
 from .monitor import (
     CCRMonitor,
@@ -41,6 +42,7 @@ __all__ = [
     "as_autotune_config",
     "build_schedule_only_fn",
     "carry_comp_state",
+    "exposed_comm_scale",
     "measure_workload_ccr",
     "residual_norm",
     "synthetic_probe",

@@ -58,11 +58,25 @@ class ReplanDecision:
 
 
 class ReplanController:
-    """Hysteresis policy over the monitor's running measured CCR."""
+    """Hysteresis policy over the monitor's running measured CCR.
 
-    def __init__(self, config: AutotuneConfig, *, interval: int):
+    ``exposed_scale`` re-prices the measured CCR for the sync mode's
+    *exposed* communication (sharded sync, DESIGN.md §13): the probe's
+    comm term reflects the dense all-reduce volume, but under
+    ``sync="sharded"`` only the reduce-scatter half — ``(W-1)/W`` of the
+    buffer vs the all-reduce's ``2(W-1)/W``, i.e. exactly half — must hide
+    behind the backward pass (the param all-gather rides the next
+    forward).  The interval rule ``I = ceil(CCR)`` therefore applies to
+    ``measured_ccr * exposed_scale``; with the default 1.0 the behaviour
+    is unchanged."""
+
+    def __init__(
+        self, config: AutotuneConfig, *, interval: int,
+        exposed_scale: float = 1.0,
+    ):
         self.config = config
         self.interval = int(interval)
+        self.exposed_scale = float(exposed_scale)
         self.pending = 0
         self.replans = 0
         self.last_replan_step = -(10 ** 9)
@@ -70,7 +84,8 @@ class ReplanController:
 
     # ---- the band ---------------------------------------------------------
     def consistent(self, ccr: float) -> bool:
-        """Is the current interval still the right pick for this CCR?"""
+        """Is the current interval still the right pick for this
+        (already exposure-scaled) CCR?"""
         h = self.config.hysteresis
         lo = self.interval - 1 - h
         hi = self.interval + h
@@ -92,10 +107,11 @@ class ReplanController:
 
         if measured_ccr is None:
             return out(False, self.interval, "no-measurement")
-        if self.consistent(measured_ccr):
+        effective_ccr = measured_ccr * self.exposed_scale
+        if self.consistent(effective_ccr):
             self.pending = 0
             return out(False, self.interval, "in-band")
-        target = select_interval(measured_ccr, c.max_interval)
+        target = select_interval(effective_ccr, c.max_interval)
         if target == self.interval:
             # out of the widened band but ceil still agrees (h < drift < 1)
             self.pending = 0
@@ -107,7 +123,7 @@ class ReplanController:
             return out(False, self.interval, "cooldown")
         if self.replans >= c.max_replans:
             return out(False, self.interval, "max-replans")
-        return out(True, target, f"ccr {measured_ccr:.2f} -> I {target}")
+        return out(True, target, f"ccr {effective_ccr:.2f} -> I {target}")
 
 
 class AdaptiveRuntime:
@@ -127,7 +143,8 @@ class AdaptiveRuntime:
         self.config = config or AutotuneConfig()
         self.monitor = CCRMonitor(window=self.config.window)
         self.controller = ReplanController(
-            self.config, interval=trainer.tc.interval
+            self.config, interval=trainer.tc.interval,
+            exposed_scale=exposed_comm_scale(trainer),
         )
         self.tracer = TimelineTracer()
         self._default_probe = (
@@ -268,6 +285,24 @@ class AdaptiveRuntime:
         }
 
 
+def exposed_comm_scale(trainer) -> float:
+    """Fraction of the probe's (dense all-reduce) comm term that stays
+    *exposed* behind the backward pass under the trainer's sync mode.
+
+    ``allreduce``: everything — 1.0.  ``sharded``: only the reduce-scatter
+    half, which moves ``(W-1)/W`` of the buffer where the all-reduce moves
+    ``2(W-1)/W`` — exactly 0.5 (any wire cast applies equally to both
+    decompositions); the param all-gather is deferred under the next
+    forward pass.  Single-worker trainers keep 1.0: there is no collective
+    to halve, and the measured comm floor is dispatch overhead either way.
+    """
+    if getattr(trainer.tc, "sync", "allreduce") != "sharded":
+        return 1.0
+    if trainer.dp_world <= 1:
+        return 1.0
+    return 0.5
+
+
 def as_autotune_config(autotune) -> AutotuneConfig | None:
     """Normalise ``Trainer.run(autotune=...)``: None/False off, True ->
     defaults, an :class:`AutotuneConfig` passes through."""
@@ -286,4 +321,5 @@ __all__ = [
     "ReplanController",
     "ReplanDecision",
     "as_autotune_config",
+    "exposed_comm_scale",
 ]

@@ -88,6 +88,16 @@ class TrainConfig:
     # instead of per-bucket concatenate / dynamic_slice rebuilds.
     # Bitwise-equal to the default path for uniform-dtype models.
     arena: bool = False
+    # collective decomposition (core/comm.py + DESIGN.md §13):
+    # "allreduce" all-reduces each selected bucket (the classic path,
+    # pinned); "sharded" reduce-scatters the compressed slot view (each
+    # worker keeps 1/W), lets the optimizer's meaningful updates land on
+    # the local shard, and defers the all-gather of updated params to the
+    # HEAD of the next step so it overlaps the forward pass — exposed wire
+    # volume behind the backward pass drops to ~half of the all-reduce
+    # path's.  Segmented bucket pipelines only (covap / none / fp16);
+    # incompatible with hierarchical pods (pod_interval > 1).
+    sync: str = "allreduce"
 
 
 def make_compressor(tc: TrainConfig) -> Compressor:
@@ -96,6 +106,8 @@ def make_compressor(tc: TrainConfig) -> Compressor:
         opts.setdefault("interval", tc.interval)
     if tc.arena:
         opts.setdefault("use_arena", True)
+    if tc.sync != "allreduce":
+        opts.setdefault("sync", tc.sync)
     return get_compressor(tc.compressor, **opts)
 
 
@@ -219,7 +231,10 @@ def build_step_fn(
 
     With ``pod_interval > 1`` (hierarchical mode) gradient sync runs only
     over the intra-pod axes; the 'pod' axis is reconciled by
-    ``pod_reconcile`` and the state carries a leading pod-block axis."""
+    ``pod_reconcile`` and the state carries a leading pod-block axis.
+
+    Sharded sync compressors additionally issue the deferred param
+    all-gather at the step's head (see :func:`_build_phase_step`)."""
     return _build_phase_step(
         model, optimizer, compressor, plan, phase=phase, dp_axes=dp_axes,
         clip_norm=clip_norm, pod_interval=pod_interval, dp_world=dp_world,
@@ -267,17 +282,49 @@ def build_overlapped_step(
     )
 
 
+def _sharded_grad_norm(synced, grad_axes):
+    """Global gradient norm under sharded sync: each worker's ``synced``
+    tree is zero off its owned shards, so the exact global square-sum is
+    the psum of the local ones (summation order differs from the allreduce
+    path's single-array norm, so the metric agrees to ~ulp, not bitwise)."""
+    sq = sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree.leaves(synced)
+    )
+    if grad_axes:
+        sq = lax.psum(sq, tuple(grad_axes))
+    return jnp.sqrt(sq)
+
+
 def _build_phase_step(
     model, optimizer, compressor, plan, *, phase, dp_axes, clip_norm,
     pod_interval, dp_world, fused,
 ) -> Callable:
     """Shared skeleton of :func:`build_step_fn` / :func:`build_overlapped_step`
     — only the loss/grads/sync block differs; each path keeps its exact
-    traced op order (the post path is pinned bit-for-bit)."""
+    traced op order (the post path is pinned bit-for-bit).
+
+    Sharded sync (``compressor.sync_mode == "sharded"``): every step begins
+    with the deferred param all-gather of the PREVIOUS step
+    (``overlap.sharded_param_allgather``) — the previous optimizer step
+    landed authoritative values only on locally-owned shards, and the head
+    gather freshens all of them before the forward pass touches any
+    parameter, so the AG overlaps forward compute instead of extending the
+    previous step's sync tail.  The gather is phase-independent (it covers
+    every bucket) and is an identity on already-fresh params, so it runs
+    unconditionally (step 0 included)."""
     pod_axes = tuple(a for a in dp_axes if a == "pod") if pod_interval > 1 else ()
     grad_axes = tuple(a for a in dp_axes if a not in pod_axes)
+    sharded = getattr(compressor, "sync_mode", "allreduce") == "sharded"
+    if sharded and pod_axes:
+        raise ValueError(
+            "sync='sharded' is incompatible with hierarchical pods "
+            "(pod_interval > 1): pod_reconcile would average stale "
+            "non-owner param shards"
+        )
 
     comm_schedule = compressor.plan_phase(plan, phase, world=dp_world)
+    prev_schedule = comm_schedule if sharded and grad_axes else None
     pod_schedule = (
         plan_pod_schedule(
             plan, pod_phase=phase % pod_interval, pod_interval=pod_interval
@@ -300,6 +347,12 @@ def _build_phase_step(
             params, opt_state, comp_state = strip_pod_block(
                 (params, opt_state, comp_state)
             )
+        if prev_schedule is not None:
+            from repro.core.overlap import sharded_param_allgather
+
+            params = sharded_param_allgather(
+                compressor, prev_schedule, params, axis_names=grad_axes,
+            )
         if fused:
             from repro.core.overlap import overlapped_loss_and_grads
 
@@ -315,7 +368,15 @@ def _build_phase_step(
                 comm_schedule, grads, comp_state,
                 step=step, axis_names=grad_axes,
             )
-        if clip_norm > 0:
+        if sharded and grad_axes:
+            gnorm = _sharded_grad_norm(synced, grad_axes)
+            if clip_norm > 0:
+                scale = jnp.minimum(1.0, clip_norm / (gnorm + 1e-12))
+                synced = jax.tree.map(
+                    lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype),
+                    synced,
+                )
+        elif clip_norm > 0:
             synced, gnorm = clip_by_global_norm(synced, clip_norm)
         else:
             gnorm = global_norm(synced)
@@ -335,6 +396,7 @@ def _build_phase_step(
         return params, opt_state, comp_state, metrics
 
     step_fn.comm_schedule = comm_schedule
+    step_fn.prev_schedule = prev_schedule
     step_fn.pod_schedule = pod_schedule
     return step_fn
 
@@ -453,6 +515,13 @@ class Trainer:
         self.history: list[dict] = []
         self.runtime = None          # AdaptiveRuntime of the last run(), if any
         self.transitions: list = []  # TransitionReports from re-plans
+        # sharded sync (DESIGN.md §13): True while the last step's deferred
+        # param all-gather has not been issued yet (the optimizer left
+        # non-owner shards stale).  Each sharded step's head gather settles
+        # it implicitly; flush_sync() settles it at run boundaries so the
+        # state handed back always carries fresh full params.
+        self._pending_sync: bool = False
+        self._flush_fns: dict[int, Callable] = {}
 
     @property
     def num_phases(self) -> int:
@@ -487,7 +556,7 @@ class Trainer:
     def schedule_report(self) -> dict:
         scheds = self.schedules()
         mean = mean_bytes_per_step(scheds)
-        return {
+        out = {
             "compressor": self.tc.compressor,
             "num_phases": len(scheds),
             "bytes_per_worker_per_phase": [s.bytes_per_worker for s in scheds],
@@ -497,6 +566,16 @@ class Trainer:
                 scheds[0].dense_bytes / max(mean, 1) if scheds else 1.0
             ),
         }
+        if self.sharded:
+            n = max(len(scheds), 1)
+            out["sync"] = self.tc.sync
+            out["mean_exposed_wire_bytes_per_step"] = (
+                sum(s.exposed_wire_bytes(self.dp_world) for s in scheds) / n
+            )
+            out["mean_deferred_bytes_per_step"] = (
+                sum(s.deferred_bytes_per_worker for s in scheds) / n
+            )
+        return out
 
     def _phase_fn(self, phase: int) -> Callable:
         if phase not in self._steps:
@@ -512,6 +591,74 @@ class Trainer:
     @property
     def hierarchical(self) -> bool:
         return self.tc.pod_interval > 1 and "pod" in self.dp_axes
+
+    @property
+    def sharded(self) -> bool:
+        return self.tc.sync == "sharded"
+
+    # ---- sharded sync bookkeeping (DESIGN.md §13) -------------------------
+    def _flush_fn(self) -> Callable:
+        if 0 not in self._flush_fns:
+            from repro.core.overlap import sharded_param_allgather
+
+            # the gather covers every bucket, so any phase's schedule works
+            schedule = self.compressor.plan_phase(
+                self.plan, 0, world=self.dp_world
+            )
+            axes = self.dp_axes
+            params_def = jax.tree_util.tree_structure(
+                jax.tree.map(lambda _: 0, self._shapes)
+            )
+
+            def gather(tree):
+                return sharded_param_allgather(
+                    self.compressor, schedule, tree, axis_names=axes
+                )
+
+            def gather_like_params(tree):
+                """Gather every params-shaped subtree (Adam's m/v, SGD's
+                mu) — the shard owners hold the exact moments the
+                allreduce path would have, so the gathered state is fully
+                portable (checkpoint-restorable under any sync mode or
+                world size)."""
+                if (
+                    jax.tree_util.tree_structure(
+                        jax.tree.map(lambda _: 0, tree)
+                    )
+                    == params_def
+                ):
+                    return gather(tree)
+                if isinstance(tree, dict):
+                    return {
+                        k: gather_like_params(v) for k, v in tree.items()
+                    }
+                return tree
+
+            def flush(params, opt):
+                return gather(params), gather_like_params(opt)
+
+            mapped = shard_map_compat(
+                flush, self.mesh, (P(), P()), (P(), P()), self.dp_axes
+            )
+            self._flush_fns[0] = jax.jit(mapped)
+        return self._flush_fns[0]
+
+    def flush_sync(self, state):
+        """Settle the pending deferred gathers (sharded sync): at run
+        boundaries — end of ``run``, checkpoint saves, re-plans, state
+        inspection — the last step's updated shards must be gathered so
+        params AND optimizer moments are fully fresh on every worker
+        (owner shards carry the exact allreduce-equivalent values, so the
+        flushed state checkpoints/restores portably).  No-op for
+        ``allreduce`` runs, single-process runs, and when nothing is
+        pending."""
+        if not self.sharded or not self._pending_sync:
+            return state
+        self._pending_sync = False
+        if self.mesh is None or not self.dp_axes:
+            return state      # single worker: shards ARE the full params
+        params, opt = self._flush_fn()(state["params"], state["opt"])
+        return {**state, "params": params, "opt": opt}
 
     def init_state(self, key):
         state = make_train_state(self.model, self.optimizer, self.compressor,
@@ -543,6 +690,10 @@ class Trainer:
 
         if old_interval is None:
             old_interval = self.tc.interval
+        if state is not None:
+            # sharded sync: the pending deferred AG references the OLD
+            # plan's schedules — settle it before the plan is replaced
+            state = self.flush_sync(state)
         self.tc = dataclasses.replace(self.tc, interval=int(interval))
         self.compressor = make_compressor(self.tc)
         self.plan = build_plan(
@@ -552,6 +703,7 @@ class Trainer:
             interval=self.tc.interval,
         )
         self._steps = {}   # stale executables: new phases compile lazily
+        self._flush_fns = {}
         report = None
         if state is not None:
             comp, report = carry_comp_state(
@@ -605,6 +757,8 @@ class Trainer:
             )
             state = {"params": params, "opt": opt, "comp": comp,
                      "step": state["step"] + 1}
+            if self.sharded:
+                self._pending_sync = True
             if rt is not None:
                 wall = None
                 if timed:
@@ -626,4 +780,6 @@ class Trainer:
                     )
         if rt is not None:
             rt.finish()
-        return state
+        # sharded sync: hand back fully-fresh params (the final step's
+        # deferred AG has no next step to ride — settle it here)
+        return self.flush_sync(state)

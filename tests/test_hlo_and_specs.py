@@ -200,6 +200,88 @@ def test_schedule_bytes_match_hlo_collectives():
     assert r.stdout.count("OK") == 12
 
 
+_SHARDED_HLO_SUB = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.core import build_plan, get_compressor
+from repro.core.overlap import sharded_param_allgather
+from repro.launch.hlo_analysis import collective_bytes_per_worker, parse_collectives
+from repro.train.trainer import shard_map_compat
+
+W = 8
+mesh = Mesh(np.array(jax.devices()[:W]), ("data",))
+params = {"w": jnp.zeros((64, 16)), "b": jnp.zeros((16,))}
+plan = build_plan(params, bucket_bytes=512, max_buckets=8, interval=4)
+key = jax.random.PRNGKey(0)
+gw = {k: jax.random.normal(jax.random.fold_in(key, i), (W,) + v.shape)
+      for i, (k, v) in enumerate(params.items())}
+
+CASES = [
+    ("none", {}, 0),
+    ("fp16", {}, 0),
+    ("covap", {"interval": 4}, 0),
+    ("covap", {"interval": 4}, 1),
+]
+for name, opts, phase in CASES:
+    comp = get_compressor(name, **opts, sync="sharded")
+    state = comp.init_state(params, plan)
+    sched = comp.plan_phase(plan, phase, world=W)
+
+    # ---- the RS half: execute()'s compiled collectives ------------------
+    def run(g, s):
+        g = {k: v[0] for k, v in g.items()}
+        out, s2, _ = comp.execute(sched, g, s, step=0, axis_names=("data",))
+        return out, s2
+
+    f = jax.jit(shard_map_compat(
+        run, mesh, (P("data"), P()), (P(), P()), ("data",)))
+    hlo = f.lower(gw, state).compile().as_text()
+    got = collective_bytes_per_worker(hlo, W)
+    kinds = {o.kind for o in parse_collectives(hlo)}
+    assert kinds <= {"reduce-scatter"}, kinds
+    # CPU backend promotes narrow reduction operands (the same
+    # AllReducePromotion note as the all-reduce cases): a planned bf16
+    # reduce-scatter physically moves f32 on the dry-run backend
+    def expected_bytes(c):
+        if c.wire_dtype == "bfloat16" and c.op == "reduce_scatter":
+            return c.payload_bytes * 2 + c.index_bytes
+        return c.bytes_per_worker
+
+    expected = sum(expected_bytes(c) for c in sched.calls)
+    assert int(got) == expected, (name, phase, int(got), expected)
+
+    # ---- the AG half: the head/flush program's compiled collectives -----
+    def head(p):
+        return sharded_param_allgather(comp, sched, p, axis_names=("data",))
+
+    fh = jax.jit(shard_map_compat(head, mesh, (P(),), P(), ("data",)))
+    hlo_h = fh.lower(params).compile().as_text()
+    got_h = collective_bytes_per_worker(hlo_h, W)
+    kinds_h = {o.kind for o in parse_collectives(hlo_h)}
+    assert kinds_h <= {"all-gather"}, kinds_h
+    expected_h = sum(c.bytes_per_worker for c in sched.deferred_calls)
+    assert int(got_h) == expected_h, (name, phase, int(got_h), expected_h)
+    print(name, phase, "SHARDED-OK", int(got), int(got_h))
+"""
+
+
+def test_sharded_schedule_bytes_match_hlo_collectives():
+    """Sharded sync's two halves cross-checked against compiled HLO: the
+    RS bytes of ``execute`` equal ``schedule.bytes_per_worker`` and the AG
+    bytes of the head/flush program equal
+    ``schedule.deferred_bytes_per_worker`` — per-worker-normalised by the
+    reduce-scatter/all-gather rules of ``collective_bytes_per_worker``."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_SHARDED_HLO_SUB)],
+        capture_output=True, text=True, timeout=560, env=env,
+    )
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
+    assert r.stdout.count("SHARDED-OK") == 4
+
+
 # ---- param specs -------------------------------------------------------------
 
 @pytest.mark.parametrize("arch", list_archs())

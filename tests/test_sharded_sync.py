@@ -1,0 +1,526 @@
+"""Sharded-sync conformance suite (DESIGN.md §13): the cross-path pin that
+``sync="sharded"`` (reduce-scatter over the arena slots + deferred param
+all-gather) is observationally identical to ``sync="allreduce"``.
+
+* sharded == allreduce parity — params AND EF residuals — for
+  covap/none/fp16 over a full phase cycle, single-process and on an
+  8-worker CPU mesh, post AND fused overlap, arena on/off (mirroring the
+  ``test_arena.py`` pinning style);
+* hypothesis property tests for the W-aligned layout math and the RS+AG
+  byte accounting (RS half + AG half == the all-reduce wire bytes, exact
+  ``bytes_per_worker`` for arbitrary (W, bucket, dtype) draws);
+* the schedule-level acceptance gate: exposed wire bytes per worker under
+  ``sync="sharded"`` at W=8 <= 0.6x the all-reduce path;
+* compiled-HLO placement (reduce-scatters inside the backward pass, param
+  all-gathers at the step head) via ``repro.launch.sharded_gate``;
+* the ``REPRO_PSUM_PROMOTE_BF16`` guard regression: a bf16-param arch
+  compiles on the CPU dry-run backend under ``sync="sharded"``.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import arena as ar
+from repro.core import build_plan, get_compressor
+from repro.core.schedule import CollectiveCall
+
+_SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def make_tree(shapes, dtypes=None):
+    dtypes = dtypes or [jnp.float32] * len(shapes)
+    key = jax.random.PRNGKey(11)
+    return {
+        f"leaf{i}": jax.random.normal(
+            jax.random.fold_in(key, i), s, jnp.float32
+        ).astype(d)
+        for i, (s, d) in enumerate(zip(shapes, dtypes))
+    }
+
+
+shape_strategy = st.lists(
+    st.one_of(
+        st.tuples(st.integers(1, 40)),
+        st.tuples(st.integers(1, 12), st.integers(1, 64)),
+        st.tuples(st.integers(1, 6), st.integers(1, 16), st.integers(1, 32)),
+    ),
+    min_size=1,
+    max_size=8,
+)
+
+
+# ---------------------------------------------------------------------------
+# schedule structure + byte accounting
+# ---------------------------------------------------------------------------
+
+def test_sharded_schedule_structure():
+    """A sharded covap phase: one reduce-scatter per SELECTED bucket (same
+    selection as the allreduce plan), one deferred param all-gather per
+    PLAN bucket, and the sync tag on the schedule."""
+    tree = make_tree([(16, 8), (32, 4), (5,)])
+    plan = build_plan(tree, bucket_bytes=256, max_buckets=8, interval=2)
+    W = 8
+    cs = get_compressor("covap", interval=2, sync="sharded")
+    ca = get_compressor("covap", interval=2)
+    for phase in range(2):
+        ss = cs.plan_phase(plan, phase, world=W)
+        sa = ca.plan_phase(plan, phase, world=W)
+        assert ss.sync == "sharded" and sa.sync == "allreduce"
+        assert ss.selected == sa.selected
+        assert all(c.op == "reduce_scatter" for c in ss.calls)
+        assert len(ss.deferred_calls) == plan.num_buckets
+        assert all(
+            c.op == "all_gather" and c.deferred for c in ss.deferred_calls
+        )
+        # exposed == calls, deferred == AG half, total == both
+        assert ss.exposed_bytes_per_worker == ss.bytes_per_worker
+        assert ss.total_bytes_per_worker == (
+            ss.bytes_per_worker + ss.deferred_bytes_per_worker
+        )
+        assert ss.summary()["sync"] == "sharded"
+
+
+@settings(max_examples=40, deadline=None)
+@given(numel=st.integers(1, 10_000), world=st.integers(1, 64),
+       wire=st.sampled_from(["float32", "bfloat16", "float16"]),
+       param=st.sampled_from(["float32", "bfloat16"]))
+def test_rs_ag_bytes_exact_and_sum_to_allreduce(numel, world, wire, param):
+    """For arbitrary (W, bucket numel, dtypes): the planned RS payload is
+    the W-aligned buffer at the wire dtype, the AG payload the 1/W param
+    shard, and — at matching dtypes — RS wire + AG wire equals exactly the
+    ring all-reduce wire bytes of the padded buffer."""
+    padded = ar.aligned_numel(numel, world)
+    assert padded % world == 0 and 0 <= padded - numel < world
+    wi = np.dtype(wire).itemsize
+    pi = np.dtype(param).itemsize
+    rs = CollectiveCall("bucket:0", "reduce_scatter", wire, padded * wi)
+    ag = CollectiveCall("param-bucket:0", "all_gather", param,
+                        (padded // world) * pi, deferred=True)
+    assert rs.bytes_per_worker == padded * wi
+    assert ag.bytes_per_worker == padded // world * pi
+    # wire model: RS moves (W-1)/W of its buffer, AG re-sends the shard
+    # (W-1) times -> (W-1)/W of the full buffer
+    assert rs.wire_bytes(world) == pytest.approx(
+        (world - 1) / world * padded * wi if world > 1 else 0.0
+    )
+    assert ag.wire_bytes(world) == pytest.approx(
+        (world - 1) / world * padded * pi if world > 1 else 0.0
+    )
+    if wire == param:
+        arr = CollectiveCall("bucket:0", "all_reduce", wire, padded * wi)
+        assert rs.wire_bytes(world) + ag.wire_bytes(world) == pytest.approx(
+            arr.wire_bytes(world)
+        )
+
+
+@settings(max_examples=30, deadline=None)
+@given(shapes=shape_strategy, world=st.sampled_from([1, 2, 4, 8, 16]),
+       interval=st.integers(1, 4))
+def test_planned_bytes_match_layout_extents(shapes, world, interval):
+    """The sharded schedule's per-call bytes are exactly the W-aligned
+    layout's slot extents — planner and executor agree on every pad."""
+    tree = make_tree(shapes)
+    plan = build_plan(tree, bucket_bytes=2048, max_buckets=16,
+                      interval=interval)
+    comp = get_compressor("none", sync="sharded")
+    sched = comp.plan_phase(plan, 0, world=world)
+    layout = ar.build_layout(plan, align=world)
+    for b, call in zip(sched.selected, sched.calls):
+        _, _, extent = layout.slot(b)
+        dt = np.dtype(call.wire_dtype)
+        assert call.payload_bytes == extent * dt.itemsize
+    for b, call in enumerate(sched.deferred_calls):
+        _, _, extent = layout.slot(b)
+        dt = np.dtype(call.wire_dtype)
+        assert call.payload_bytes == extent // max(world, 1) * dt.itemsize
+
+
+# ---------------------------------------------------------------------------
+# W-aligned layout properties
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(shapes=shape_strategy, world=st.sampled_from([1, 2, 3, 8, 16]),
+       interval=st.integers(1, 4))
+def test_aligned_layout_roundtrip_unchanged(shapes, world, interval):
+    """W-aligned padding never changes pack -> view -> unpack ->
+    gather_leaves round-trips: every slot extent is W-divisible, the real
+    elements sit exactly where the unaligned layout puts them, and leaves
+    rebuild bitwise."""
+    tree = make_tree(shapes)
+    plan = build_plan(tree, bucket_bytes=1024, max_buckets=32,
+                      interval=interval)
+    leaves = jax.tree_util.tree_leaves(tree)
+    layout = ar.build_layout(plan, align=world)
+    base = ar.build_layout(plan)
+    planes = ar.pack_leaves(layout, leaves)
+    pieces = {}
+    for b, bucket in enumerate(plan.buckets):
+        _, _, extent = layout.slot(b)
+        assert extent % max(world, 1) == 0
+        assert extent == ar.aligned_numel(bucket.numel, world)
+        view = layout.bucket_view(planes, b)
+        assert view.shape[0] == extent
+        # real payload is bitwise the unaligned view; the tail is zeros
+        ref = ar.build_layout(plan, (b,))
+        ref_view = ref.bucket_view(
+            ar.pack_leaves(ref, leaves), b
+        )
+        np.testing.assert_array_equal(
+            np.asarray(view[: bucket.numel]), np.asarray(ref_view)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(view[bucket.numel:]), 0.0
+        )
+        got = layout.unpack_bucket(b, view)
+        want = base.unpack_bucket(b, ref_view)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+        pieces[b] = got
+    rebuilt = ar.gather_leaves(
+        plan, lambda b, si, seg: pieces[b][si], leaves
+    )
+    for got, want in zip(rebuilt, leaves):
+        assert got.dtype == want.dtype
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# execute parity, single-process (W=1: RS/AG degrade to identities but the
+# sharded code path — pack, aligned layout, scatter — still runs)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,opts", [
+    ("covap", {"interval": 2}),
+    ("none", {}),
+    ("fp16", {}),
+    ("covap", {"interval": 2, "wire_dtype": "bfloat16"}),
+])
+def test_sharded_execute_parity_single_process(name, opts):
+    tree = make_tree([(16, 8), (32, 4), (5,), ()])
+    grads = jax.tree.map(lambda x: x * 0.1, tree)
+    plan = build_plan(tree, bucket_bytes=256, max_buckets=8, interval=2)
+    for arena_on in (False, True):
+        cs = get_compressor(name, **opts, sync="sharded",
+                            use_arena=arena_on)
+        cb = get_compressor(name, **opts)
+        sa, sb = cs.init_state(tree, plan), cb.init_state(tree, plan)
+        for step in range(3):
+            outa, sa, stats = cs.execute(
+                cs.plan_phase(plan, step % 2), grads, sa, step=step
+            )
+            outb, sb, _ = cb.execute(
+                cb.plan_phase(plan, step % 2), grads, sb, step=step
+            )
+            for x, y in zip(jax.tree.leaves((outa, sa)),
+                            jax.tree.leaves((outb, sb))):
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_sharded_rejects_flat_and_leaf_pipelines():
+    with pytest.raises(ValueError, match="segmented bucket pipeline"):
+        get_compressor("topk", ratio=0.1, sync="sharded")
+    with pytest.raises(ValueError, match="segmented bucket pipeline"):
+        get_compressor("powersgd", rank=2, sync="sharded")
+    with pytest.raises(ValueError, match="sync must be"):
+        get_compressor("none", sync="bogus")
+
+
+def test_supports_sharded_sync_matches_constructor_validation():
+    """The public eligibility predicate and the constructor's validation
+    are one rule: for every registered compressor,
+    ``overlap.supports_sharded_sync`` is True exactly when constructing it
+    with ``sync="sharded"`` succeeds."""
+    from repro.core.compressors import available
+    from repro.core.overlap import supports_sharded_sync
+
+    opts = {"covap": {"interval": 2}, "topk": {"ratio": 0.2},
+            "randomk": {"ratio": 0.2}, "oktopk": {"ratio": 0.2},
+            "dgc": {}, "powersgd": {"rank": 2}}
+    for name in available():
+        base = get_compressor(name, **opts.get(name, {}))
+        try:
+            get_compressor(name, **opts.get(name, {}), sync="sharded")
+            constructible = True
+        except ValueError:
+            constructible = False
+        assert supports_sharded_sync(base) == constructible, name
+
+
+def test_sharded_rejects_hierarchical_pods():
+    from repro.optim import sgd
+    from repro.train.trainer import build_step_fn
+
+    tree = make_tree([(8, 4)])
+    plan = build_plan(tree, bucket_bytes=1 << 20, max_buckets=4, interval=1)
+    comp = get_compressor("none", sync="sharded")
+    with pytest.raises(ValueError, match="hierarchical"):
+        build_step_fn(
+            None, sgd(1e-3), comp, plan, phase=0,
+            dp_axes=("pod", "data"), pod_interval=2,
+        )
+
+
+# ---------------------------------------------------------------------------
+# schedule-level acceptance: exposed bytes <= 0.6x all-reduce at W=8
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,opts", [
+    ("covap", {"interval": 4}),
+    ("none", {}),
+    ("fp16", {}),
+])
+def test_exposed_wire_bytes_at_most_06x_allreduce(name, opts):
+    from repro.configs import get_reduced
+    from repro.models import build_model
+
+    cfg = get_reduced("gpt2-paper").with_(vocab_size=256)
+    shapes = jax.eval_shape(build_model(cfg).init, jax.random.PRNGKey(0))
+    plan = build_plan(shapes, bucket_bytes=1 << 14, max_buckets=32,
+                      interval=4)
+    W = 8
+    cs = get_compressor(name, **opts, sync="sharded")
+    cb = get_compressor(name, **opts)
+    n = max(cs.num_phases(4), 1)
+    exposed = sum(
+        cs.plan_phase(plan, p, world=W).exposed_wire_bytes(W)
+        for p in range(n)
+    )
+    dense = sum(
+        cb.plan_phase(plan, p, world=W).wire_bytes(W) for p in range(n)
+    )
+    assert exposed <= 0.6 * dense, (name, exposed / dense)
+    # the RS half is exactly half the all-reduce's ring traffic, plus
+    # W-alignment padding epsilon
+    assert exposed / dense == pytest.approx(0.5, rel=0.02)
+
+
+# ---------------------------------------------------------------------------
+# trainer parity: full phase cycle on an 8-worker CPU mesh
+# ---------------------------------------------------------------------------
+
+_MESH_SUB = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.configs import get_reduced
+from repro.data import DataConfig, make_loader
+from repro.models import build_model
+from repro.optim import adamw
+from repro.train.trainer import TrainConfig, Trainer
+
+mesh = Mesh(np.array(jax.devices()[:8]), ("data",))
+cfg = get_reduced("gpt2-paper").with_(vocab_size=256)
+model = build_model(cfg)
+
+def run(sync, overlap="post", arena=False, steps=5):
+    tc = TrainConfig(compressor=COMPRESSOR, interval=4, bucket_bytes=1 << 14,
+                     max_buckets=32, log_every=10 ** 9, overlap=overlap,
+                     arena=arena, sync=sync)
+    tr = Trainer(model, adamw(3e-3), tc, mesh=mesh, dp_axes=("data",))
+    state = tr.init_state(jax.random.PRNGKey(0))
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8,
+                    corpus_tokens=1 << 14)
+    # Trainer.run: the real loop incl. the end-of-run flush of the last
+    # step's deferred param all-gather
+    return tr.run(state, iter(make_loader(dc)), steps=steps, log=None)
+
+base = run("allreduce")
+for overlap, arena in COMBOS:
+    got = run("sharded", overlap, arena)
+    # params, EF residuals AND optimizer moments: flush_sync gathers the
+    # owner shards of m/v too, so the handed-back state is bitwise the
+    # allreduce path's (checkpoint-portable under any sync mode)
+    for x, y in zip(
+        jax.tree.leaves((base["params"], base["comp"], base["opt"])),
+        jax.tree.leaves((got["params"], got["comp"], got["opt"])),
+    ):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    print(COMPRESSOR, overlap, "arena" if arena else "plain", "EQUAL")
+"""
+
+
+def _run_mesh_parity(compressor: str, combos) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    body = (
+        f"COMPRESSOR = {compressor!r}\nCOMBOS = {combos!r}\n"
+        + textwrap.dedent(_MESH_SUB)
+    )
+    r = subprocess.run(
+        [sys.executable, "-c", body],
+        capture_output=True, text=True, timeout=560, env=env,
+    )
+    assert r.returncode == 0, (
+        f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
+    )
+    return r.stdout
+
+
+def test_sharded_equals_allreduce_on_cpu_mesh_covap():
+    """The acceptance criterion, full grid for covap: sharded == allreduce
+    bit-for-bit (params AND EF residuals) over a full phase cycle + 1 on an
+    8-worker CPU mesh, post AND fused overlap, arena on AND off."""
+    combos = [("post", False), ("post", True), ("fused", False),
+              ("fused", True)]
+    out = _run_mesh_parity("covap", combos)
+    assert out.count("EQUAL") == 4
+
+
+@pytest.mark.parametrize("compressor", ["none", "fp16"])
+def test_sharded_equals_allreduce_on_cpu_mesh_baselines(compressor):
+    """none/fp16: both overlap modes, arena exercised on the fused leg."""
+    combos = [("post", False), ("fused", True)]
+    out = _run_mesh_parity(compressor, combos)
+    assert out.count("EQUAL") == 2
+
+
+# ---------------------------------------------------------------------------
+# compiled placement + bf16 promotion-guard regression
+# ---------------------------------------------------------------------------
+
+def test_compiled_placement_rs_in_backward_ag_at_head():
+    """The sharded gate: the compiled fused sharded step must reduce-
+    scatter before the final gradient fusion and place every deferred
+    param all-gather ahead of the first reduce-scatter (the forward pass
+    they overlap sits between the two)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.sharded_gate"],
+        capture_output=True, text=True, timeout=560, env=env,
+    )
+    assert r.returncode == 0, f"{r.stdout}\n{r.stderr[-3000:]}"
+    line = next(l for l in r.stdout.splitlines() if l.startswith("SHARDED"))
+    kv = dict(p.split("=") for p in line.split()[1:])
+    assert kv["placed"] == "True"
+    assert float(kv["exposed_ratio"]) <= 0.6
+
+
+_BF16_SUB = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.configs import get_reduced
+from repro.data import DataConfig, make_loader
+from repro.models import build_model
+from repro.optim import sgd
+from repro.train.trainer import TrainConfig, Trainer
+
+mesh = Mesh(np.array(jax.devices()[:8]), ("data",))
+cfg = get_reduced("gpt2-paper").with_(vocab_size=256,
+                                      param_dtype="bfloat16")
+model = build_model(cfg)
+tc = TrainConfig(compressor="covap", interval=2, bucket_bytes=1 << 14,
+                 max_buckets=16, log_every=10 ** 9, sync="sharded")
+tr = Trainer(model, sgd(1e-3), tc, mesh=mesh, dp_axes=("data",))
+state = tr.init_state(jax.random.PRNGKey(0))
+dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=8)
+state = tr.run(state, iter(make_loader(dc)), steps=2, log=None)
+assert all(jnp.isfinite(x).all() for x in jax.tree.leaves(state["params"])
+           if jnp.issubdtype(x.dtype, jnp.floating))
+print("BF16 SHARDED OK")
+"""
+
+
+def test_bf16_params_compile_under_sharded_sync():
+    """Regression for the REPRO_PSUM_PROMOTE_BF16 guard on the new
+    collectives: a bf16-param arch must compile and step on the CPU
+    dry-run backend under sync="sharded" (the bf16 reduce-scatter is
+    promoted to f32 around the collective exactly like the pmean path;
+    the param all-gather carries bf16 untouched — pure data movement)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_BF16_SUB)],
+        capture_output=True, text=True, timeout=560, env=env,
+    )
+    assert r.returncode == 0, f"{r.stdout}\n{r.stderr[-4000:]}"
+    assert "BF16 SHARDED OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# perf-model integration
+# ---------------------------------------------------------------------------
+
+def test_simulate_schedule_defers_ag_under_forward():
+    """The timeline model: a sharded schedule's AG half rides the next
+    forward pass — with t_before large enough it adds NOTHING to the step,
+    and the exposed comm matches the RS-only timeline; with t_before=0 the
+    whole deferred volume surfaces as exposed."""
+    from repro.core.perfmodel import simulate_schedule
+
+    tree = make_tree([(64, 32), (32, 16)])
+    plan = build_plan(tree, bucket_bytes=2048, max_buckets=8, interval=1)
+    W, bw = 8, 1e9
+    cs = get_compressor("none", sync="sharded")
+    sched = cs.plan_phase(plan, 0, world=W)
+    t_def = sched.deferred_wire_bytes(W) / bw
+    assert t_def > 0
+    covered = simulate_schedule(
+        10 * t_def, 1e-3, sched, world=W, link_bw=bw
+    )
+    bare = simulate_schedule(0.0, 1e-3, sched, world=W, link_bw=bw)
+    assert covered["deferred_comm"] == pytest.approx(t_def)
+    assert bare["exposed_comm"] >= covered["exposed_comm"] + t_def * 0.99
+    assert covered["comm_total"] == pytest.approx(
+        sched.exposed_wire_bytes(W) / bw + t_def
+    )
+
+
+def test_replan_controller_exposed_scale():
+    """Sharded sync halves the exposed comm, so the controller's interval
+    rule applies to measured_ccr * 0.5: a CCR of 6 that would pick I=6
+    under allreduce picks I=3 under sharded."""
+    from repro.runtime import AutotuneConfig, ReplanController
+
+    cfg = AutotuneConfig(patience=1, cooldown_steps=0)
+    full = ReplanController(cfg, interval=1)
+    half = ReplanController(cfg, interval=1, exposed_scale=0.5)
+    assert full.observe(100, 6.0).interval == 6
+    assert half.observe(100, 6.0).interval == 3
+
+
+def test_adaptive_replan_under_sharded_sync():
+    """The adaptive runtime composes with sharded sync: a synthetic probe
+    forces a re-plan mid-run; the trainer flushes the pending deferred
+    gather before swapping plans, the new interval's schedules stay
+    sharded, and the run completes with finite params."""
+    from repro.configs import get_reduced
+    from repro.data import DataConfig, make_loader
+    from repro.models import build_model
+    from repro.optim import adamw
+    from repro.runtime import AutotuneConfig, exposed_comm_scale, synthetic_probe
+    from repro.train.trainer import TrainConfig, Trainer
+
+    cfg = get_reduced("gpt2-paper").with_(vocab_size=256)
+    model = build_model(cfg)
+    tc = TrainConfig(compressor="covap", interval=2, bucket_bytes=1 << 14,
+                     max_buckets=16, log_every=10 ** 9, sync="sharded")
+    tr = Trainer(model, adamw(3e-3), tc)
+    assert exposed_comm_scale(tr) == 1.0  # single worker: nothing to halve
+    state = tr.init_state(jax.random.PRNGKey(0))
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=4,
+                    corpus_tokens=1 << 13)
+    ac = AutotuneConfig(
+        measure_every=2, warmup_steps=1, window=1, patience=1,
+        cooldown_steps=0, probe=synthetic_probe(0.01, 6.0),
+    )
+    state = tr.run(state, iter(make_loader(dc)), steps=10, log=None,
+                   autotune=ac)
+    assert tr.runtime.controller.replans >= 1
+    assert tr.tc.sync == "sharded"
+    assert tr.compressor.sync_mode == "sharded"
+    assert all(s.sync == "sharded" for s in tr.schedules())
+    assert all(
+        bool(jnp.isfinite(x).all())
+        for x in jax.tree.leaves(state["params"])
+    )
