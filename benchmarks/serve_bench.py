@@ -1,0 +1,98 @@
+"""Serving smoke gate: QPS sweep on the reduced qwen1.5-0.5b config.
+
+Runs the continuous-batching engine (paged KV arena, chunked prefill ->
+insert -> generate) under synthetic Poisson traffic at a few arrival
+rates and emits both the per-stage unit costs and the latency/throughput
+digest the snapshot records (``prefill_tok_us``, ``generate_tok_us``,
+``insert_us``, ``serve_p50_ms``, ``serve_p99_ms``, ``serve_tokens_per_s``).
+
+The gate FAILS (raises) if any request goes unanswered, if a finish
+reason is invalid, or if chunked prefill degenerated to one call per
+token — the structural properties; absolute numbers are tracked
+relatively PR-over-PR by the trajectory gate in ``benchmarks.run``.
+"""
+from __future__ import annotations
+
+import jax
+
+from .common import row
+
+ARCH = "qwen1.5-0.5b"
+VALID_REASONS = {"eos", "length", "truncated"}
+
+
+def run(smoke: bool = False):
+    from repro.configs import get_reduced
+    from repro.models import build_model
+    from repro.serve import Engine, ServeConfig, TrafficConfig, sweep
+
+    cfg = get_reduced(ARCH).with_(vocab_size=256)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sc = ServeConfig(
+        batch_slots=4, max_len=64, max_new_tokens=8,
+        page_size=8, prefill_chunk=8,
+    )
+    engine = Engine(model, params, sc)
+
+    rates = (4.0, 32.0) if smoke else (2.0, 8.0, 32.0, 128.0)
+    n_req = 8 if smoke else 24
+    lo, hi = 4, 12
+    base = TrafficConfig(
+        num_requests=n_req, prompt_len=(lo, hi),
+        vocab_size=cfg.vocab_size, seed=0,
+    )
+
+    # warmup: one prompt per length in [lo, hi] compiles every prefill
+    # remainder program plus insert/generate, so the measured sweep sees
+    # steady-state latencies instead of charging XLA compiles to the first
+    # arrival-rate's p50
+    for n in range(lo, hi + 1):
+        engine.submit(list(range(1, n + 1)))
+    engine.run_until_done()
+    engine.reset()
+
+    reports = sweep(engine, rates, base)
+
+    # ---- structural gate ------------------------------------------------
+    for rep in reports:
+        if rep.num_requests != n_req or sum(rep.finish_reasons.values()) != n_req:
+            raise AssertionError(f"serve gate: lost requests at qps={rep.qps}: {rep}")
+        bad = set(rep.finish_reasons) - VALID_REASONS
+        if bad:
+            raise AssertionError(f"serve gate: invalid finish reasons {bad}")
+        if not (0 < rep.p50_ms <= rep.p99_ms):
+            raise AssertionError(f"serve gate: broken percentiles {rep}")
+    st = engine.stats  # stats of the LAST (highest-qps) sweep point
+    if st["prefill_calls"] >= st["prefill_tokens"] and st["prefill_tokens"] > n_req:
+        raise AssertionError(
+            "serve gate: prefill degenerated to one call per token "
+            f"({st['prefill_calls']} calls / {st['prefill_tokens']} tokens)"
+        )
+
+    # ---- rows ------------------------------------------------------------
+    m = engine.metrics()
+    heavy = reports[-1]  # highest arrival rate = the "heavy traffic" point
+    rows = [
+        row("serve/prefill_tok_us", m["prefill_tok_us"] / 1e6,
+            f"tokens={st['prefill_tokens']} calls={st['prefill_calls']}"),
+        row("serve/generate_tok_us", m["generate_tok_us"] / 1e6,
+            f"tokens={st['generate_tokens']} calls={st['generate_calls']}"),
+        row("serve/insert_us", m["insert_us"] / 1e6,
+            f"calls={st['insert_calls']} pages={engine.arena.num_pages} "
+            f"page_bytes={engine.layout.page_bytes()}"),
+        row("serve/p50_ms", heavy.p50_ms / 1e3,
+            f"qps={heavy.qps} n={heavy.num_requests}"),
+        row("serve/p99_ms", heavy.p99_ms / 1e3,
+            f"qps={heavy.qps} ttft_p50_ms={heavy.ttft_p50_ms:.1f}"),
+        row("serve/tokens_per_s", 1.0 / max(heavy.tokens_per_s, 1e-9),
+            f"tokens_per_s={heavy.tokens_per_s:.1f} "
+            f"makespan_s={heavy.makespan_s:.2f}"),
+    ]
+    for rep in reports:
+        rows.append(row(
+            f"serve/sweep_qps{rep.qps:g}", rep.p50_ms / 1e3,
+            f"p99_ms={rep.p99_ms:.1f} tok_s={rep.tokens_per_s:.1f} "
+            f"reasons={rep.finish_reasons}",
+        ))
+    return rows

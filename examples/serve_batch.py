@@ -1,4 +1,4 @@
-"""Batched serving demo: continuous batching through the slot engine.
+"""Batched serving demo: continuous batching over the paged KV arena.
 
     PYTHONPATH=src python examples/serve_batch.py
 """
@@ -16,14 +16,21 @@ model = build_model(cfg)
 params = model.init(jax.random.PRNGKey(7))
 
 eng = Engine(model, params,
-             ServeConfig(batch_slots=4, max_len=96, max_new_tokens=12))
+             ServeConfig(batch_slots=4, max_len=96, max_new_tokens=12,
+                         page_size=16, prefill_chunk=16))
+print(f"arena: {eng.arena.num_pages} pages x {eng.layout.page_bytes()} B "
+      f"({eng.arena.nbytes() / 1e6:.1f} MB)")
 rng = np.random.default_rng(0)
 rids = [eng.submit(rng.integers(0, 256, size=5).tolist()) for _ in range(10)]
 
 t0 = time.perf_counter()
 results = eng.run_until_done()
 wall = time.perf_counter() - t0
-toks = sum(len(v) for v in results.values())
+toks = sum(len(c.tokens) for c in results.values())
+m = eng.metrics()
 print(f"completed {len(results)} requests, {toks} tokens in {wall:.2f}s")
+print(f"stages: prefill={m['prefill_tok_us']:.0f}us/tok "
+      f"generate={m['generate_tok_us']:.0f}us/tok insert={m['insert_us']:.0f}us")
 for rid in rids[:3]:
-    print(f"  request {rid} -> {results[rid]}")
+    c = results[rid]
+    print(f"  request {rid} -> {c.tokens} [{c.finish_reason}]")

@@ -25,10 +25,16 @@ if [[ "$what" == "all" || "$what" == "bench" ]]; then
     # (and zero per-segment update-slice chains); "sharded" compiles one
     # sharded step and FAILS unless reduce-scatters precede the final
     # gradient fusion with the deferred param all-gathers at the step
-    # head, and exposed wire bytes <= 0.6x all-reduce.  A BENCH_<n>.json
-    # perf snapshot (step wall time, bytes/worker, overlap frac,
-    # pack-kernel µs, sharded exposed ratio) is written to the repo root
-    # on every smoke run.
+    # head, and exposed wire bytes <= 0.6x all-reduce.  "serve" runs a
+    # short QPS sweep through the paged-KV continuous-batching engine and
+    # FAILS on lost requests, invalid finish reasons, or prefill
+    # degenerating to one dispatch per token.  A BENCH_<n>.json perf
+    # snapshot (interleaved min-of-trials step walls, bytes/worker,
+    # overlap frac, pack-kernel µs, sharded exposed ratio, serving stage
+    # unit costs + p50/p99/tokens-per-sec) is written to the repo root on
+    # every smoke run, and the run FAILS if any stable key regressed >25%
+    # vs the previous snapshot (REPRO_BENCH_NO_TRAJECTORY_GATE=1 records
+    # without gating).
     python -m benchmarks.run --smoke > /dev/null
     echo "smoke benchmarks OK"
 fi

@@ -1,20 +1,53 @@
-"""Batched serving engine with slot-based continuous batching.
+"""Continuous-batching serving engine over the paged KV arena.
 
-Fixed ``batch_slots`` decode slots; each slot holds one request at its own
-position (the decode step takes a per-slot ``pos`` vector).  Prompts are
-prefilled token-by-token through the decode path (exact cache semantics for
-every family: attention KV, SSM state, xLSTM state, enc-dec cross-attn).
-Finished slots are immediately refilled from the queue.
+The engine runs three separately-compiled, separately-timed stages
+(MaxText/JetStream-style), replacing the old single loop that pushed every
+prompt token through the batched decode step one jitted call at a time:
+
+* **prefill** — :class:`~repro.serve.prefill.ChunkedPrefill` consumes the
+  whole prompt at batch=1 through a ``lax.scan`` of the decode step: one
+  compiled dispatch per ``prefill_chunk`` tokens instead of one per token,
+  with bit-identical cache semantics for every family.
+* **insert** — the prefilled dense cache is copied into freshly allocated
+  arena pages (one compiled call, whole page rows rebuilt from zeros so
+  slot reuse cannot leak state).
+* **generate** — all active slots advance one token per call: gather the
+  dense batched caches through the page tables, run ``decode_step``,
+  scatter the written rows back.  Slots at different positions, admitted
+  and evicted continuously, share the one compiled executable.
+
+Requests finish with an explicit ``finish_reason`` (eos / length /
+truncated) — the old engine silently dropped requests at ``max_len-1``.
+``Engine.results`` maps request id to a :class:`~repro.serve.scheduler.Completion`
+carrying tokens, the reason, and a wall-clock ledger for latency metrics.
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import Any, Callable, Sequence
+import time
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from .kv_arena import (
+    KVArena,
+    build_insert_fn,
+    gather_caches,
+    plan_kv_layout,
+    scatter_step,
+)
+from .prefill import ChunkedPrefill
+from .scheduler import (
+    FINISH_EOS,
+    FINISH_LENGTH,
+    FINISH_TRUNCATED,
+    Completion,
+    Request,
+    Scheduler,
+    Slot,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -24,6 +57,9 @@ class ServeConfig:
     max_new_tokens: int = 32
     eos_token: int = -1          # -1 = never stop on eos
     temperature: float = 0.0     # 0 = greedy
+    page_size: int = 16          # tokens per KV page
+    num_pages: int = 0           # 0 = auto (every slot can run full-length)
+    prefill_chunk: int = 16      # prompt tokens per compiled prefill call
 
 
 def greedy_sample(logits: jax.Array, key=None, temperature: float = 0.0):
@@ -33,21 +69,31 @@ def greedy_sample(logits: jax.Array, key=None, temperature: float = 0.0):
     return jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
 
 
-@dataclasses.dataclass
-class _Slot:
-    request_id: int | None = None
-    prompt: list[int] | None = None
-    generated: list[int] = dataclasses.field(default_factory=list)
-    pos: int = 0
-    prefill_cursor: int = 0
+def build_generate_fn(model, layout):
+    """Compile the batched generate step: page tables -> dense caches ->
+    decode_step -> scatter written rows back.  One executable serves every
+    mix of active slots/positions (tables and pos are data, not shapes)."""
 
-    @property
-    def active(self) -> bool:
-        return self.request_id is not None
+    def gen(params, planes, page_tbl, resident_tbl, tokens, pos):
+        caches = gather_caches(layout, planes, page_tbl, resident_tbl)
+        logits, caches = model.decode_step(
+            params, caches, {"tokens": tokens, "pos": pos}
+        )
+        planes = scatter_step(
+            layout, planes, page_tbl, resident_tbl, caches, pos
+        )
+        return logits, planes
 
-    @property
-    def prefilling(self) -> bool:
-        return self.active and self.prefill_cursor < len(self.prompt)
+    return jax.jit(gen, donate_argnums=(1,))
+
+
+def _zero_stats() -> dict[str, float]:
+    return {
+        "requests": 0, "completed": 0,
+        "prefill_calls": 0, "prefill_tokens": 0, "prefill_s": 0.0,
+        "insert_calls": 0, "insert_s": 0.0,
+        "generate_calls": 0, "generate_tokens": 0, "generate_s": 0.0,
+    }
 
 
 class Engine:
@@ -56,97 +102,183 @@ class Engine:
         self.params = params
         self.sc = sc
         self.sample = sample
-        B = sc.batch_slots
-        self.caches = model.init_caches(B, sc.max_len)
-        self.slots = [_Slot() for _ in range(B)]
-        self.queue: deque = deque()
-        self.results: dict[int, list[int]] = {}
+        self.layout = plan_kv_layout(model.cache_specs, sc.max_len, sc.page_size)
+        self._num_pages = sc.num_pages or KVArena.auto_pages(
+            self.layout, sc.batch_slots
+        )
+        self.prefill = ChunkedPrefill(model, sc.prefill_chunk)
+        self._generate = build_generate_fn(model, self.layout)
+        self._insert = build_insert_fn(self.layout)
+        self._encode = None
+        if getattr(model.cfg, "is_encdec", False):
+            from repro.models import encdec as ed
+
+            def enc(params, frames):
+                memory = ed.encode(params["encdec"], frames, model.cfg)
+                return ed.precompute_memory_kv(
+                    params["encdec"], memory, model.cfg
+                )
+
+            self._encode = jax.jit(enc)
         self._next_id = 0
-        self._step_fn = jax.jit(model.decode_step)
+        self.reset()
+
+    def reset(self) -> None:
+        """Fresh arena/queue/results/stats; compiled executables are kept,
+        so QPS sweeps can reuse one engine without re-tracing."""
+        self.arena = KVArena(self.layout, self._num_pages, self.sc.batch_slots)
+        self.sched = Scheduler(self.sc.batch_slots)
+        self.results: dict[int, Completion] = {}
+        self.stats = _zero_stats()
         self._key = jax.random.PRNGKey(0)
 
     # ---- request API -------------------------------------------------------
-    def submit(self, prompt_tokens: Sequence[int]) -> int:
+    def submit(self, prompt_tokens: Sequence[int], frames: Any = None) -> int:
         rid = self._next_id
         self._next_id += 1
-        self.queue.append((rid, list(prompt_tokens)))
+        self.sched.submit(Request(
+            rid=rid, prompt=list(prompt_tokens), frames=frames,
+            submit_s=time.perf_counter(),
+        ))
         return rid
 
     @property
     def busy(self) -> bool:
-        return bool(self.queue) or any(s.active for s in self.slots)
+        return self.sched.busy
 
-    # ---- scheduling -------------------------------------------------------
-    def _reset_slot_cache(self, i: int):
-        """Zero slot i's cache rows (SSM/xLSTM states are not position-masked,
-        so stale state from the previous request must be cleared)."""
-        self.caches = jax.tree.map(
-            lambda c: c.at[:, i].set(jnp.zeros_like(c[:, i])) if c.ndim >= 2 else c,
-            self.caches,
+    def metrics(self) -> dict[str, float]:
+        """Per-stage unit costs (µs), for the serve smoke gate."""
+        st = self.stats
+        return {
+            "prefill_tok_us": 1e6 * st["prefill_s"] / max(1, st["prefill_tokens"]),
+            "generate_tok_us": 1e6 * st["generate_s"] / max(1, st["generate_tokens"]),
+            "insert_us": 1e6 * st["insert_s"] / max(1, st["insert_calls"]),
+        }
+
+    # ---- internals -----------------------------------------------------
+    def _sample_host(self, logits) -> np.ndarray:
+        self._key, sub = jax.random.split(self._key)
+        return np.asarray(self.sample(logits, sub, self.sc.temperature))
+
+    def _finish(self, slot: Slot, reason: str) -> None:
+        comp = self.sched.finish(slot, reason, time.perf_counter())
+        self.results[comp.rid] = comp
+        self.stats["completed"] += 1
+        self.arena.release_slot(slot.index)
+
+    def _admit(self) -> None:
+        while True:
+            na = self.sched.next_admission()
+            if na is None:
+                return
+            slot, req = na
+            L = len(req.prompt)
+            if L > self.sc.max_len - 1:
+                # no room to even feed the first generated token back in
+                self.sched.admit(slot, time.perf_counter())
+                self.stats["requests"] += 1
+                self._finish(slot, FINISH_TRUNCATED)
+                continue
+            needed = self.layout.pages_per_request(L)
+            if needed > self.arena.pool.available:
+                if needed > self.arena.num_pages:
+                    # could never fit even in an idle arena: reject now
+                    # rather than deadlock the queue
+                    self.sched.admit(slot, time.perf_counter())
+                    self.stats["requests"] += 1
+                    self._finish(slot, FINISH_TRUNCATED)
+                    continue
+                return  # wait for running requests to free pages
+            self.sched.admit(slot, time.perf_counter())
+            self.stats["requests"] += 1
+            self._run_prefill(slot, req)
+
+    def _run_prefill(self, slot: Slot, req: Request) -> None:
+        if not self.arena.acquire_slot(slot.index, len(req.prompt)):
+            raise AssertionError("admission checked pages but alloc failed")
+        t0 = time.perf_counter()
+        caches = self.model.init_caches(1, self.layout.tokens)
+        if self._encode is not None:
+            cfg = self.model.cfg
+            frames = req.frames
+            if frames is None:
+                frames = np.zeros(
+                    (1, cfg.frontend_tokens, cfg.d_model), np.float32
+                )
+            caches = dict(caches)
+            mem_k, mem_v = self._encode(self.params, jnp.asarray(frames))
+            caches["mem_k"] = mem_k
+            caches["mem_v"] = mem_v
+        logits, caches, calls = self.prefill(self.params, caches, req.prompt)
+        first = int(self._sample_host(logits)[0])
+        t1 = time.perf_counter()
+        self.stats["prefill_calls"] += calls
+        self.stats["prefill_tokens"] += len(req.prompt)
+        self.stats["prefill_s"] += t1 - t0
+
+        page_ids, res_id = self.arena.insert_ids(slot.index)
+        self.arena.planes = self._insert(
+            self.arena.planes, caches, page_ids, res_id
         )
+        jax.block_until_ready(self.arena.planes)
+        t2 = time.perf_counter()
+        self.stats["insert_calls"] += 1
+        self.stats["insert_s"] += t2 - t1
 
-    def _fill_slots(self):
-        for i, s in enumerate(self.slots):
-            if not s.active and self.queue:
-                rid, prompt = self.queue.popleft()
-                s.request_id = rid
-                s.prompt = prompt
-                s.generated = []
-                s.pos = 0
-                s.prefill_cursor = 0
-                self._reset_slot_cache(i)
+        slot.tokens.append(first)
+        slot.first_token_s = t2
+        self._maybe_finish(slot, first)
+
+    def _maybe_finish(self, slot: Slot, tok: int) -> None:
+        """Terminal checks after a token lands.  ``slot.pos`` is the
+        position the NEXT decode input would occupy; it must stay within
+        the context for generation to continue."""
+        if tok == self.sc.eos_token:
+            self._finish(slot, FINISH_EOS)
+        elif len(slot.tokens) >= self.sc.max_new_tokens:
+            self._finish(slot, FINISH_LENGTH)
+        elif slot.pos > self.sc.max_len - 1:
+            self._finish(slot, FINISH_TRUNCATED)
 
     def step(self) -> int:
-        """One engine iteration: every active slot advances one token
-        (prefill consumes a prompt token; decode emits a new one).
-        Returns the number of active slots."""
-        self._fill_slots()
-        B = self.sc.batch_slots
-        tokens = np.zeros((B, 1), np.int32)
-        pos = np.zeros((B,), np.int32)
-        active = []
-        for i, s in enumerate(self.slots):
-            if not s.active:
-                continue
-            active.append(i)
-            pos[i] = s.pos
-            if s.prefilling:
-                tokens[i, 0] = s.prompt[s.prefill_cursor]
-            else:
-                tokens[i, 0] = s.generated[-1]
+        """One engine iteration: admit (prefill+insert) what fits, then
+        advance every active slot one generated token.  Returns the number
+        of slots that decoded."""
+        self._admit()
+        for slot in self.sched.active_slots:
+            if not self.arena.page_for(slot.index, slot.pos):
+                self._finish(slot, FINISH_TRUNCATED)  # pool ran dry
+        active = self.sched.active_slots
         if not active:
             return 0
 
-        batch = {"tokens": jnp.asarray(tokens), "pos": jnp.asarray(pos)}
-        logits, self.caches = self._step_fn(self.params, self.caches, batch)
-        self._key, sub = jax.random.split(self._key)
-        next_tok = np.asarray(self.sample(logits, sub, self.sc.temperature))
+        S = self.sc.batch_slots
+        tokens = np.zeros((S, 1), np.int32)
+        pos = np.zeros((S,), np.int32)
+        for slot in active:
+            tokens[slot.index, 0] = slot.tokens[-1]
+            pos[slot.index] = slot.pos
+        page_tbl, resident_tbl = self.arena.device_tables()
 
-        for i in active:
-            s = self.slots[i]
-            fed_last_prompt = (
-                s.prefilling and s.prefill_cursor == len(s.prompt) - 1
-            )
-            was_decode = not s.prefilling
-            s.pos += 1
-            if s.prefilling:
-                s.prefill_cursor += 1
-            if fed_last_prompt or was_decode:
-                # the logits of this step predict the next token
-                t = int(next_tok[i])
-                s.generated.append(t)
-                done = (
-                    len(s.generated) >= self.sc.max_new_tokens
-                    or t == self.sc.eos_token
-                    or s.pos >= self.sc.max_len - 1
-                )
-                if done:
-                    self.results[s.request_id] = list(s.generated)
-                    s.request_id = None
-                    s.prompt = None
+        t0 = time.perf_counter()
+        logits, self.arena.planes = self._generate(
+            self.params, self.arena.planes, page_tbl, resident_tbl,
+            jnp.asarray(tokens), jnp.asarray(pos),
+        )
+        nxt = self._sample_host(logits)
+        t1 = time.perf_counter()
+        self.stats["generate_calls"] += 1
+        self.stats["generate_tokens"] += len(active)
+        self.stats["generate_s"] += t1 - t0
+
+        for slot in active:
+            tok = int(nxt[slot.index])
+            slot.tokens.append(tok)
+            slot.pos += 1
+            self._maybe_finish(slot, tok)
         return len(active)
 
-    def run_until_done(self, max_steps: int = 100_000) -> dict[int, list[int]]:
+    def run_until_done(self, max_steps: int = 100_000) -> dict[int, Completion]:
         steps = 0
         while self.busy and steps < max_steps:
             self.step()

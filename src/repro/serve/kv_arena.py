@@ -1,0 +1,553 @@
+"""Statically-planned paged KV arena for serving.
+
+The training side solved "where do the bytes live" once, statically
+(:mod:`repro.core.arena`): every bucket gets a fixed slot in a flat
+per-dtype plane, and execute-time access is a static-offset slice view.
+This module applies the same layout discipline to the *serving* caches.
+Instead of one dense ``(batch_slots, max_len, ...)`` buffer per cache leaf
+— which reserves ``max_len`` positions for every slot whether a request
+uses 6 tokens or 600 — the arena stores fixed-size **pages** in flat
+per-dtype planes and gives each decode slot a **page table**:
+
+* A *plane* is one ``(num_pages, page_elems)`` buffer per dtype
+  (bf16/f32 KV, int8 payloads and their bf16 scales land in separate
+  planes automatically).
+* A *page* is ``page_size`` tokens' worth of EVERY time-indexed cache
+  leaf, packed back-to-back at static offsets inside the page row — the
+  same ``build_layout``-style offset math as the gradient arena, with
+  "segment" = one leaf's ``page_size``-token chunk.
+* A single page id is meaningful in every plane at once (page ``p`` covers
+  the same logical token range in the bf16 plane and the int8 plane), so
+  one page table per slot serves all cache families together.
+
+Cache leaves are classified by *probing* ``model.cache_specs`` — no
+per-family knowledge is hard-coded:
+
+* **paged** leaves grow linearly with ``max_len`` (attention K/V and their
+  int8 scales, enc-dec self-attention): the axis whose extent tracks
+  ``max_len`` is the time axis, paged in ``page_size``-token chunks.
+* **resident** leaves do not grow with ``max_len`` (SSM recurrent state and
+  conv tails, xLSTM cell states, rolling sliding-window KV, enc-dec
+  cross-attention memory): the whole per-slot state is a *single-page
+  resident* — one page allocated at admission, rewritten wholesale every
+  step, freed on finish.  This is why SSM/xLSTM models serve out of the
+  same arena as attention models: their O(1) state is just a page that
+  never grows.
+
+Allocation lives host-side in :class:`PagePool` (a free list — pure
+Python, property-testable); device-side access is three pure functions
+built per layout: :func:`gather_caches` (page table -> dense batched cache
+pytree for the model's ``decode_step``), :func:`scatter_step` (persist the
+one written token row per slot + residents), and :func:`build_insert_fn`
+(copy a prefilled per-request cache into freshly allocated pages).
+Unallocated page-table entries use the out-of-bounds sentinel
+``num_pages``: gathers fill with exact zeros, scatters drop — a slot can
+therefore never read or write another slot's pages.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _leaf_name(path) -> str:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return "/".join(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheLeaf:
+    """Static placement of one cache-pytree leaf in the arena.
+
+    ``shape`` is the per-slot shape (batch axis removed) at the arena's
+    logical length; ``time_axis`` indexes into ``shape`` (``None`` =
+    resident).  ``offset``/``numel`` address the leaf's segment inside a
+    page row of its plane: for paged leaves ``numel`` is one
+    ``page_size``-token chunk, for residents the whole per-slot state.
+    """
+
+    name: str
+    shape: tuple[int, ...]
+    dtype: str
+    batch_axis: int
+    time_axis: int | None
+    plane: int
+    offset: int
+    numel: int
+
+    @property
+    def paged(self) -> bool:
+        return self.time_axis is not None
+
+
+@dataclasses.dataclass(frozen=True)
+class KVLayout:
+    """Static page/plane layout for one model's serving caches.
+
+    ``tokens`` is the arena's logical length (``max_len`` rounded up to a
+    page multiple); every paged leaf's time axis has that extent.
+    ``leaves`` parallels ``jax.tree_util.tree_flatten`` order of the cache
+    pytree, so gather/scatter never re-derive structure at trace time.
+    """
+
+    page_size: int
+    tokens: int
+    pages_per_slot: int
+    plane_dtypes: tuple[str, ...]
+    plane_elems: tuple[int, ...]
+    leaves: tuple[CacheLeaf, ...]
+    treedef: Any
+
+    @property
+    def num_planes(self) -> int:
+        return len(self.plane_dtypes)
+
+    @property
+    def has_paged(self) -> bool:
+        return any(l.paged for l in self.leaves)
+
+    @property
+    def has_resident(self) -> bool:
+        return any(not l.paged for l in self.leaves)
+
+    def token_pages(self, n_tokens: int) -> int:
+        """Pages needed to hold ``n_tokens`` cache rows (0 for pure-resident
+        models, whose state never grows with the sequence)."""
+        if not self.has_paged or n_tokens <= 0:
+            return 0
+        return -(-int(n_tokens) // self.page_size)
+
+    def pages_per_request(self, n_tokens: int) -> int:
+        """Total pages a request holding ``n_tokens`` occupies (token pages
+        plus the single resident page, when the model has resident state)."""
+        return self.token_pages(n_tokens) + (1 if self.has_resident else 0)
+
+    def page_bytes(self) -> int:
+        return sum(
+            w * np.dtype(d).itemsize
+            for w, d in zip(self.plane_elems, self.plane_dtypes)
+        )
+
+
+def plan_kv_layout(
+    cache_spec_fn: Callable[[int, int], Any],
+    max_len: int,
+    page_size: int,
+) -> KVLayout:
+    """Probe ``cache_spec_fn(batch, max_len)`` and compute the static layout.
+
+    Classification is structural, not name-based: the batch axis is the
+    axis that moves when ``batch`` does, the time axis is the axis that
+    grows by exactly one page when ``max_len`` grows by ``page_size``.
+    Leaves with no such axis (recurrent state, rolling-window caches whose
+    extent saturates at the window, cross-attn memory) become residents.
+    """
+    page_size = int(page_size)
+    if page_size < 1:
+        raise ValueError(f"page_size must be >= 1, got {page_size}")
+    tokens = -(-int(max_len) // page_size) * page_size
+    base, bdef = jax.tree_util.tree_flatten_with_path(cache_spec_fn(1, tokens))
+    wide = jax.tree_util.tree_leaves(cache_spec_fn(2, tokens))
+    long = jax.tree_util.tree_leaves(cache_spec_fn(1, tokens + page_size))
+
+    plane_of: dict[str, int] = {}
+    plane_dtypes: list[str] = []
+    tok_elems: list[int] = []  # per-plane token-page row width
+    res_elems: list[int] = []  # per-plane resident row width
+    leaves: list[CacheLeaf] = []
+
+    for (path, spec), w_spec, l_spec in zip(base, wide, long):
+        name = _leaf_name(path)
+        b_axes = [
+            i for i, (a, b) in enumerate(zip(spec.shape, w_spec.shape)) if a != b
+        ]
+        if len(b_axes) != 1 or w_spec.shape[b_axes[0]] - spec.shape[b_axes[0]] != 1:
+            raise ValueError(
+                f"cache leaf {name}: cannot identify batch axis "
+                f"({spec.shape} vs {w_spec.shape})"
+            )
+        batch_axis = b_axes[0]
+        t_axes = [
+            i for i, (a, b) in enumerate(zip(spec.shape, l_spec.shape)) if a != b
+        ]
+        if len(t_axes) > 1:
+            raise ValueError(
+                f"cache leaf {name}: multiple axes track max_len "
+                f"({spec.shape} vs {l_spec.shape})"
+            )
+        shape = tuple(s for i, s in enumerate(spec.shape) if i != batch_axis)
+        time_axis = None
+        if t_axes and l_spec.shape[t_axes[0]] - spec.shape[t_axes[0]] == page_size:
+            # grows one-row-per-token: genuinely time-indexed -> paged
+            time_axis = t_axes[0] - (1 if batch_axis < t_axes[0] else 0)
+
+        dt = np.dtype(spec.dtype).name
+        if dt not in plane_of:
+            plane_of[dt] = len(plane_dtypes)
+            plane_dtypes.append(dt)
+            tok_elems.append(0)
+            res_elems.append(0)
+        p = plane_of[dt]
+        if time_axis is not None:
+            chunk = list(shape)
+            chunk[time_axis] = page_size
+            numel = int(np.prod(chunk, dtype=np.int64))
+            offset = tok_elems[p]
+            tok_elems[p] += numel
+        else:
+            numel = int(np.prod(shape, dtype=np.int64)) if shape else 1
+            offset = res_elems[p]
+            res_elems[p] += numel
+        leaves.append(CacheLeaf(
+            name=name, shape=shape, dtype=dt, batch_axis=batch_axis,
+            time_axis=time_axis, plane=p, offset=offset, numel=numel,
+        ))
+
+    plane_elems = tuple(max(t, r) for t, r in zip(tok_elems, res_elems))
+    return KVLayout(
+        page_size=page_size,
+        tokens=tokens,
+        pages_per_slot=tokens // page_size,
+        plane_dtypes=tuple(plane_dtypes),
+        plane_elems=plane_elems,
+        leaves=tuple(leaves),
+        treedef=bdef,
+    )
+
+
+# ---------------------------------------------------------------------------
+# page allocation (host side, pure Python -> property-testable)
+# ---------------------------------------------------------------------------
+
+
+class PagePool:
+    """Free-list page allocator.  Deterministic (LIFO reuse) so serving runs
+    are reproducible; allocation is all-or-nothing per request."""
+
+    def __init__(self, num_pages: int):
+        if num_pages < 1:
+            raise ValueError(f"num_pages must be >= 1, got {num_pages}")
+        self.num_pages = int(num_pages)
+        self._free: list[int] = list(range(self.num_pages - 1, -1, -1))
+        self._used: set[int] = set()
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list[int] | None:
+        """Allocate ``n`` pages, or ``None`` (and no state change) if fewer
+        than ``n`` are free."""
+        if n < 0:
+            raise ValueError(n)
+        if n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        self._used.update(out)
+        return out
+
+    def free(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            if p not in self._used:
+                raise ValueError(f"double free / foreign page {p}")
+            self._used.remove(p)
+            self._free.append(p)
+
+
+# ---------------------------------------------------------------------------
+# device-side access (pure functions over planes + tables)
+# ---------------------------------------------------------------------------
+
+
+def _plane_view(plane: jax.Array, leaf: CacheLeaf, inner: tuple[int, ...]):
+    """Leaf segment of a plane as ``(num_pages, *inner)`` — a static slice
+    plus reshape, the serving twin of ``ArenaLayout.bucket_view``."""
+    return plane[:, leaf.offset : leaf.offset + leaf.numel].reshape(
+        (plane.shape[0],) + inner
+    )
+
+
+def _chunk_shape(leaf: CacheLeaf, page_size: int) -> tuple[int, ...]:
+    chunk = list(leaf.shape)
+    chunk[leaf.time_axis] = page_size
+    return tuple(chunk)
+
+
+def gather_caches(
+    layout: KVLayout,
+    planes: Sequence[jax.Array],
+    page_tbl: jax.Array,
+    resident_tbl: jax.Array,
+):
+    """Materialise the dense batched cache pytree the model's
+    ``decode_step`` expects, reading every slot's rows through its page
+    table.  Unallocated entries (sentinel >= num_pages) gather exact zeros,
+    which the decode masks discard — a slot sees only its own pages.
+
+    ``page_tbl``: (slots, pages_per_slot) int32; ``resident_tbl``: (slots,).
+    """
+    S = page_tbl.shape[0]
+    ps, P = layout.page_size, layout.pages_per_slot
+    out = []
+    for leaf in layout.leaves:
+        plane = planes[leaf.plane]
+        if not leaf.paged:
+            rows = jnp.take(
+                plane[:, leaf.offset : leaf.offset + leaf.numel],
+                resident_tbl, axis=0, mode="fill", fill_value=0,
+            )
+            x = rows.reshape((S,) + leaf.shape)
+        else:
+            seg = _plane_view(plane, leaf, _chunk_shape(leaf, ps))
+            rows = jnp.take(
+                seg, page_tbl.reshape(-1), axis=0, mode="fill", fill_value=0
+            )
+            x = rows.reshape((S, P) + _chunk_shape(leaf, ps))
+            x = jnp.moveaxis(x, 1, 1 + leaf.time_axis)
+            x = x.reshape((S,) + leaf.shape)  # merge (P, ps) -> tokens
+        out.append(jnp.moveaxis(x, 0, leaf.batch_axis))
+    return jax.tree_util.tree_unflatten(layout.treedef, out)
+
+
+def scatter_step(
+    layout: KVLayout,
+    planes: Sequence[jax.Array],
+    page_tbl: jax.Array,
+    resident_tbl: jax.Array,
+    caches,
+    pos: jax.Array,
+):
+    """Persist one decode step back into the arena: for each slot, the
+    single token row written at ``pos`` (paged leaves, read-modify-write of
+    the touched page row) plus the whole resident state (rewritten
+    wholesale — SSM/xLSTM state is not position-masked, so partial writes
+    would be wrong).  Slots whose table entry is the sentinel scatter
+    nowhere (``mode='drop'``)."""
+    S = page_tbl.shape[0]
+    ps = layout.page_size
+    vals = jax.tree_util.tree_leaves(caches)
+    page_ids = jnp.take_along_axis(page_tbl, (pos // ps)[:, None], axis=1)[:, 0]
+    within = pos % ps
+    planes = list(planes)
+
+    for p in range(layout.num_planes):
+        paged = [
+            (lf, v) for lf, v in zip(layout.leaves, vals)
+            if lf.plane == p and lf.paged
+        ]
+        res = [
+            (lf, v) for lf, v in zip(layout.leaves, vals)
+            if lf.plane == p and not lf.paged
+        ]
+        W = layout.plane_elems[p]
+        dt = planes[p].dtype
+        if paged:
+            rows = jnp.take(planes[p], page_ids, axis=0, mode="fill",
+                            fill_value=0)
+            for lf, v in paged:
+                x = jnp.moveaxis(v, lf.batch_axis, 0)  # (S, *shape)
+                y = jnp.moveaxis(x, 1 + lf.time_axis, 1)  # time -> axis 1
+                idx = pos.reshape((S,) + (1,) * (y.ndim - 1))
+                tok = jnp.take_along_axis(y, idx, axis=1)[:, 0]  # (S, *rest)
+                chunk = _chunk_shape(lf, ps)
+                seg = rows[:, lf.offset : lf.offset + lf.numel].reshape(
+                    (S,) + chunk
+                )
+                ix = (jnp.arange(S),) + (slice(None),) * lf.time_axis + (within,)
+                seg = seg.at[ix].set(tok.astype(dt))
+                rows = rows.at[:, lf.offset : lf.offset + lf.numel].set(
+                    seg.reshape(S, lf.numel)
+                )
+            planes[p] = planes[p].at[page_ids].set(rows, mode="drop")
+        if res:
+            rows = jnp.zeros((S, W), dt)
+            for lf, v in res:
+                x = jnp.moveaxis(v, lf.batch_axis, 0).reshape(S, lf.numel)
+                rows = rows.at[:, lf.offset : lf.offset + lf.numel].set(
+                    x.astype(dt)
+                )
+            planes[p] = planes[p].at[resident_tbl].set(rows, mode="drop")
+    return planes
+
+
+def build_insert_fn(layout: KVLayout):
+    """Compile the insert stage: copy a prefilled per-request cache
+    (batch=1, dense at the arena's logical length) into freshly allocated
+    pages.  Whole page rows are rebuilt from zeros, so slot reuse can never
+    leak a previous request's state.  ``page_ids`` is null-padded to
+    ``pages_per_slot`` (fixed shape -> one compilation per model)."""
+    ps, P = layout.page_size, layout.pages_per_slot
+
+    def insert(planes, pcache, page_ids, resident_id):
+        vals = jax.tree_util.tree_leaves(pcache)
+        planes = list(planes)
+        for p in range(layout.num_planes):
+            W = layout.plane_elems[p]
+            dt = planes[p].dtype
+            paged = [
+                (lf, v) for lf, v in zip(layout.leaves, vals)
+                if lf.plane == p and lf.paged
+            ]
+            res = [
+                (lf, v) for lf, v in zip(layout.leaves, vals)
+                if lf.plane == p and not lf.paged
+            ]
+            if paged:
+                rows = jnp.zeros((P, W), dt)
+                for lf, v in paged:
+                    x = jnp.moveaxis(v, lf.batch_axis, 0)[0]  # per-slot
+                    shp = (
+                        lf.shape[: lf.time_axis]
+                        + (P, ps)
+                        + lf.shape[lf.time_axis + 1 :]
+                    )
+                    x = jnp.moveaxis(x.reshape(shp), lf.time_axis, 0)
+                    rows = rows.at[:, lf.offset : lf.offset + lf.numel].set(
+                        x.reshape(P, lf.numel).astype(dt)
+                    )
+                planes[p] = planes[p].at[page_ids].set(rows, mode="drop")
+            if res:
+                row_ = jnp.zeros((1, W), dt)
+                for lf, v in res:
+                    x = jnp.moveaxis(v, lf.batch_axis, 0).reshape(1, lf.numel)
+                    row_ = row_.at[:, lf.offset : lf.offset + lf.numel].set(
+                        x.astype(dt)
+                    )
+                planes[p] = planes[p].at[resident_id].set(row_, mode="drop")
+        return planes
+
+    return jax.jit(insert, donate_argnums=(0,))
+
+
+# ---------------------------------------------------------------------------
+# the arena object (planes + tables + pool)
+# ---------------------------------------------------------------------------
+
+
+class KVArena:
+    """Mutable serving arena: device planes, host page tables, page pool.
+
+    The sentinel for "no page" is ``num_pages`` — deliberately
+    out-of-bounds so device gathers fill zeros and device scatters drop
+    (negative sentinels would wrap, silently aliasing the last page).
+    """
+
+    def __init__(self, layout: KVLayout, num_pages: int, num_slots: int):
+        self.layout = layout
+        self.num_pages = int(num_pages)
+        self.num_slots = int(num_slots)
+        self.null = self.num_pages
+        self.pool = PagePool(num_pages)
+        self.planes = [
+            jnp.zeros((num_pages, w), np.dtype(d))
+            for w, d in zip(layout.plane_elems, layout.plane_dtypes)
+        ]
+        self.page_tbl = np.full(
+            (num_slots, layout.pages_per_slot), self.null, np.int32
+        )
+        self.resident_tbl = np.full((num_slots,), self.null, np.int32)
+        self._slot_pages: list[list[int]] = [[] for _ in range(num_slots)]
+        self._slot_resident: list[int | None] = [None] * num_slots
+
+    @classmethod
+    def auto_pages(cls, layout: KVLayout, num_slots: int) -> int:
+        """Pool size at which admission can never starve: every slot can
+        hold a full-length request simultaneously."""
+        per_slot = layout.pages_per_slot * (1 if layout.has_paged else 0)
+        per_slot += 1 if layout.has_resident else 0
+        return max(1, num_slots * per_slot)
+
+    def nbytes(self) -> int:
+        return self.num_pages * self.layout.page_bytes()
+
+    # ---- slot lifecycle ---------------------------------------------------
+    def acquire_slot(self, slot: int, n_tokens: int) -> bool:
+        """Allocate the pages a fresh request needs (token pages for the
+        prompt + the resident page).  All-or-nothing; False = not enough
+        free pages, nothing changed."""
+        n_tok = self.layout.token_pages(n_tokens)
+        n_res = 1 if self.layout.has_resident else 0
+        pages = self.pool.alloc(n_tok + n_res)
+        if pages is None:
+            return False
+        if n_res:
+            self._slot_resident[slot] = pages[0]
+            self.resident_tbl[slot] = pages[0]
+        tok_pages = pages[n_res:]
+        self._slot_pages[slot] = tok_pages
+        self.page_tbl[slot, :] = self.null
+        self.page_tbl[slot, : len(tok_pages)] = tok_pages
+        return True
+
+    def extend_slot(self, slot: int) -> bool:
+        """Grow a slot by one token page (generate crossed a page
+        boundary).  False = pool exhausted (caller truncates)."""
+        got = self.pool.alloc(1)
+        if got is None:
+            return False
+        i = len(self._slot_pages[slot])
+        self._slot_pages[slot].append(got[0])
+        self.page_tbl[slot, i] = got[0]
+        return True
+
+    def page_for(self, slot: int, pos: int) -> bool:
+        """Ensure the page covering position ``pos`` exists (allocating at
+        most one — positions advance a token at a time)."""
+        if not self.layout.has_paged:
+            return True
+        idx = pos // self.layout.page_size
+        if idx < len(self._slot_pages[slot]):
+            return True
+        if idx != len(self._slot_pages[slot]):
+            raise AssertionError(
+                f"slot {slot}: non-contiguous page demand {idx}"
+            )
+        return self.extend_slot(slot)
+
+    def release_slot(self, slot: int) -> None:
+        pages = list(self._slot_pages[slot])
+        if self._slot_resident[slot] is not None:
+            pages.append(self._slot_resident[slot])
+        if pages:
+            self.pool.free(pages)
+        self._slot_pages[slot] = []
+        self._slot_resident[slot] = None
+        self.page_tbl[slot, :] = self.null
+        self.resident_tbl[slot] = self.null
+
+    # ---- device-table views -------------------------------------------
+    def device_tables(self) -> tuple[jax.Array, jax.Array]:
+        return jnp.asarray(self.page_tbl), jnp.asarray(self.resident_tbl)
+
+    def insert_ids(self, slot: int) -> tuple[jax.Array, jax.Array]:
+        """Null-padded page-id vector + resident id for the insert stage."""
+        ids = np.full((self.layout.pages_per_slot,), self.null, np.int32)
+        tok = self._slot_pages[slot]
+        ids[: len(tok)] = tok
+        rid = self._slot_resident[slot]
+        res = np.full((1,), self.null if rid is None else rid, np.int32)
+        return jnp.asarray(ids), jnp.asarray(res)
+
+
+__all__ = [
+    "CacheLeaf",
+    "KVArena",
+    "KVLayout",
+    "PagePool",
+    "build_insert_fn",
+    "gather_caches",
+    "plan_kv_layout",
+    "scatter_step",
+]

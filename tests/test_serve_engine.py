@@ -1,4 +1,7 @@
-"""Serving engine: batching invariance, slot reuse, determinism."""
+"""Serving engine: batching invariance, slot reuse, finish reasons,
+chunked-prefill call counting, determinism."""
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -24,8 +27,11 @@ def test_single_request_greedy(model_and_params):
     rid = eng.submit([5, 17, 3])
     results = eng.run_until_done()
     assert rid in results
-    assert len(results[rid]) == 8
-    assert all(0 <= t < 128 for t in results[rid])
+    comp = results[rid]
+    assert len(comp.tokens) == 8
+    assert comp.finish_reason == "length"
+    assert all(0 <= t < 128 for t in comp.tokens)
+    assert comp.finish_s >= comp.first_token_s >= comp.submit_s
 
 
 def test_batching_invariance(model_and_params):
@@ -36,14 +42,14 @@ def test_batching_invariance(model_and_params):
     eng1 = Engine(model, params, ServeConfig(batch_slots=1, max_len=64,
                                              max_new_tokens=6))
     r1 = eng1.submit(prompt)
-    out1 = eng1.run_until_done()[r1]
+    out1 = eng1.run_until_done()[r1].tokens
 
     eng2 = Engine(model, params, ServeConfig(batch_slots=3, max_len=64,
                                              max_new_tokens=6))
     r2 = eng2.submit(prompt)
     eng2.submit([88, 2])
     eng2.submit([1, 1, 1, 1, 1])
-    out2 = eng2.run_until_done()[r2]
+    out2 = eng2.run_until_done()[r2].tokens
     assert out1 == out2
 
 
@@ -53,9 +59,9 @@ def test_slot_reuse_does_not_leak_state(model_and_params):
     eng = Engine(model, params, ServeConfig(batch_slots=1, max_len=64,
                                             max_new_tokens=5))
     ra = eng.submit(prompt)
-    rb = eng.submit(prompt)  # will reuse slot 0 after ra finishes
+    rb = eng.submit(prompt)  # will reuse slot 0 (and recycled pages)
     res = eng.run_until_done()
-    assert res[ra] == res[rb]
+    assert res[ra].tokens == res[rb].tokens
 
 
 def test_many_requests_complete(model_and_params):
@@ -65,4 +71,147 @@ def test_many_requests_complete(model_and_params):
     rids = [eng.submit([i + 1, i + 2]) for i in range(7)]
     res = eng.run_until_done()
     assert set(rids) <= set(res)
-    assert all(len(res[r]) == 4 for r in rids)
+    assert all(len(res[r].tokens) == 4 for r in rids)
+    assert all(res[r].finish_reason == "length" for r in rids)
+
+
+# ---------------------------------------------------------------------------
+# finish reasons (the old engine silently truncated at max_len-1)
+# ---------------------------------------------------------------------------
+
+
+def test_finish_reason_eos(model_and_params):
+    model, params = model_and_params
+    prompt = [5, 17, 3]
+    # learn what greedy produces, then rerun with that token as eos
+    eng = Engine(model, params, ServeConfig(batch_slots=1, max_len=64,
+                                            max_new_tokens=4))
+    r = eng.submit(prompt)
+    first = eng.run_until_done()[r].tokens[0]
+
+    eng2 = Engine(model, params, ServeConfig(batch_slots=1, max_len=64,
+                                             max_new_tokens=4,
+                                             eos_token=first))
+    r2 = eng2.submit(prompt)
+    comp = eng2.run_until_done()[r2]
+    assert comp.finish_reason == "eos"
+    assert comp.tokens == [first]
+
+
+def test_finish_reason_truncated_at_context(model_and_params):
+    """Context fills before max_new_tokens: the completion must say so
+    instead of masquerading as a normal finish."""
+    model, params = model_and_params
+    prompt = [5, 17, 3, 9]
+    eng = Engine(model, params, ServeConfig(batch_slots=1, max_len=8,
+                                            max_new_tokens=32, page_size=4))
+    r = eng.submit(prompt)
+    comp = eng.run_until_done()[r]
+    assert comp.finish_reason == "truncated"
+    # positions 0..7 all consumed (prompt at 0-3, generated fed at 4-7);
+    # the final position's logits still yield one last token
+    assert len(comp.tokens) == 8 - len(prompt) + 1
+
+
+def test_finish_reason_truncated_prompt_too_long(model_and_params):
+    model, params = model_and_params
+    eng = Engine(model, params, ServeConfig(batch_slots=1, max_len=8,
+                                            max_new_tokens=4, page_size=4))
+    r = eng.submit(list(range(1, 13)))  # 12 > max_len-1
+    comp = eng.run_until_done()[r]
+    assert comp.finish_reason == "truncated"
+    assert comp.tokens == []
+
+
+def test_finish_reason_truncated_on_page_exhaustion(model_and_params):
+    """An explicitly undersized page pool must truncate loudly, not wedge
+    or corrupt neighbours."""
+    model, params = model_and_params
+    eng = Engine(model, params, ServeConfig(batch_slots=2, max_len=64,
+                                            max_new_tokens=40, page_size=8,
+                                            num_pages=3))
+    ra = eng.submit([1, 2, 3])   # 1 page now, more as it generates
+    rb = eng.submit([4, 5, 6])
+    res = eng.run_until_done()
+    assert res[ra].finish_reason == "truncated"
+    assert res[rb].finish_reason == "truncated"
+    assert len(res[ra].tokens) > 0
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill: O(L/chunk) compiled calls, not O(L)
+# ---------------------------------------------------------------------------
+
+
+def test_prefill_call_count(model_and_params):
+    model, params = model_and_params
+    L, chunk = 11, 4
+    eng = Engine(model, params, ServeConfig(batch_slots=1, max_len=64,
+                                            max_new_tokens=2,
+                                            prefill_chunk=chunk))
+    eng.submit(list(range(1, L + 1)))
+    eng.run_until_done()
+    assert eng.stats["prefill_tokens"] == L
+    assert eng.stats["prefill_calls"] == math.ceil(L / chunk)  # 3, not 11
+
+
+def test_prefill_chunk_size_does_not_change_output(model_and_params):
+    model, params = model_and_params
+    prompt = list(range(1, 14))
+    outs = []
+    for chunk in (1, 5, 16):
+        eng = Engine(model, params, ServeConfig(batch_slots=1, max_len=64,
+                                                max_new_tokens=5,
+                                                prefill_chunk=chunk))
+        r = eng.submit(prompt)
+        outs.append(eng.run_until_done()[r].tokens)
+    assert outs[0] == outs[1] == outs[2]
+
+
+# ---------------------------------------------------------------------------
+# misc engine surface
+# ---------------------------------------------------------------------------
+
+
+def test_engine_reset_reuses_compilations(model_and_params):
+    model, params = model_and_params
+    eng = Engine(model, params, ServeConfig(batch_slots=2, max_len=64,
+                                            max_new_tokens=4))
+    r1 = eng.submit([5, 17, 3])
+    out1 = eng.run_until_done()[r1].tokens
+    eng.reset()
+    assert not eng.busy and eng.results == {}
+    r2 = eng.submit([5, 17, 3])
+    out2 = eng.run_until_done()[r2].tokens
+    assert out1 == out2
+
+
+def test_stage_metrics_populated(model_and_params):
+    model, params = model_and_params
+    eng = Engine(model, params, ServeConfig(batch_slots=2, max_len=64,
+                                            max_new_tokens=4))
+    eng.submit([5, 17, 3])
+    eng.run_until_done()
+    m = eng.metrics()
+    assert m["prefill_tok_us"] > 0
+    assert m["generate_tok_us"] > 0
+    assert m["insert_us"] > 0
+
+
+def test_int8_kv_engine(model_and_params):
+    """Quantized KV serves out of multi-dtype planes (int8 payload + fp
+    scales) with the same batching-invariance contract."""
+    cfg = get_reduced("gpt2-paper").with_(vocab_size=128,
+                                          kv_cache_dtype="int8")
+    model = build_model(cfg)
+    params = model_and_params[1]
+    sc = dict(max_len=64, max_new_tokens=4)
+    e1 = Engine(model, params, ServeConfig(batch_slots=1, **sc))
+    r1 = e1.submit([5, 17, 3, 9])
+    out1 = e1.run_until_done()[r1].tokens
+    e2 = Engine(model, params, ServeConfig(batch_slots=2, **sc))
+    r2 = e2.submit([5, 17, 3, 9])
+    e2.submit([88, 2])
+    out2 = e2.run_until_done()[r2].tokens
+    assert out1 == out2
+    assert len(e2.layout.plane_dtypes) >= 2
