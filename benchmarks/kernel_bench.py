@@ -94,12 +94,23 @@ def _pack_case(g, r, n):
 
     # interleaved min-of-trials: on a time-shared CI box both sides must
     # see the same noise regime, and min (not median of separate batches)
-    # is the robust per-side estimator
-    once(fused), once(unfused)  # warmup / compile
+    # is the robust per-side estimator.  21 trials (up from 9) because
+    # pack_kernel_us is now gated by the snapshot trajectory check in
+    # ``benchmarks.run`` — the single-shot value drifted 166->205->269 µs
+    # across snapshots on unchanged kernel code, while the deep min is
+    # reproducible well inside the gate's 25% tolerance
+    for _ in range(3):
+        once(fused), once(unfused)  # warmup / compile
     tf, tu = [], []
-    for _ in range(9):
-        tf.append(once(fused))
-        tu.append(once(unfused))
+    for k in range(21):
+        # alternate order so a systematic second-position penalty can't
+        # charge one side
+        if k % 2 == 0:
+            tf.append(once(fused))
+            tu.append(once(unfused))
+        else:
+            tu.append(once(unfused))
+            tf.append(once(fused))
     t_fused, t_unfused = min(tf), min(tu)
     speedup = t_unfused / max(t_fused, 1e-12)
     bytes_fused = n * (4 + 4 + 2 + 4)      # read g,r; write bf16 wire + r'

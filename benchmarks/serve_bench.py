@@ -4,7 +4,8 @@ Runs the continuous-batching engine (paged KV arena, chunked prefill ->
 insert -> generate) under synthetic Poisson traffic at a few arrival
 rates and emits both the per-stage unit costs and the latency/throughput
 digest the snapshot records (``prefill_tok_us``, ``generate_tok_us``,
-``insert_us``, ``serve_p50_ms``, ``serve_p99_ms``, ``serve_tokens_per_s``).
+``insert_us``, ``serve_p50_ms``, ``serve_p99_ms``, ``serve_ttft_ms``,
+``serve_tokens_per_s``).
 
 The gate FAILS (raises) if any request goes unanswered, if a finish
 reason is invalid, or if chunked prefill degenerated to one call per
@@ -12,6 +13,8 @@ token — the structural properties; absolute numbers are tracked
 relatively PR-over-PR by the trajectory gate in ``benchmarks.run``.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 
@@ -24,7 +27,7 @@ VALID_REASONS = {"eos", "length", "truncated"}
 def run(smoke: bool = False):
     from repro.configs import get_reduced
     from repro.models import build_model
-    from repro.serve import Engine, ServeConfig, TrafficConfig, sweep
+    from repro.serve import Engine, ServeConfig, TrafficConfig, run_traffic
 
     cfg = get_reduced(ARCH).with_(vocab_size=256)
     model = build_model(cfg)
@@ -52,7 +55,12 @@ def run(smoke: bool = False):
     engine.run_until_done()
     engine.reset()
 
-    reports = sweep(engine, rates, base)
+    reports = []
+    for r in rates:
+        engine.reset()
+        reports.append(run_traffic(
+            engine, dataclasses.replace(base, qps=float(r))
+        ))
 
     # ---- structural gate ------------------------------------------------
     for rep in reports:
@@ -70,21 +78,40 @@ def run(smoke: bool = False):
             f"({st['prefill_calls']} calls / {st['prefill_tokens']} tokens)"
         )
 
+    # ---- unit costs ------------------------------------------------------
+    # The snapshot's gated stage unit costs (prefill/generate/insert µs)
+    # come from identical deterministic batch-mode episodes, min over
+    # episode means — the kernel_bench discipline.  A single sweep
+    # point's mean covers only ~8 insert calls, noisy enough on a
+    # time-shared box that the reading drifted past the trajectory
+    # gate's 25% band on unchanged code.
+    unit = None
+    for _ in range(3):
+        engine.reset()
+        for n in range(lo, hi + 1):
+            engine.submit(list(range(1, n + 1)))
+        engine.run_until_done()
+        em = engine.metrics()
+        unit = em if unit is None else {k: min(unit[k], em[k]) for k in em}
+
     # ---- rows ------------------------------------------------------------
-    m = engine.metrics()
+    m = unit
+    est = engine.stats   # stats of the last unit-cost episode
     heavy = reports[-1]  # highest arrival rate = the "heavy traffic" point
     rows = [
         row("serve/prefill_tok_us", m["prefill_tok_us"] / 1e6,
-            f"tokens={st['prefill_tokens']} calls={st['prefill_calls']}"),
+            f"tokens={est['prefill_tokens']} calls={est['prefill_calls']}"),
         row("serve/generate_tok_us", m["generate_tok_us"] / 1e6,
-            f"tokens={st['generate_tokens']} calls={st['generate_calls']}"),
+            f"tokens={est['generate_tokens']} calls={est['generate_calls']}"),
         row("serve/insert_us", m["insert_us"] / 1e6,
-            f"calls={st['insert_calls']} pages={engine.arena.num_pages} "
+            f"calls={est['insert_calls']} pages={engine.arena.num_pages} "
             f"page_bytes={engine.layout.page_bytes()}"),
         row("serve/p50_ms", heavy.p50_ms / 1e3,
             f"qps={heavy.qps} n={heavy.num_requests}"),
         row("serve/p99_ms", heavy.p99_ms / 1e3,
             f"qps={heavy.qps} ttft_p50_ms={heavy.ttft_p50_ms:.1f}"),
+        row("serve/ttft_ms", heavy.ttft_p50_ms / 1e3,
+            f"qps={heavy.qps} n={heavy.num_requests}"),
         row("serve/tokens_per_s", 1.0 / max(heavy.tokens_per_s, 1e-9),
             f"tokens_per_s={heavy.tokens_per_s:.1f} "
             f"makespan_s={heavy.makespan_s:.2f}"),

@@ -28,13 +28,21 @@ if [[ "$what" == "all" || "$what" == "bench" ]]; then
     # head, and exposed wire bytes <= 0.6x all-reduce.  "serve" runs a
     # short QPS sweep through the paged-KV continuous-batching engine and
     # FAILS on lost requests, invalid finish reasons, or prefill
-    # degenerating to one dispatch per token.  A BENCH_<n>.json perf
-    # snapshot (interleaved min-of-trials step walls, bytes/worker,
-    # overlap frac, pack-kernel µs, sharded exposed ratio, serving stage
-    # unit costs + p50/p99/tokens-per-sec) is written to the repo root on
-    # every smoke run, and the run FAILS if any stable key regressed >25%
-    # vs the previous snapshot (REPRO_BENCH_NO_TRAJECTORY_GATE=1 records
-    # without gating).
+    # degenerating to one dispatch per token.  "obs" is the telemetry
+    # gate (benchmarks/obs_check.py): an instrumented fused-overlap run
+    # must stream schema-valid events.jsonl (every line validated against
+    # repro/obs/event_schema.json) and export a Chrome trace with one
+    # named planned issue span per bucket; an instrumented serve run must
+    # land per-request spans for all three stages; and the instrumented
+    # step wall must stay within 3% of the uninstrumented one
+    # (REPRO_OBS_NO_OVERHEAD_GATE=1 skips only the 3% check).  A
+    # BENCH_<n>.json perf snapshot (interleaved min-of-trials step walls,
+    # bytes/worker, overlap frac, pack-kernel µs, sharded exposed ratio,
+    # serving stage unit costs + p50/p99/ttft/tokens-per-sec), built from
+    # a repro.obs MetricsRegistry snapshot since schema 3, is written to
+    # the repo root on every smoke run, and the run FAILS if any stable
+    # key regressed >25% vs the previous snapshot
+    # (REPRO_BENCH_NO_TRAJECTORY_GATE=1 records without gating).
     python -m benchmarks.run --smoke > /dev/null
     echo "smoke benchmarks OK"
 fi

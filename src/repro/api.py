@@ -159,6 +159,7 @@ class FitResult:
     ccr: float | None
     schedules: list[CommSchedule]
     autotune: dict | None = None   # AdaptiveRuntime summary (adaptive mode)
+    telemetry: Any = None          # repro.obs.Telemetry when armed
 
     @property
     def final_interval(self) -> int:
@@ -201,6 +202,7 @@ def fit(
     overlap: str = "post",
     arena: bool = False,
     sync: str = "allreduce",
+    telemetry=None,
 ) -> FitResult:
     """Train ``arch`` with a GC scheme; ``interval="auto"`` applies the
     paper's ``I = ceil(CCR)`` from the analytic profiler end-to-end.
@@ -233,7 +235,11 @@ def fit(
     the communication exposed behind the backward pass.  Segmented bucket
     compressors only (covap/none/fp16); composes with both overlap modes
     and the arena; parity with ``"allreduce"`` is pinned bit-for-bit
-    (tests/test_sharded_sync.py)."""
+    (tests/test_sharded_sync.py).
+
+    ``telemetry`` (None | directory path | ``repro.obs.Telemetry``) arms
+    the unified telemetry subsystem (DESIGN.md §15); the live bundle is
+    handed back as ``FitResult.telemetry`` for inspection or ``save()``."""
     cfg = _config(arch, reduced=reduced, vocab_size=vocab_size)
     model = build_model(cfg)
     dp_world = dp_workers
@@ -270,8 +276,11 @@ def fit(
         batches = make_loader(dc)
     if interval == "adaptive" and autotune is None:
         autotune = True
+    from repro.obs import as_telemetry
+
+    tel = as_telemetry(telemetry)
     state = tr.run(state, iter(batches), steps=steps, log=log,
-                   autotune=autotune)
+                   autotune=autotune, telemetry=tel)
     return FitResult(
         trainer=tr,
         state=state,
@@ -280,6 +289,7 @@ def fit(
         ccr=choice.ccr,
         schedules=tr.schedules(),
         autotune=tr.runtime.summary() if tr.runtime is not None else None,
+        telemetry=tel if tel.enabled else None,
     )
 
 
@@ -360,6 +370,7 @@ def tune(
     measured: bool = False,
     measure_steps: int = 2,
     arena: bool = False,
+    telemetry=None,
 ) -> list[dict]:
     """Rank GC schemes for a workload by the schedule-driven overlap
     timeline (eq (6) with each scheme's real planned volumes).  Data-
@@ -452,6 +463,20 @@ def tune(
             )
         rows.append(row)
     rows.sort(key=lambda r: -r["speedup"])
+    from repro.obs import as_telemetry
+
+    tel = as_telemetry(telemetry)
+    if tel.enabled:
+        for row in rows:
+            tel.events.emit("tune_row", compressor=row["compressor"], row=row)
+            tel.registry.gauge(
+                "tune_speedup", "modeled cycle speedup",
+                compressor=row["compressor"],
+            ).set(row["speedup"])
+            tel.registry.gauge(
+                "tune_overlap_frac_modeled", "predicted overlap fraction",
+                compressor=row["compressor"],
+            ).set(row["overlap_frac_modeled"])
     return rows
 
 

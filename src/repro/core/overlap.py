@@ -120,11 +120,12 @@ def sharded_param_allgather(
     w_idx = flat_axis_index(axis_names)
     fresh_pieces = {}
     for b in range(plan.num_buckets):
-        view = layout.bucket_view(planes, b)
-        S = view.shape[0] // W
-        shard = jax.lax.dynamic_slice_in_dim(view, w_idx * S, S)
-        full = all_gather_tiled(shard, axis_names)
-        fresh_pieces[b] = layout.unpack_bucket(b, full)
+        with jax.named_scope(f"covap_param_ag_bucket_{b}"):
+            view = layout.bucket_view(planes, b)
+            S = view.shape[0] // W
+            shard = jax.lax.dynamic_slice_in_dim(view, w_idx * S, S)
+            full = all_gather_tiled(shard, axis_names)
+            fresh_pieces[b] = layout.unpack_bucket(b, full)
     out_leaves = ar.gather_leaves(
         plan, lambda b, si, seg: fresh_pieces[b][si], leaves
     )
@@ -176,13 +177,17 @@ def _make_bucket_hook(
 
     def bwd(res, g_xs):
         rs, coeff = res
-        synced, resids = pipeline.execute_bucket(
-            schedule, b,
-            list(g_xs),
-            list(rs) if ef_on else None,
-            coeff=coeff if ef_on else None,
-            axis_names=axis_names,
-        )
+        # named_scope is metadata-only (no ops added, bits unchanged); it
+        # labels this bucket's collective issue in XLA/Perfetto profiles
+        # so comm attributes to buckets, not one anonymous backward blob.
+        with jax.named_scope(f"covap_bucket_{b}/phase_{schedule.phase}"):
+            synced, resids = pipeline.execute_bucket(
+                schedule, b,
+                list(g_xs),
+                list(rs) if ef_on else None,
+                coeff=coeff if ef_on else None,
+                axis_names=axis_names,
+            )
         if synced is None:  # unselected bucket: nothing crosses the wire
             g_cot = tuple(jnp.zeros_like(g) for g in g_xs)
         else:

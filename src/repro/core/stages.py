@@ -1085,17 +1085,20 @@ class SyncPipeline(Compressor):
         # ---- wire pass: one collective per bucket, over a slice view -----
         # (sharded: reduce-scatter the W-aligned slot instead of an
         # all-reduce; the unpacked pieces carry zeros off the owned shard)
-        synced_pieces = {
-            b: layout.unpack_bucket(
-                b,
-                self._reduce_scatter_slot(
-                    layout.bucket_view(planes, b), axis_names
+        # named_scope per bucket: metadata-only labels so XLA/Perfetto
+        # profiles attribute each slot collective to its bucket
+        synced_pieces = {}
+        for b in sel:
+            with jax.named_scope(
+                f"covap_arena_bucket_{b}/phase_{schedule.phase}"
+            ):
+                slot = layout.bucket_view(planes, b)
+                wired = (
+                    self._reduce_scatter_slot(slot, axis_names)
+                    if sharded
+                    else pmean(slot, axis_names)
                 )
-                if sharded
-                else pmean(layout.bucket_view(planes, b), axis_names),
-            )
-            for b in sel
-        }
+                synced_pieces[b] = layout.unpack_bucket(b, wired)
 
         # ---- reassembly: one concat per leaf, no update-slice chains -----
         out_leaves = ar.gather_leaves(
@@ -1150,10 +1153,13 @@ class SyncPipeline(Compressor):
                 [bk._slice_segment(r_leaves[s.leaf_idx], s) for s in segs]
                 if ef_on else None
             )
-            synced, resids = self.execute_bucket(
-                schedule, b, g_slices, r_slices,
-                coeff=coeff, axis_names=axis_names,
-            )
+            with jax.named_scope(
+                f"covap_bucket_{b}/phase_{schedule.phase}"
+            ):
+                synced, resids = self.execute_bucket(
+                    schedule, b, g_slices, r_slices,
+                    coeff=coeff, axis_names=axis_names,
+                )
             if synced is not None:
                 for seg, xm in zip(segs, synced):
                     out_leaves[seg.leaf_idx] = bk._update_segment(

@@ -56,12 +56,24 @@ def main():
                     help="Poisson arrival rate; 0 = batch mode")
     ap.add_argument("--sweep", default="",
                     help="comma-separated qps list, e.g. 2,8,32,128")
+    ap.add_argument("--telemetry-dir", default="",
+                    help="arm the unified telemetry subsystem (repro.obs): "
+                         "per-request spans, stage histograms and queue/"
+                         "page-pool series into this directory")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
 
+    telemetry = None
+    if args.telemetry_dir:
+        from repro.obs import Telemetry
+
+        telemetry = Telemetry(args.telemetry_dir)
+        telemetry.manifest_once(
+            role="serve", config=vars(args), plan={}, world=1,
+        )
     eng = Engine(
         model, params,
         ServeConfig(batch_slots=args.slots, max_len=args.max_len,
@@ -69,6 +81,7 @@ def main():
                     temperature=args.temperature,
                     page_size=args.page_size, num_pages=args.num_pages,
                     prefill_chunk=args.prefill_chunk),
+        telemetry=telemetry,
     )
     print(f"[serve] arena: {eng.arena.num_pages} pages x "
           f"{eng.layout.page_bytes()} B "
@@ -79,10 +92,19 @@ def main():
                          prompt_len=(2, max(2, args.prompt_len)),
                          vocab_size=cfg.vocab_size, seed=args.seed)
 
+    def _save_telemetry() -> None:
+        if telemetry is None:
+            return
+        paths = telemetry.save()
+        telemetry.close()
+        print(f"[telemetry] {paths['snapshot']}  {paths['trace']} "
+              f"(open in Perfetto)")
+
     if args.sweep:
         rates = [float(r) for r in args.sweep.split(",") if r]
         for rep in sweep(eng, rates, base):
             _print_report(rep)
+        _save_telemetry()
         return
     if args.qps > 0:
         _print_report(run_traffic(eng, TrafficConfig(
@@ -93,6 +115,7 @@ def main():
         print(f"[serve] prefill={m['prefill_tok_us']:.0f}us/tok "
               f"generate={m['generate_tok_us']:.0f}us/tok "
               f"insert={m['insert_us']:.0f}us")
+        _save_telemetry()
         return
 
     rng = np.random.default_rng(args.seed)
@@ -119,6 +142,7 @@ def main():
         c = eng.results[rid]
         print(f"  req {rid}: prompt={prompt[:6]}... -> {c.tokens[:8]} "
               f"[{c.finish_reason}]")
+    _save_telemetry()
 
 
 if __name__ == "__main__":

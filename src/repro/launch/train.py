@@ -76,6 +76,10 @@ def main():
                          "all-gather at the next step's head (sharded "
                          "optimizer step; halves the exposed wire volume)")
     ap.add_argument("--history-out", default="")
+    ap.add_argument("--telemetry-dir", default="",
+                    help="arm the unified telemetry subsystem (repro.obs): "
+                         "writes events.jsonl (streamed), metrics.prom, "
+                         "metrics.json and trace.json into this directory")
     args = ap.parse_args()
     if args.interval == "adaptive":
         # mirror repro.api.fit: interval="adaptive" = analytic initial
@@ -143,19 +147,31 @@ def main():
         from repro.runtime import AdaptiveRuntime
 
         autotune = AdaptiveRuntime(tr)
+    telemetry = None
+    if args.telemetry_dir:
+        from repro.obs import Telemetry
+
+        telemetry = Telemetry(args.telemetry_dir)
+        print(f"[telemetry] streaming events to "
+              f"{os.path.join(args.telemetry_dir, 'events.jsonl')}")
     t0 = time.perf_counter()
     done = 0
     while done < args.steps:
         chunk = args.steps - done
         if args.ckpt_dir and args.ckpt_every > 0:
             chunk = min(chunk, args.ckpt_every)
-        state = tr.run(state, loader, steps=chunk, autotune=autotune)
+        state = tr.run(state, loader, steps=chunk, autotune=autotune,
+                       telemetry=telemetry)
         done += chunk
         if args.ckpt_dir and (args.ckpt_every > 0 or done >= args.steps):
             path = checkpoint.save_train_state(
                 args.ckpt_dir, state, interval=tr.tc.interval,
             )
             print(f"[ckpt] saved {path} (params + opt + EF residuals)")
+            if telemetry is not None:
+                telemetry.events.emit(
+                    "checkpoint", step=int(state["step"]), path=path
+                )
     wall = time.perf_counter() - t0
     tokens = args.steps * args.global_batch * args.seq_len
     last = tr.history[-1]
@@ -172,6 +188,13 @@ def main():
             json.dump({"config": vars(args), "interval": interval,
                        "history": tr.history}, f, indent=1)
         print(f"[history] {args.history_out}")
+    if telemetry is not None:
+        if args.adaptive and tr.runtime is not None:
+            tr.runtime.finish()     # planned per-bucket spans -> trace
+        paths = telemetry.save()
+        telemetry.close()
+        print(f"[telemetry] {paths['snapshot']}  {paths['prom']}  "
+              f"{paths['trace']} (open in Perfetto)")
 
 
 if __name__ == "__main__":

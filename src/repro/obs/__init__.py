@@ -1,0 +1,53 @@
+"""Unified telemetry: metrics registry, structured event log, span tracing.
+
+Three complementary views of one run (DESIGN.md §15):
+
+* :class:`MetricsRegistry` — labeled counters / gauges / histograms;
+  ``snapshot()`` is the single source of ``BENCH_<n>.json`` keys and
+  ``to_prometheus_text()`` the scrape-side exposition.
+* :class:`EventLog` — append-only JSONL narrative (manifest, steps,
+  probes, the replan decision audit trail), schema-validated at emit time
+  against ``event_schema.json``.
+* :class:`~repro.runtime.trace.TimelineTracer` — Chrome-trace spans:
+  planned per-bucket timelines, measured decompositions, control marks,
+  and per-request serve spans, all in one Perfetto-openable file.
+
+:class:`Telemetry` bundles the three behind one handle; ``telemetry=``
+arguments throughout the codebase accept ``None`` / a directory path /
+a bundle via :func:`as_telemetry`.
+"""
+from repro.obs.events import (
+    NULL_EVENTS,
+    SCHEMA_PATH,
+    EventLog,
+    load_schema,
+    plan_digest,
+    validate_event,
+)
+from repro.obs.registry import (
+    NULL_INSTRUMENT,
+    NULL_REGISTRY,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+)
+from repro.obs.telemetry import NULL_TELEMETRY, Telemetry, as_telemetry
+
+__all__ = [
+    "Counter",
+    "EventLog",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "NULL_EVENTS",
+    "NULL_INSTRUMENT",
+    "NULL_REGISTRY",
+    "NULL_TELEMETRY",
+    "SCHEMA_PATH",
+    "Telemetry",
+    "as_telemetry",
+    "load_schema",
+    "plan_digest",
+    "validate_event",
+]

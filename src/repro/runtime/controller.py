@@ -160,6 +160,25 @@ class AdaptiveRuntime:
         self._step_count = 0
         self._probe_count = 0
         self._planned_key = None
+        self._events = None          # obs EventLog when telemetry is attached
+
+    def attach_telemetry(self, telemetry) -> None:
+        """Route this runtime through a :class:`repro.obs.Telemetry`
+        bundle: planned/measured/control spans land in the bundle's shared
+        tracer (one Chrome trace alongside serve spans), and every probe
+        + controller decision is emitted to the structured event log — the
+        re-plan audit trail that makes ``I`` switches explainable after
+        the fact.  Existing tracer events are carried over so a
+        mid-training attach loses nothing."""
+        if not telemetry.enabled:
+            return
+        for ev in self.tracer.events:
+            telemetry.tracer.events.append(ev)
+        telemetry.tracer._cursor_s = max(
+            telemetry.tracer._cursor_s, self.tracer._cursor_s
+        )
+        self.tracer = telemetry.tracer
+        self._events = telemetry.events
 
     # ---- probing ----------------------------------------------------------
     def _probe(self, state, batch, phase: int) -> PhaseSample:
@@ -208,7 +227,35 @@ class AdaptiveRuntime:
 
         wire = allreduce_bytes_on_wire(dense_bytes(tr.plan), tr.dp_world)
         self.tracer.record_sample(sample, bytes_on_wire=int(round(wire)))
-        decision = self.controller.observe(step, self.monitor.measured_ccr())
+        measured = self.monitor.measured_ccr()
+        decision = self.controller.observe(step, measured)
+        if self._events is not None:
+            self._events.emit(
+                "probe",
+                step=int(sample.step), phase=int(sample.phase),
+                t_comp=float(sample.t_comp), t_comm=float(sample.t_comm),
+                ccr=float(sample.ccr),
+                achieved_overlap=(
+                    float(sample.achieved_overlap)
+                    if sample.achieved_overlap is not None else None
+                ),
+            )
+            self._events.emit(
+                "replan_decision",
+                step=int(step),
+                interval=int(decision.interval),
+                replan=bool(decision.replan),
+                reason=decision.reason,
+                measured_ccr=(
+                    float(measured) if measured is not None else None
+                ),
+                effective_ccr=(
+                    float(measured * self.controller.exposed_scale)
+                    if measured is not None else None
+                ),
+                exposed_scale=self.controller.exposed_scale,
+                pending=int(self.controller.pending),
+            )
         if not decision.replan:
             return state
 
@@ -227,6 +274,17 @@ class AdaptiveRuntime:
         self.tracer.record_replan(
             step, old_interval, decision.interval, decision.reason
         )
+        if self._events is not None:
+            self._events.emit(
+                "replan",
+                step=int(step),
+                old_interval=int(old_interval),
+                new_interval=int(decision.interval),
+                reason=decision.reason,
+                policy=report.policy,
+                residual_norm_before=float(report.norm_before),
+                residual_norm_after=float(report.norm_after),
+            )
         if log:
             log(
                 f"[autotune] step {step}: measured CCR "
@@ -265,6 +323,11 @@ class AdaptiveRuntime:
             self.tracer.record_planned_phase(
                 s, t_before=mt["t_comp"] * 0.5, t_comp=mt["t_comp"],
                 link_bw=link_bw, world=tr.dp_world, at_s=at,
+            )
+            # per-bucket issue-order spans (the resolution the phase view
+            # lacks): one named span per collective issue of this phase
+            self.tracer.record_planned_buckets(
+                s, world=tr.dp_world, link_bw=link_bw, at_s=at,
             )
             at += mt["t_comp"] * 1.5 + s.wire_bytes(tr.dp_world) / link_bw
 

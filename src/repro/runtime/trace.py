@@ -6,7 +6,10 @@ Open the dump in ``chrome://tracing`` / Perfetto: one process row per view —
   ``CommSchedule`` + the analytic step times (what the planner *promised*);
 * ``measured`` — full-step wall times from the monitor's ring buffer and
   the probe's comm/compute decompositions (what the hardware *delivered*);
-* ``control``  — instant events marking re-plans.
+* ``control``  — instant events marking re-plans;
+* ``serve``    — per-request serving spans (queued → prefill → insert →
+  decode, one Chrome-trace thread per request) plus queue-depth /
+  page-pool counter tracks from the engine.
 
 The measured events carry enough in ``args`` (bytes, phase) that the trace
 round-trips into the perf model: ``core.perfmodel.calibrate_from_trace``
@@ -31,6 +34,7 @@ from repro.core.ccr import align_comm_times
 PID_PLANNED = 1
 PID_MEASURED = 2
 PID_CONTROL = 3
+PID_SERVE = 4
 
 _US = 1e6
 
@@ -177,6 +181,39 @@ class TimelineTracer:
                 )
                 comm_free = start + c_comm
 
+    def record_planned_buckets(
+        self, schedule, *, world: int | None = None,
+        link_bw: float | None = None, at_s: float = 0.0,
+    ) -> None:
+        """One named span per collective issue of a phase, in the exact
+        order the overlap engine fires them (``CommSchedule.issue_order()``)
+        — the per-bucket resolution the phase-level planned view lacks.
+
+        Spans are laid back-to-back on their own planned thread; with a
+        ``link_bw`` each span's duration is the call's ring transfer time,
+        otherwise spans get a nominal unit width (ordering and naming are
+        the payload, not the absolute timescale).  ``args`` carry phase /
+        bucket / op / bytes so the smoke gate (and Perfetto queries) can
+        count distinct buckets against ``plan.num_buckets``."""
+        w = world if world is not None else schedule.world
+        t = at_s
+        for rank, i in enumerate(schedule.issue_order()):
+            call = schedule.calls[i]
+            sel = int(schedule.selected[i])
+            span_bytes = call.wire_bytes(w)
+            dur = span_bytes / link_bw if link_bw else 1e-6
+            label = "bucket" if schedule.granularity == "bucket" else "leaf"
+            self.add_event(
+                f"issue {label} {sel} ({call.op})",
+                pid=PID_PLANNED, tid=2, ts_s=t, dur_s=dur,
+                cat="planned,issue",
+                args={
+                    "phase": schedule.phase, label: sel, "op": call.op,
+                    "bytes": int(round(span_bytes)), "rank": rank,
+                },
+            )
+            t += dur
+
     # ---- control view -----------------------------------------------------
     def record_replan(
         self, step: int, old_interval: int, new_interval: int, reason: str
@@ -189,6 +226,58 @@ class TimelineTracer:
                   "reason": reason},
         )
 
+    # ---- serve view -------------------------------------------------------
+    def record_request(self, comp, *, t0: float = 0.0) -> None:
+        """Per-request lifecycle spans from a serve ``Completion``: one
+        Chrome-trace thread per request id, with ``queued`` (submit →
+        admit), ``prefill`` (admit → prefill end), ``insert`` (prefill end
+        → first token), and ``decode`` (first token → finish) laid
+        end-to-end.  ``t0`` rebases wall-clock stamps so traces start near
+        zero.  Requests truncated before prefill (no first token) get only
+        their queued span — there are no stages to show."""
+        tid = int(comp.rid)
+        args = {
+            "rid": int(comp.rid),
+            "prompt_len": int(comp.prompt_len),
+            "new_tokens": len(comp.tokens),
+            "finish_reason": comp.finish_reason,
+        }
+        admit = comp.admit_s if comp.admit_s is not None else comp.finish_s
+        self.add_event(
+            f"queued r{comp.rid}", pid=PID_SERVE, tid=tid,
+            ts_s=comp.submit_s - t0, dur_s=max(admit - comp.submit_s, 0.0),
+            cat="serve,queued", args=args,
+        )
+        if comp.admit_s is None or comp.first_token_s is None:
+            return
+        prefill_end = (
+            comp.prefill_end_s
+            if getattr(comp, "prefill_end_s", None) is not None
+            else comp.first_token_s
+        )
+        stages = (
+            ("prefill", comp.admit_s, prefill_end),
+            ("insert", prefill_end, comp.first_token_s),
+            ("decode", comp.first_token_s, comp.finish_s),
+        )
+        for stage, start, end in stages:
+            self.add_event(
+                f"{stage} r{comp.rid}", pid=PID_SERVE, tid=tid,
+                ts_s=start - t0, dur_s=max(end - start, 0.0),
+                cat=f"serve,{stage}", args=args,
+            )
+
+    def record_counter(
+        self, name: str, ts_s: float, values: dict, *, pid: int = PID_SERVE
+    ) -> None:
+        """Chrome counter sample (``ph: "C"``) — queue depth, page-pool
+        occupancy, active slots render as stacked area tracks."""
+        self.events.append({
+            "name": name, "ph": "C", "pid": pid, "tid": 0,
+            "ts": ts_s * _US,
+            "args": {k: float(v) for k, v in values.items()},
+        })
+
     # ---- export -----------------------------------------------------------
     def to_chrome_trace(self) -> dict:
         meta = [
@@ -198,6 +287,7 @@ class TimelineTracer:
                 (PID_PLANNED, "planned"),
                 (PID_MEASURED, "measured"),
                 (PID_CONTROL, "control"),
+                (PID_SERVE, "serve"),
             )
         ]
         return {
@@ -211,4 +301,10 @@ class TimelineTracer:
         return path
 
 
-__all__ = ["TimelineTracer", "PID_PLANNED", "PID_MEASURED", "PID_CONTROL"]
+__all__ = [
+    "TimelineTracer",
+    "PID_PLANNED",
+    "PID_MEASURED",
+    "PID_CONTROL",
+    "PID_SERVE",
+]

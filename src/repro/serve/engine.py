@@ -97,11 +97,18 @@ def _zero_stats() -> dict[str, float]:
 
 
 class Engine:
-    def __init__(self, model, params, sc: ServeConfig, *, sample=greedy_sample):
+    def __init__(self, model, params, sc: ServeConfig, *, sample=greedy_sample,
+                 telemetry=None):
+        from repro.obs import as_telemetry
+
         self.model = model
         self.params = params
         self.sc = sc
         self.sample = sample
+        # telemetry (repro.obs): per-request lifecycle spans + stage
+        # histograms + queue/page-pool occupancy series.  Disabled bundle
+        # (the default) makes every hook a no-op attribute check.
+        self.telemetry = as_telemetry(telemetry)
         self.layout = plan_kv_layout(model.cache_specs, sc.max_len, sc.page_size)
         self._num_pages = sc.num_pages or KVArena.auto_pages(
             self.layout, sc.batch_slots
@@ -131,6 +138,9 @@ class Engine:
         self.results: dict[int, Completion] = {}
         self.stats = _zero_stats()
         self._key = jax.random.PRNGKey(0)
+        # wall-clock origin of this serving episode: request spans in the
+        # Chrome trace are rebased to it so traces start near t=0
+        self._trace_t0 = time.perf_counter()
 
     # ---- request API -------------------------------------------------------
     def submit(self, prompt_tokens: Sequence[int], frames: Any = None) -> int:
@@ -165,6 +175,29 @@ class Engine:
         self.results[comp.rid] = comp
         self.stats["completed"] += 1
         self.arena.release_slot(slot.index)
+        tel = self.telemetry
+        if tel.enabled:
+            tel.tracer.record_request(comp, t0=self._trace_t0)
+            tel.registry.counter(
+                "serve_requests_total", "completed requests by finish reason",
+                reason=reason,
+            ).inc()
+            tel.registry.histogram(
+                "serve_request_latency_ms", "submit -> finish, per request"
+            ).observe(comp.latency_s * 1e3)
+            tel.registry.histogram(
+                "serve_request_ttft_ms", "submit -> first token, per request"
+            ).observe(comp.ttft_s * 1e3)
+            tel.events.emit(
+                "serve_request",
+                rid=int(comp.rid),
+                prompt_len=int(comp.prompt_len),
+                new_tokens=len(comp.tokens),
+                finish_reason=comp.finish_reason,
+                ttft_ms=comp.ttft_s * 1e3,
+                latency_ms=comp.latency_s * 1e3,
+                queued_ms=max(comp.admit_s - comp.submit_s, 0.0) * 1e3,
+            )
 
     def _admit(self) -> None:
         while True:
@@ -212,6 +245,7 @@ class Engine:
         logits, caches, calls = self.prefill(self.params, caches, req.prompt)
         first = int(self._sample_host(logits)[0])
         t1 = time.perf_counter()
+        slot.prefill_end_s = t1
         self.stats["prefill_calls"] += calls
         self.stats["prefill_tokens"] += len(req.prompt)
         self.stats["prefill_s"] += t1 - t0
@@ -224,6 +258,15 @@ class Engine:
         t2 = time.perf_counter()
         self.stats["insert_calls"] += 1
         self.stats["insert_s"] += t2 - t1
+
+        tel = self.telemetry
+        if tel.enabled:
+            tel.registry.histogram(
+                "serve_stage_ms", "per-call stage wall", stage="prefill"
+            ).observe((t1 - t0) * 1e3)
+            tel.registry.histogram(
+                "serve_stage_ms", "per-call stage wall", stage="insert"
+            ).observe((t2 - t1) * 1e3)
 
         slot.tokens.append(first)
         slot.first_token_s = t2
@@ -249,6 +292,30 @@ class Engine:
             if not self.arena.page_for(slot.index, slot.pos):
                 self._finish(slot, FINISH_TRUNCATED)  # pool ran dry
         active = self.sched.active_slots
+        tel = self.telemetry
+        if tel.enabled:
+            # occupancy series: one counter-track sample per engine tick
+            # plus last-value gauges for the registry snapshot
+            now = time.perf_counter() - self._trace_t0
+            depth = self.sched.pending
+            free = self.arena.pool.available
+            tel.tracer.record_counter(
+                "serve occupancy", now,
+                {"queue_depth": depth, "active_slots": len(active),
+                 "free_pages": free},
+            )
+            tel.registry.gauge(
+                "serve_queue_depth", "requests waiting for admission"
+            ).set(depth)
+            tel.registry.gauge(
+                "serve_active_slots", "slots decoding this tick"
+            ).set(len(active))
+            tel.registry.gauge(
+                "serve_free_pages", "KV arena pages unallocated"
+            ).set(free)
+            tel.registry.histogram(
+                "serve_page_occupancy", "fraction of KV pages in use, per tick"
+            ).observe(1.0 - free / max(self.arena.num_pages, 1))
         if not active:
             return 0
 
@@ -270,6 +337,10 @@ class Engine:
         self.stats["generate_calls"] += 1
         self.stats["generate_tokens"] += len(active)
         self.stats["generate_s"] += t1 - t0
+        if tel.enabled:
+            tel.registry.histogram(
+                "serve_stage_ms", "per-call stage wall", stage="generate"
+            ).observe((t1 - t0) * 1e3)
 
         for slot in active:
             tok = int(nxt[slot.index])

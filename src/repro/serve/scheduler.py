@@ -45,6 +45,7 @@ class Completion:
     finish_reason: str
     submit_s: float = 0.0
     admit_s: float = 0.0        # prefill started
+    prefill_end_s: float = 0.0  # prompt forward done, KV insert starts
     first_token_s: float = 0.0  # first generated token available
     finish_s: float = 0.0
 
@@ -64,6 +65,7 @@ class Slot:
     tokens: list[int] = dataclasses.field(default_factory=list)
     pos: int = 0                # position the NEXT decode input occupies
     admit_s: float = 0.0
+    prefill_end_s: float = 0.0
     first_token_s: float = 0.0
 
     @property
@@ -121,6 +123,7 @@ class Scheduler:
         slot.tokens = []
         slot.pos = len(req.prompt)
         slot.admit_s = now
+        slot.prefill_end_s = 0.0
         slot.first_token_s = 0.0
         return req
 
@@ -133,6 +136,7 @@ class Scheduler:
             finish_reason=reason,
             submit_s=req.submit_s,
             admit_s=slot.admit_s,
+            prefill_end_s=slot.prefill_end_s or now,
             first_token_s=slot.first_token_s or now,
             finish_s=now,
         )

@@ -91,7 +91,7 @@ def run_traffic(engine, cfg: TrafficConfig) -> TrafficReport:
         gen_tokens += len(comp.tokens)
         reasons[comp.finish_reason] = reasons.get(comp.finish_reason, 0) + 1
     makespan = max(t_end - t0, 1e-9)
-    return TrafficReport(
+    report = TrafficReport(
         qps=cfg.qps,
         num_requests=len(plan),
         generated_tokens=gen_tokens,
@@ -102,6 +102,15 @@ def run_traffic(engine, cfg: TrafficConfig) -> TrafficReport:
         tokens_per_s=gen_tokens / makespan,
         finish_reasons=reasons,
     )
+    tel = getattr(engine, "telemetry", None)
+    if tel is not None and tel.enabled:
+        tel.events.emit("serve_report", **report.as_dict())
+        for k in ("p50_ms", "p99_ms", "ttft_p50_ms", "tokens_per_s"):
+            tel.registry.gauge(
+                f"serve_traffic_{k}", "last traffic-run aggregate",
+                qps=f"{cfg.qps:g}",
+            ).set(getattr(report, k))
+    return report
 
 
 def sweep(engine, qps_rates, base: TrafficConfig) -> list[TrafficReport]:

@@ -515,6 +515,12 @@ class Trainer:
         self.history: list[dict] = []
         self.runtime = None          # AdaptiveRuntime of the last run(), if any
         self.transitions: list = []  # TransitionReports from re-plans
+        # telemetry bundle (repro.obs): registry + event log + tracer.
+        # Defaults to the disabled singleton; run(telemetry=...) swaps in a
+        # live bundle (the adaptive runtime and flush_sync write through it)
+        from repro.obs import NULL_TELEMETRY
+
+        self.telemetry = NULL_TELEMETRY
         # sharded sync (DESIGN.md §13): True while the last step's deferred
         # param all-gather has not been issued yet (the optimizer left
         # non-owner shards stale).  Each sharded step's head gather settles
@@ -655,6 +661,10 @@ class Trainer:
         if not self.sharded or not self._pending_sync:
             return state
         self._pending_sync = False
+        if self.telemetry.enabled:
+            self.telemetry.events.emit(
+                "flush", step=int(state["step"]), reason="deferred-allgather"
+            )
         if self.mesh is None or not self.dp_axes:
             return state      # single worker: shards ARE the full params
         params, opt = self._flush_fn()(state["params"], state["opt"])
@@ -721,15 +731,47 @@ class Trainer:
         return state, report
 
     def run(self, state, batches, steps: int | None = None, log=print,
-            autotune=None):
+            autotune=None, telemetry=None):
         """Host loop.  ``autotune`` (None | True | AutotuneConfig | a live
         AdaptiveRuntime) arms the adaptive runtime: measured-CCR monitoring
         + hysteresis re-planning + timeline tracing (DESIGN.md §10).
         Passing an ``AdaptiveRuntime`` keeps its monitor/controller state
         across chunked ``run`` calls (checkpoint-every loops) instead of
         restarting the policy each chunk.  With ``autotune=None`` the loop
-        is the PR-1 static path, bit-for-bit."""
+        is the PR-1 static path, bit-for-bit.
+
+        ``telemetry`` (None | directory path | :class:`repro.obs.Telemetry`)
+        arms the unified telemetry subsystem (DESIGN.md §15): a run
+        manifest + step records into the JSONL event log, loss/grad-norm/
+        step counters into the metrics registry, and — when the adaptive
+        runtime is armed too — the runtime's planned/measured/control
+        spans land in the bundle's shared tracer.  All recording happens
+        at the existing log cadence (metrics are already host-side floats
+        there), so the hot loop gains no extra device syncs; with
+        ``telemetry=None`` every hook is a no-op on the shared disabled
+        singleton."""
+        from repro.obs import as_telemetry
+        from repro.obs.events import plan_digest
+
         steps = steps if steps is not None else self.tc.steps
+        tel = as_telemetry(telemetry)
+        if tel.enabled:
+            self.telemetry = tel
+            tel.manifest_once(
+                role="train",
+                config=dataclasses.asdict(self.tc),
+                plan={
+                    "digest": plan_digest(self.plan),
+                    "num_buckets": self.plan.num_buckets,
+                    "num_phases": self.num_phases,
+                    "bucket_bytes_target": self.plan.bucket_bytes_target,
+                },
+                world=self.dp_world,
+                mesh=(
+                    {a: int(self.mesh.shape[a]) for a in self.mesh.shape}
+                    if self.mesh is not None else None
+                ),
+            )
         rt = None
         if autotune is not None and autotune is not False:
             from repro.runtime import AdaptiveRuntime, as_autotune_config
@@ -740,7 +782,16 @@ class Trainer:
                 rt = self.runtime = AdaptiveRuntime(
                     self, as_autotune_config(autotune)
                 )
+            if tel.enabled:
+                rt.attach_telemetry(tel)
         it = iter(batches)
+        steps_c = tel.registry.counter(
+            "train_steps_total", "optimizer steps completed"
+        )
+        loss_g = tel.registry.gauge("train_loss", "last logged total loss")
+        gnorm_g = tel.registry.gauge(
+            "train_grad_norm", "last logged global gradient norm"
+        )
         t0 = time.perf_counter()
         for i in range(steps):
             batch = next(it)
@@ -757,6 +808,7 @@ class Trainer:
             )
             state = {"params": params, "opt": opt, "comp": comp,
                      "step": state["step"] + 1}
+            steps_c.inc()
             if self.sharded:
                 self._pending_sync = True
             if rt is not None:
@@ -770,6 +822,21 @@ class Trainer:
                 m["step"] = state["step"]
                 m["wall_s"] = time.perf_counter() - t0
                 self.history.append(m)
+                if tel.enabled:
+                    loss_g.set(m["total_loss"])
+                    gnorm_g.set(m["grad_norm"])
+                    tel.events.emit(
+                        "step",
+                        step=int(state["step"]),
+                        loss=m["total_loss"],
+                        grad_norm=m["grad_norm"],
+                        wall_s=m["wall_s"],
+                        phase=int(phase),
+                        metrics={
+                            k: v for k, v in m.items()
+                            if k not in ("step", "wall_s")
+                        },
+                    )
                 if log:
                     # only total_loss/grad_norm are guaranteed — model
                     # metrics dicts need not include a 'loss' key

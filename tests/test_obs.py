@@ -1,0 +1,349 @@
+"""Tests for the unified telemetry subsystem (``repro.obs``, DESIGN.md §15):
+registry semantics, event-log schema enforcement, plan digests, the
+Telemetry bundle's artifacts, and the train / serve / adaptive-runtime
+integrations."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import pytest
+
+from repro.configs import get_reduced
+from repro.data import DataConfig, make_loader
+from repro.models import build_model
+from repro.obs import (
+    NULL_INSTRUMENT,
+    NULL_REGISTRY,
+    NULL_TELEMETRY,
+    EventLog,
+    MetricsRegistry,
+    Telemetry,
+    as_telemetry,
+    load_schema,
+    plan_digest,
+    validate_event,
+)
+from repro.optim import sgd
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def make_trainer(interval=2, bucket_bytes=1 << 14):
+    cfg = get_reduced("gpt2-paper").with_(vocab_size=256)
+    model = build_model(cfg)
+    tc = TrainConfig(
+        compressor="covap", interval=interval,
+        bucket_bytes=bucket_bytes, max_buckets=32, log_every=1,
+    )
+    return Trainer(model, sgd(1e-3), tc)
+
+
+def loader():
+    dc = DataConfig(vocab_size=256, seq_len=16, global_batch=4)
+    return iter(make_loader(dc))
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_get_or_create_identity():
+    r = MetricsRegistry()
+    assert r.counter("a") is r.counter("a")
+    assert r.gauge("g", x="1") is not r.gauge("g", x="2")
+    # label order is irrelevant to identity
+    assert r.gauge("g2", a="1", b="2") is r.gauge("g2", b="2", a="1")
+
+
+def test_registry_kind_conflict_raises():
+    r = MetricsRegistry()
+    r.counter("n")
+    with pytest.raises(ValueError, match="already registered"):
+        r.gauge("n")
+
+
+def test_disabled_registry_is_null_and_empty():
+    assert NULL_REGISTRY.counter("x") is NULL_INSTRUMENT
+    assert NULL_REGISTRY.gauge("y") is NULL_INSTRUMENT
+    assert NULL_REGISTRY.histogram("z") is NULL_INSTRUMENT
+    # mutators are no-ops, nothing lands in the snapshot
+    NULL_REGISTRY.counter("x").inc()
+    NULL_REGISTRY.gauge("y").set(3.0)
+    NULL_REGISTRY.histogram("z").observe(1.0)
+    assert NULL_REGISTRY.snapshot() == {}
+
+
+def test_histogram_percentiles_and_window():
+    r = MetricsRegistry(hist_window=4)
+    h = r.histogram("lat")
+    for v in range(1, 101):
+        h.observe(float(v))
+    st = h.stats()
+    # count/sum/min/max are exact over the full life of the instrument...
+    assert st["count"] == 100 and st["min"] == 1.0 and st["max"] == 100.0
+    assert st["sum"] == pytest.approx(5050.0)
+    # ...percentiles stream over the retained window (last 4: 97..100)
+    assert st["p50"] == 98.0
+    assert st["p99"] == 100.0
+
+
+def test_snapshot_keys_and_histogram_expansion():
+    r = MetricsRegistry()
+    r.counter("steps").inc(3)
+    r.gauge("loss").set(1.25)
+    r.gauge("stage_ms", stage="prefill").set(7.0)
+    r.gauge("never_measured")     # stays None
+    h = r.histogram("lat")
+    h.observe(2.0)
+    h.observe(4.0)
+    snap = r.snapshot()
+    assert snap["steps"] == 3.0
+    assert snap["loss"] == 1.25
+    assert snap['stage_ms{stage="prefill"}'] == 7.0
+    assert snap["never_measured"] is None
+    assert snap["lat_count"] == 2 and snap["lat_sum"] == 6.0
+    assert snap["lat_min"] == 2.0 and snap["lat_max"] == 4.0
+    assert snap["lat_p50"] == 2.0 and snap["lat_p99"] == 4.0
+
+
+def test_prometheus_text_exposition():
+    r = MetricsRegistry()
+    r.counter("req_total", "requests", reason="eos").inc(2)
+    r.gauge("depth", "queue depth").set(5)
+    r.gauge("unset")              # None -> omitted from exposition
+    h = r.histogram("lat_ms", "latency")
+    h.observe(10.0)
+    text = r.to_prometheus_text()
+    assert "# TYPE req_total counter" in text
+    assert 'req_total{reason="eos"} 2' in text
+    assert "# HELP depth queue depth" in text
+    assert "depth 5" in text
+    assert "# TYPE lat_ms summary" in text
+    assert 'lat_ms{quantile="0.5"} 10' in text
+    assert "lat_ms_count 1" in text
+    # None-valued gauge: TYPE header only, no sample line
+    assert not any(l.startswith("unset ") for l in text.splitlines())
+
+
+# ---------------------------------------------------------------------------
+# event log + schema
+# ---------------------------------------------------------------------------
+
+def test_emit_stamps_and_records():
+    log = EventLog(clock=lambda: 123.5)
+    ev = log.emit("note")
+    assert ev["ts"] == 123.5 and ev["kind"] == "note"
+    assert ev["run_id"] == log.run_id
+    assert log.records == [ev]
+
+
+def test_emit_validates_required_fields():
+    log = EventLog()
+    with pytest.raises(ValueError, match="missing required"):
+        log.emit("step", step=1, loss=0.5)      # no wall_s
+    with pytest.raises(ValueError, match="unknown event kind"):
+        log.emit("no_such_kind")
+    with pytest.raises(ValueError, match="is not"):
+        log.emit("step", step="one", loss=0.5, wall_s=0.1)
+
+
+def test_schema_optional_nullable_fields():
+    # trailing "?" in the schema admits null: a probe before any full-step
+    # wall exists has achieved_overlap=None
+    errs = validate_event({
+        "ts": 0.0, "kind": "probe", "run_id": "r",
+        "step": 4, "phase": 0, "t_comp": 0.1, "t_comm": 0.2, "ccr": 2.0,
+        "achieved_overlap": None,
+    })
+    assert errs == []
+    # ...but a wrongly-typed optional still fails
+    errs = validate_event({
+        "ts": 0.0, "kind": "probe", "run_id": "r",
+        "step": 4, "phase": 0, "t_comp": 0.1, "t_comm": 0.2, "ccr": 2.0,
+        "achieved_overlap": "high",
+    })
+    assert errs and "achieved_overlap" in errs[0]
+
+
+def test_every_schema_kind_is_well_formed():
+    schema = load_schema()
+    assert schema["version"] == 1
+    for kind, spec in schema["kinds"].items():
+        for field, typ in {**spec.get("required", {}),
+                           **spec.get("optional", {})}.items():
+            base = typ[:-1] if typ.endswith("?") else typ
+            assert base in ("number", "integer", "string", "boolean",
+                            "object", "array", "null"), (kind, field, typ)
+
+
+def test_event_log_streams_jsonl(tmp_path):
+    path = os.path.join(tmp_path, "events.jsonl")
+    schema = load_schema()
+    with EventLog(path) as log:
+        log.emit("note")
+        log.emit("flush", step=3, reason="test")
+    with open(path) as f:
+        lines = [json.loads(l) for l in f]
+    assert [e["kind"] for e in lines] == ["note", "flush"]
+    for ev in lines:
+        assert validate_event(ev, schema) == []
+
+
+def test_event_log_bounds_memory():
+    log = EventLog(max_records=5)
+    for i in range(12):
+        log.emit("note")
+    assert len(log.records) == 5
+
+
+def test_disabled_event_log_is_free():
+    log = EventLog(enabled=False)
+    assert log.emit("no_such_kind_even") is None
+    assert log.records == []
+
+
+# ---------------------------------------------------------------------------
+# plan digest
+# ---------------------------------------------------------------------------
+
+def test_plan_digest_stable_and_structure_sensitive():
+    a = make_trainer(bucket_bytes=1 << 14)
+    b = make_trainer(bucket_bytes=1 << 14)
+    c = make_trainer(bucket_bytes=1 << 16)
+    assert plan_digest(a.plan) == plan_digest(b.plan)
+    assert plan_digest(a.plan) != plan_digest(c.plan)
+    assert len(plan_digest(a.plan)) == 16
+
+
+# ---------------------------------------------------------------------------
+# Telemetry bundle
+# ---------------------------------------------------------------------------
+
+def test_as_telemetry_coercions(tmp_path):
+    assert as_telemetry(None) is NULL_TELEMETRY
+    tel = Telemetry()
+    assert as_telemetry(tel) is tel
+    d = os.path.join(tmp_path, "t")
+    from_path = as_telemetry(d)
+    assert from_path.enabled and from_path.directory == d
+    from_path.close()
+    with pytest.raises(TypeError):
+        as_telemetry(42)
+
+
+def test_null_telemetry_is_inert(tmp_path):
+    assert not NULL_TELEMETRY.enabled
+    assert NULL_TELEMETRY.manifest_once(role="train") is False
+    assert NULL_TELEMETRY.save(str(tmp_path)) is None
+    assert NULL_TELEMETRY.events.emit("note") is None
+
+
+def test_telemetry_save_artifacts(tmp_path):
+    d = os.path.join(tmp_path, "tel")
+    with Telemetry(d) as tel:
+        assert tel.manifest_once(config={}, plan={}, world=1) is True
+        assert tel.manifest_once(config={}, plan={}, world=1) is False
+        tel.registry.gauge("g").set(1.0)
+        tel.tracer.record_step(0, 0, 0.01)
+        paths = tel.save()
+    for key in ("prom", "snapshot", "trace", "events"):
+        assert os.path.exists(paths[key]), key
+    with open(paths["snapshot"]) as f:
+        assert json.load(f)["g"] == 1.0
+    with open(paths["trace"]) as f:
+        assert any(e.get("ph") == "X" for e in json.load(f)["traceEvents"])
+    with open(paths["events"]) as f:
+        (manifest,) = [json.loads(l) for l in f]
+    assert manifest["kind"] == "manifest"
+
+
+def test_memory_backed_telemetry_exports_events(tmp_path):
+    tel = Telemetry()         # no directory: events buffer in memory
+    tel.events.emit("note")
+    paths = tel.save(str(tmp_path))
+    with open(paths["events"]) as f:
+        assert json.loads(f.readline())["kind"] == "note"
+    tel.close()
+
+
+# ---------------------------------------------------------------------------
+# integrations
+# ---------------------------------------------------------------------------
+
+def test_trainer_run_emits_manifest_and_steps():
+    tr = make_trainer(interval=2)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    tel = Telemetry()
+    tr.run(state, loader(), steps=3, log=None, telemetry=tel)
+    kinds = [e["kind"] for e in tel.events.records]
+    assert kinds[0] == "manifest"
+    assert kinds.count("step") == 3
+    schema = load_schema()
+    for ev in tel.events.records:
+        assert validate_event(ev, schema) == []
+    manifest = tel.events.records[0]
+    assert manifest["plan"]["digest"] == plan_digest(tr.plan)
+    assert manifest["plan"]["num_buckets"] == tr.plan.num_buckets
+    snap = tel.registry.snapshot()
+    assert snap["train_steps_total"] == 3.0
+    assert isinstance(snap["train_loss"], float)
+    tel.close()
+
+
+def test_adaptive_runtime_replan_audit_trail():
+    from repro.runtime import AutotuneConfig
+    from repro.runtime.monitor import synthetic_probe
+
+    tr = make_trainer(interval=2)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    tel = Telemetry()
+    cfg = AutotuneConfig(
+        measure_every=2, warmup_steps=2, window=2, patience=1,
+        cooldown_steps=2, probe=synthetic_probe(0.01, 6.0),
+    )
+    tr.run(state, loader(), steps=12, log=None, autotune=cfg, telemetry=tel)
+    kinds = [e["kind"] for e in tel.events.records]
+    assert "probe" in kinds and "replan_decision" in kinds
+    assert "replan" in kinds   # injected CCR=6 forces an interval switch
+    schema = load_schema()
+    for ev in tel.events.records:
+        assert validate_event(ev, schema) == []
+    rp = next(e for e in tel.events.records if e["kind"] == "replan")
+    assert rp["old_interval"] == 2 and rp["new_interval"] != 2
+    decisions = [e for e in tel.events.records
+                 if e["kind"] == "replan_decision"]
+    assert any(d["replan"] for d in decisions)
+    # the runtime's spans land in the bundle's shared tracer
+    assert any("replan" in e.get("cat", "") for e in tel.tracer.events)
+    tel.close()
+
+
+def test_serve_engine_records_requests():
+    from repro.serve import Engine, ServeConfig
+
+    cfg = get_reduced("qwen1.5-0.5b").with_(vocab_size=256)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tel = Telemetry()
+    eng = Engine(
+        model, params,
+        ServeConfig(batch_slots=2, max_len=32, max_new_tokens=4,
+                    page_size=8, prefill_chunk=8),
+        telemetry=tel,
+    )
+    eng.submit([1, 2, 3])
+    eng.submit([4, 5, 6, 7])
+    eng.run_until_done()
+    reqs = [e for e in tel.events.records if e["kind"] == "serve_request"]
+    assert len(reqs) == 2
+    schema = load_schema()
+    for ev in tel.events.records:
+        assert validate_event(ev, schema) == []
+    cats = {e.get("cat") for e in tel.tracer.events}
+    for stage in ("queued", "prefill", "insert", "decode"):
+        assert f"serve,{stage}" in cats
+    snap = tel.registry.snapshot()
+    assert snap['serve_requests_total{reason="length"}'] == 2.0
+    assert snap['serve_stage_ms{stage="prefill"}_count'] >= 1
+    tel.close()

@@ -1,0 +1,182 @@
+"""``runtime/trace.py`` unit tests: ring-buffer bounds, the
+calibrate-from-trace round-trip, per-bucket planned issue spans, and
+per-request serve spans (DESIGN.md §15)."""
+from __future__ import annotations
+
+import pytest
+
+from repro.configs import get_reduced
+from repro.core.perfmodel import calibrate_from_trace
+from repro.models import build_model
+from repro.optim import sgd
+from repro.runtime.monitor import PhaseSample
+from repro.runtime.trace import (
+    PID_PLANNED,
+    PID_SERVE,
+    TimelineTracer,
+)
+from repro.serve.scheduler import Completion
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def make_trainer(interval=2):
+    cfg = get_reduced("gpt2-paper").with_(vocab_size=256)
+    model = build_model(cfg)
+    tc = TrainConfig(
+        compressor="covap", interval=interval,
+        bucket_bytes=1 << 14, max_buckets=32, log_every=10 ** 9,
+    )
+    return Trainer(model, sgd(1e-3), tc)
+
+
+# ---------------------------------------------------------------------------
+# ring buffer
+# ---------------------------------------------------------------------------
+
+def test_ring_buffer_evicts_oldest_at_max_events():
+    tr = TimelineTracer(max_events=8)
+    for step in range(20):
+        tr.record_step(step, phase=0, wall_s=0.01)
+    assert len(tr.events) == 8
+    names = [e["name"] for e in tr.events]
+    assert names == [f"step {s}" for s in range(12, 20)]
+    # the synthetic cursor keeps advancing even as old spans fall off
+    assert tr._cursor_s == pytest.approx(0.2)
+
+
+def test_ring_buffer_export_survives_eviction():
+    tr = TimelineTracer(max_events=4)
+    for step in range(10):
+        tr.record_step(step, phase=step % 2, wall_s=0.5)
+    trace = tr.to_chrome_trace()
+    spans = [e for e in trace["traceEvents"] if e.get("ph") == "X"]
+    assert len(spans) == 4
+    # metadata rows are re-emitted in full regardless of eviction
+    meta = [e for e in trace["traceEvents"] if e.get("ph") == "M"]
+    assert len(meta) == 4  # planned / measured / control / serve
+
+
+# ---------------------------------------------------------------------------
+# calibration round-trip
+# ---------------------------------------------------------------------------
+
+def test_calibrate_from_trace_round_trip():
+    """Known t_comp / t_comm / bytes through the tracer must come back out
+    of ``calibrate_from_trace`` — the measured timeline feeds the same
+    model that planned it."""
+    tr = TimelineTracer()
+    t_comp, t_comm, wire = 0.02, 0.06, 6_000_000
+    for step in range(5):
+        tr.record_step(step, phase=0, wall_s=t_comp + t_comm)
+        tr.record_sample(
+            PhaseSample(phase=0, t_comp=t_comp, t_comm=t_comm, step=step),
+            bytes_on_wire=wire,
+        )
+    cal = calibrate_from_trace(tr.to_chrome_trace())
+    assert cal["t_comp"] == pytest.approx(t_comp, rel=1e-9)
+    assert cal["t_comm"] == pytest.approx(t_comm, rel=1e-9)
+    assert cal["ccr"] == pytest.approx(t_comm / t_comp, rel=1e-9)
+    assert cal["mean_step_s"] == pytest.approx(t_comp + t_comm, rel=1e-9)
+    assert cal["num_samples"] == 5
+    assert cal["link_bw"] == pytest.approx(wire / t_comm, rel=1e-9)
+
+
+def test_calibrate_accepts_bare_event_list():
+    tr = TimelineTracer()
+    tr.record_sample(PhaseSample(phase=0, t_comp=0.1, t_comm=0.3, step=0))
+    cal = calibrate_from_trace(list(tr.events))
+    assert cal["ccr"] == pytest.approx(3.0, rel=1e-9)
+    assert "link_bw" not in cal  # no bytes arg -> no bandwidth estimate
+
+
+# ---------------------------------------------------------------------------
+# planned per-bucket issue spans
+# ---------------------------------------------------------------------------
+
+def test_planned_bucket_spans_cover_the_plan():
+    """One named span per collective issue, phases together covering every
+    bucket of the plan exactly once per interval cycle — the property the
+    obs_check smoke gate asserts on the exported trace."""
+    trainer = make_trainer(interval=2)
+    tracer = TimelineTracer()
+    scheds = trainer.schedules()
+    for s in scheds:
+        tracer.record_planned_buckets(s, world=8, link_bw=1e9)
+
+    spans = [e for e in tracer.events if e.get("cat") == "planned,issue"]
+    assert len(spans) == sum(len(s.calls) for s in scheds)
+    assert all(e["pid"] == PID_PLANNED for e in spans)
+    assert all(e["name"].startswith("issue bucket") for e in spans)
+    covered = {e["args"]["bucket"] for e in spans}
+    assert covered == set(range(trainer.plan.num_buckets))
+    assert all(e["args"]["bytes"] > 0 for e in spans)
+    assert all(e["dur"] > 0 for e in spans)
+
+
+def test_planned_bucket_spans_follow_issue_order():
+    trainer = make_trainer(interval=2)
+    s = trainer.schedules()[0]
+    tracer = TimelineTracer()
+    tracer.record_planned_buckets(s, world=8)
+    spans = [e for e in tracer.events if e.get("cat") == "planned,issue"]
+    want = [int(s.selected[i]) for i in s.issue_order()]
+    assert [e["args"]["bucket"] for e in spans] == want
+    assert [e["args"]["rank"] for e in spans] == list(range(len(want)))
+    # back-to-back layout: starts are non-decreasing
+    ts = [e["ts"] for e in spans]
+    assert ts == sorted(ts)
+
+
+# ---------------------------------------------------------------------------
+# serve spans
+# ---------------------------------------------------------------------------
+
+def _completion(rid=3, **over):
+    base = dict(
+        rid=rid, prompt_len=5, tokens=[7, 8], finish_reason="length",
+        submit_s=10.0, admit_s=10.1, prefill_end_s=10.2,
+        first_token_s=10.25, finish_s=10.4,
+    )
+    base.update(over)
+    return Completion(**base)
+
+
+def test_record_request_emits_all_stages():
+    tracer = TimelineTracer()
+    tracer.record_request(_completion(), t0=10.0)
+    spans = {e["cat"]: e for e in tracer.events}
+    assert set(spans) == {
+        "serve,queued", "serve,prefill", "serve,insert", "serve,decode",
+    }
+    assert all(e["pid"] == PID_SERVE and e["tid"] == 3
+               for e in spans.values())
+    # stages tile the lifecycle end-to-end (µs timestamps, rebased to t0)
+    assert spans["serve,queued"]["ts"] == pytest.approx(0.0, abs=1e-6)
+    assert spans["serve,queued"]["dur"] == pytest.approx(0.1e6, rel=1e-9)
+    assert spans["serve,prefill"]["dur"] == pytest.approx(0.1e6, rel=1e-9)
+    assert spans["serve,insert"]["dur"] == pytest.approx(0.05e6, rel=1e-9)
+    assert spans["serve,decode"]["dur"] == pytest.approx(0.15e6, rel=1e-9)
+    for e in tracer.events:
+        assert e["args"]["rid"] == 3
+        assert e["args"]["finish_reason"] == "length"
+
+
+def test_record_request_truncated_gets_only_queued_span():
+    tracer = TimelineTracer()
+    tracer.record_request(
+        _completion(tokens=[], finish_reason="truncated",
+                    admit_s=None, prefill_end_s=None,
+                    first_token_s=None, finish_s=10.3),
+    )
+    assert len(tracer.events) == 1
+    (ev,) = tracer.events
+    assert ev["cat"] == "serve,queued"
+    assert ev["dur"] >= 0
+
+
+def test_record_counter_emits_counter_samples():
+    tracer = TimelineTracer()
+    tracer.record_counter("occupancy", 1.5, {"queue_depth": 3, "free": 7})
+    (ev,) = tracer.events
+    assert ev["ph"] == "C" and ev["pid"] == PID_SERVE
+    assert ev["args"] == {"queue_depth": 3.0, "free": 7.0}
