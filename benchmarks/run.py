@@ -29,6 +29,7 @@ import inspect
 from . import (
     adaptive_runtime,
     arena_check,
+    chaos_check,
     fig5_ratio_sweep,
     fig11_scaling,
     kernel_bench,
@@ -59,6 +60,7 @@ MODULES = {
     "sharded": sharded_check,
     "serve": serve_bench,
     "obs": obs_check,
+    "chaos": chaos_check,
 }
 
 # fast modules only: no training loops, no heavy jit — the CI smoke gate.
@@ -77,9 +79,14 @@ MODULES = {
 # telemetry gate (benchmarks/obs_check.py: an instrumented run must emit
 # schema-valid JSONL + a Chrome trace with one named planned span per
 # bucket + per-request serve spans, and the instrumented step wall must
-# stay within 3% of the uninstrumented one).
+# stay within 3% of the uninstrumented one); "chaos" is the resilience
+# gate (benchmarks/chaos_check.py: an 8-worker mesh run under injected
+# NaN grads + EF blow-up + a mid-run kill must heal through all three
+# recovery rungs with every trip in telemetry, and a guarded step must
+# stay within 3% of an unguarded one — recorded as guard_overhead_frac).
 SMOKE_MODULES = ("table1", "table3", "table5", "fig5", "fig11", "kernels",
-                 "adaptive", "overlap", "arena", "sharded", "serve", "obs")
+                 "adaptive", "overlap", "arena", "sharded", "serve", "obs",
+                 "chaos")
 
 _REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
@@ -164,6 +171,9 @@ def build_snapshot(all_rows: list[tuple]) -> dict:
     # telemetry-overhead gate result (benchmarks/obs_check.py)
     obs_us = {name: us for name, us, _ in all_rows
               if name.startswith("obs/")}
+    # guard-overhead gate result (benchmarks/chaos_check.py)
+    chaos_us = {name: us for name, us, _ in all_rows
+                if name.startswith("chaos/")}
 
     def _serve(key, scale=1.0):
         v = serve_us.get(key)
@@ -207,6 +217,8 @@ def build_snapshot(all_rows: list[tuple]) -> dict:
       "sustained generated tokens/s at the heaviest swept rate")
     g("telemetry_overhead_frac", obs_us.get("obs/overhead_frac"),
       "instrumented/uninstrumented step-wall delta (obs_check gate)")
+    g("guard_overhead_frac", chaos_us.get("chaos/guard_overhead_frac"),
+      "guarded/unguarded step-wall delta (chaos_check gate)")
     return {
         "schema": 3,
         "unix_time": int(time.time()),

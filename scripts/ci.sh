@@ -43,6 +43,15 @@ if [[ "$what" == "all" || "$what" == "bench" ]]; then
     # the repo root on every smoke run, and the run FAILS if any stable
     # key regressed >25% vs the previous snapshot
     # (REPRO_BENCH_NO_TRAJECTORY_GATE=1 records without gating).
+    # "chaos" is the resilience gate (benchmarks/chaos_check.py): an
+    # 8-worker mesh run under injected NaN grads, an EF blow-up, a
+    # persistent Inf and a mid-run kill must heal through all three
+    # recovery rungs (skip-step / ef-flush / checkpoint rewind), resume
+    # from the guard-owned checkpoint, end with finite loss, and surface
+    # every trip as schema-valid telemetry; a guarded step must stay
+    # within 3% of an unguarded one, recorded as guard_overhead_frac in
+    # BENCH_<n>.json (REPRO_CHAOS_NO_OVERHEAD_GATE=1 skips only the 3%
+    # check).
     python -m benchmarks.run --smoke > /dev/null
     echo "smoke benchmarks OK"
 fi

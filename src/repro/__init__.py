@@ -21,6 +21,7 @@ _SUBMODULES = (
     "launch",
     "models",
     "optim",
+    "resilience",
     "runtime",
     "serve",
     "train",

@@ -160,6 +160,7 @@ class FitResult:
     schedules: list[CommSchedule]
     autotune: dict | None = None   # AdaptiveRuntime summary (adaptive mode)
     telemetry: Any = None          # repro.obs.Telemetry when armed
+    resilience: dict | None = None  # ResilienceRuntime summary (guards mode)
 
     @property
     def final_interval(self) -> int:
@@ -203,6 +204,8 @@ def fit(
     arena: bool = False,
     sync: str = "allreduce",
     telemetry=None,
+    guards=None,
+    faults=None,
 ) -> FitResult:
     """Train ``arch`` with a GC scheme; ``interval="auto"`` applies the
     paper's ``I = ceil(CCR)`` from the analytic profiler end-to-end.
@@ -239,7 +242,15 @@ def fit(
 
     ``telemetry`` (None | directory path | ``repro.obs.Telemetry``) arms
     the unified telemetry subsystem (DESIGN.md §15); the live bundle is
-    handed back as ``FitResult.telemetry`` for inspection or ``save()``."""
+    handed back as ``FitResult.telemetry`` for inspection or ``save()``.
+
+    ``guards`` (None | True | ``repro.resilience.GuardConfig`` | dict)
+    arms the resilience runtime (DESIGN.md §16): numeric guardrails on
+    every step plus the skip-step → EF-flush → checkpoint-rewind auto-
+    recovery ladder; ``faults`` (None | spec string like
+    ``"grad_nan@10,ef_blowup@20"`` | ``FaultPlan``) injects a
+    deterministic chaos schedule.  The ladder's summary lands in
+    ``FitResult.resilience``."""
     cfg = _config(arch, reduced=reduced, vocab_size=vocab_size)
     model = build_model(cfg)
     dp_world = dp_workers
@@ -280,7 +291,8 @@ def fit(
 
     tel = as_telemetry(telemetry)
     state = tr.run(state, iter(batches), steps=steps, log=log,
-                   autotune=autotune, telemetry=tel)
+                   autotune=autotune, telemetry=tel, guards=guards,
+                   faults=faults)
     return FitResult(
         trainer=tr,
         state=state,
@@ -290,6 +302,9 @@ def fit(
         schedules=tr.schedules(),
         autotune=tr.runtime.summary() if tr.runtime is not None else None,
         telemetry=tel if tel.enabled else None,
+        resilience=(
+            tr.resilience.summary() if tr.resilience is not None else None
+        ),
     )
 
 

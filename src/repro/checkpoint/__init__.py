@@ -1,20 +1,27 @@
 """Checkpointing: pytree <-> npz + JSON manifest, sharding-aware on restore.
 
 ``save_train_state`` / ``restore_train_state`` round-trip the full trainer
-state including compressor (error-feedback) residuals.
+state including compressor (error-feedback) residuals.  Saves are atomic
+(temp dir + rename) and digest-verified on restore — a corrupted or
+partial checkpoint raises :class:`CheckpointCorruptError` instead of
+deserializing garbage.
 """
 from .store import (
+    CheckpointCorruptError,
     latest_step,
     load_extra,
     restore,
     restore_train_state,
     save,
     save_train_state,
+    verify,
 )
 
 __all__ = [
+    "CheckpointCorruptError",
     "save",
     "restore",
+    "verify",
     "latest_step",
     "load_extra",
     "save_train_state",

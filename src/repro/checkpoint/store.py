@@ -13,12 +13,26 @@ restart silently loses the paper's accuracy guarantee).  The manifest's
 ``extra`` dict records the interval the residual was accumulated under,
 so a restart into a re-planned interval can route through
 ``runtime.transitions`` instead of assuming the cadence matched.
+
+Crash safety (DESIGN.md §16): a checkpoint is the recovery ladder's last
+rung, so a half-written one is worse than none.  ``save`` therefore
+writes into a dot-prefixed sibling directory (invisible to
+``latest_step``'s ``step_(\\d+)`` scan) and publishes it with one atomic
+``os.replace`` — a crash mid-save leaves either the previous checkpoint
+or a stray temp dir, never a readable-but-partial ``step_<N>``.  The
+manifest records a SHA-256 digest of ``arrays.npz``; ``restore`` verifies
+it before deserializing and raises :class:`CheckpointCorruptError` —
+deliberately NOT a ``ValueError``, so ``restore_train_state``'s
+comp-structure-drift fallback cannot swallow at-rest corruption — on any
+mismatch, truncation, or missing payload.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import re
+import shutil
 from typing import Any
 
 import jax
@@ -26,6 +40,21 @@ import jax.numpy as jnp
 import numpy as np
 
 _SEP = "::"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """The checkpoint on disk fails integrity checks (digest mismatch,
+    truncated/missing array payload).  Restoring it would deserialize
+    garbage into live training state — callers should treat the
+    checkpoint as lost, not retry."""
+
+
+def _digest_file(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return "sha256:" + h.hexdigest()
 
 
 def _flatten(tree: Any) -> dict[str, jax.Array]:
@@ -37,7 +66,13 @@ def _flatten(tree: Any) -> dict[str, jax.Array]:
 
 def save(directory: str, step: int, tree: Any, extra: dict | None = None) -> str:
     d = os.path.join(directory, f"step_{step:08d}")
-    os.makedirs(d, exist_ok=True)
+    # stage into a dot-prefixed sibling (latest_step's regex skips it),
+    # publish with one atomic rename: a crash mid-save can never leave a
+    # readable-but-partial step_<N> for the recovery ladder to trust
+    tmp = os.path.join(directory, f".tmp_step_{step:08d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
     flat = _flatten(tree)
     arrays, manifest = {}, {}
     for i, (key, leaf) in enumerate(sorted(flat.items())):
@@ -53,11 +88,19 @@ def save(directory: str, step: int, tree: Any, extra: dict | None = None) -> str
                 "dtype": str(arr.dtype),
                 "shape": arr.shape,
             }
-    np.savez(os.path.join(d, "arrays.npz"), **arrays)
-    with open(os.path.join(d, "manifest.json"), "w") as f:
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    digest = _digest_file(os.path.join(tmp, "arrays.npz"))
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(
-            {"step": step, "leaves": manifest, "extra": dict(extra or {})}, f
+            {"step": step, "leaves": manifest, "digest": digest,
+             "extra": dict(extra or {})}, f
         )
+    # os.replace needs the target gone (non-empty dirs don't replace);
+    # removing a complete old copy before the rename keeps the invariant:
+    # step_<N> is either absent or whole
+    if os.path.exists(d):
+        shutil.rmtree(d)
+    os.replace(tmp, d)
     return d
 
 
@@ -79,8 +122,34 @@ def latest_step(directory: str) -> int | None:
     return max(steps) if steps else None
 
 
+def verify(directory: str, step: int) -> str | None:
+    """Integrity-check one checkpoint's array payload against the digest
+    in its manifest.  Returns the digest (None for pre-digest checkpoints,
+    which carry nothing to verify); raises :class:`CheckpointCorruptError`
+    on mismatch or a missing payload."""
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        recorded = json.load(f).get("digest")
+    npz = os.path.join(d, "arrays.npz")
+    if not os.path.exists(npz):
+        raise CheckpointCorruptError(
+            f"checkpoint {d} has a manifest but no arrays.npz — partial "
+            f"write or deleted payload; treat this checkpoint as lost"
+        )
+    if recorded is None:
+        return None
+    actual = _digest_file(npz)
+    if actual != recorded:
+        raise CheckpointCorruptError(
+            f"checkpoint {d} is corrupted: arrays.npz digest {actual} does "
+            f"not match the manifest's {recorded}; refusing to deserialize"
+        )
+    return recorded
+
+
 def restore(directory: str, step: int, like: Any, shardings: Any = None) -> Any:
     d = os.path.join(directory, f"step_{step:08d}")
+    verify(directory, step)
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)["leaves"]
     data = np.load(os.path.join(d, "arrays.npz"))

@@ -1,0 +1,173 @@
+"""The chaos-recovery gate: a multi-worker train run under injected
+faults must heal itself through every rung of the recovery ladder
+(DESIGN.md §16).
+
+Shared harness for the ``benchmarks.run --smoke`` "chaos" gate and ad-hoc
+runs — execute it in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the CPU backend
+has a real 8-worker mesh for the compressor's collectives:
+
+    python -m repro.launch.chaos_gate
+
+The scenario (reduced gpt2-paper, covap ``I=2``):
+
+* ``grad_nan@6`` — transient NaN in the params: nonfinite guard trips,
+  **skip-step** restores the pre-corruption snapshot;
+* ``ef_blowup@10`` — the EF residual scaled past the watchdog limit:
+  residual guard trips and enters the ladder at **ef-flush** (skip would
+  restore the blown residual along with everything else);
+* ``grad_inf@14x3`` — a persistent fault that survives three
+  re-encounters: the per-incident skip and flush budgets drain, forcing a
+  **checkpoint rewind**;
+* ``kill@17`` — an injected crash: the driver catches
+  :class:`~repro.resilience.InjectedCrash`, restores the latest
+  guard-owned checkpoint, and resumes with the SAME
+  :class:`~repro.resilience.ResilienceRuntime` (so spent fault budgets
+  persist and the kill does not re-fire on replay).
+
+Prints one ``CHAOS ...`` line and exits non-zero unless the healed run
+ends with a finite loss, all three rungs were exercised, and every
+trip/action/firing is visible in telemetry (events 1:1 with counters).
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FAULT_SPEC = "grad_nan@6,ef_blowup@10,grad_inf@14x3,kill@17"
+TOTAL_STEPS = 20
+
+
+def run_chaos(td: str) -> dict:
+    """Run the kill+resume chaos scenario; returns the summary dict the
+    gate asserts over.  ``td`` holds the checkpoint dir and telemetry."""
+    from jax.sharding import Mesh
+
+    from repro import checkpoint
+    from repro.configs import get_reduced
+    from repro.data import DataConfig, make_loader
+    from repro.models import build_model
+    from repro.obs import Telemetry, validate_event
+    from repro.optim import adamw
+    from repro.resilience import GuardConfig, InjectedCrash
+    from repro.train.trainer import TrainConfig, Trainer
+
+    devs = jax.devices()
+    mesh = Mesh(np.array(devs[: min(8, len(devs))]), ("data",))
+    cfg = get_reduced("gpt2-paper").with_(vocab_size=256)
+    model = build_model(cfg)
+    tc = TrainConfig(compressor="covap", interval=2, bucket_bytes=1 << 14,
+                     max_buckets=16, log_every=1000)
+    tr = Trainer(model, adamw(3e-3), tc, mesh=mesh, dp_axes=("data",))
+    state = tr.init_state(jax.random.PRNGKey(0))
+    dc = DataConfig(vocab_size=256, seq_len=16,
+                    global_batch=mesh.shape["data"], corpus_tokens=1 << 12)
+    loader = iter(make_loader(dc))
+
+    tel = Telemetry(os.path.join(td, "tel"))
+    ck = os.path.join(td, "ck")
+    g = GuardConfig(ckpt_dir=ck, ckpt_every=6, residual_check_every=2,
+                    max_skips=1, max_flushes=1,
+                    sync_every=1)   # strict lag-one: the FAULT_SPEC /
+    #   TOTAL_STEPS schedule below is step-exact (kill@17 must be reached
+    #   inside the budget); batched-sync semantics are covered by
+    #   tests/test_resilience.py::test_batched_sync_detection_and_recovery
+
+    # run-until-target: ``steps`` counts loop iterations and every
+    # recovery rung consumes one without advancing the step counter, so a
+    # single run call would fall short of the kill step.  Each pass tops
+    # the budget back up; fault budgets (``times``) bound the loop.
+    resumed_from = -1
+    while int(state["step"]) < TOTAL_STEPS:
+        try:
+            state = tr.run(
+                state, loader, steps=TOTAL_STEPS - int(state["step"]),
+                log=None, telemetry=tel,
+                guards=tr.resilience if tr.resilience is not None else g,
+                faults=None if tr.resilience is not None else FAULT_SPEC,
+            )
+        except InjectedCrash:
+            # the driver half of kill-fault recovery: restore the latest
+            # guard-owned checkpoint and resume with the same runtime
+            # (its injector remembers the kill already fired)
+            like = tr.init_state(jax.random.PRNGKey(1))
+            state, _extra = checkpoint.restore_train_state(ck, like)
+            resumed_from = int(state["step"])
+
+    # finite loss through the trainer's own compiled executable
+    fn = tr._phase_fn(int(state["step"]) % tr.num_phases)
+    _, _, _, m = fn(state["params"], state["opt"], state["comp"],
+                    next(loader), jnp.asarray(state["step"], jnp.int32))
+    loss = float(m["total_loss"])
+
+    summary = tr.resilience.summary()
+    tel.save()
+    tel.close()
+
+    by_kind: dict[str, int] = {}
+    with open(os.path.join(td, "tel", "events.jsonl")) as f:
+        for lineno, line in enumerate(f, 1):
+            ev = json.loads(line)
+            errs = validate_event(ev)
+            if errs:
+                raise AssertionError(
+                    f"chaos gate: events.jsonl:{lineno} invalid "
+                    f"{ev.get('kind')!r} event: {errs}"
+                )
+            by_kind[ev["kind"]] = by_kind.get(ev["kind"], 0) + 1
+    snap = tel.registry.snapshot()
+
+    def counted(prefix: str) -> int:
+        return int(sum(v for k, v in snap.items() if k.startswith(prefix)))
+
+    return {
+        "loss": loss,
+        "resumed_from": resumed_from,
+        "final_step": int(state["step"]),
+        "summary": summary,
+        "events": by_kind,
+        "counters": {
+            "guard_trips_total": counted("guard_trips_total"),
+            "recovery_actions_total": counted("recovery_actions_total"),
+            "faults_injected_total": counted("faults_injected_total"),
+        },
+    }
+
+
+def main() -> None:
+    with tempfile.TemporaryDirectory() as td:
+        out = run_chaos(td)
+    s = out["summary"]
+    rungs = s["actions_by_rung"]
+    ok = (
+        math.isfinite(out["loss"])
+        and out["resumed_from"] >= 0                      # kill+resume ran
+        and s["faults"]["by_kind"].get("kill", 0) == 1
+        and out["final_step"] == TOTAL_STEPS
+        and set(rungs) == {"skip_step", "ef_flush", "rewind"}
+        and out["events"].get("guard_trip", 0)
+        == out["counters"]["guard_trips_total"] == s["trips"]
+        and out["events"].get("recovery", 0)
+        == out["counters"]["recovery_actions_total"] == s["actions"]
+        and out["events"].get("fault_injected", 0)
+        == out["counters"]["faults_injected_total"] == s["faults"]["fired"]
+    )
+    print(
+        "CHAOS loss=%.4f resumed_from=%d trips=%d actions=%d "
+        "rungs=%s faults_fired=%d events_ok=%d"
+        % (out["loss"], out["resumed_from"], s["trips"], s["actions"],
+           ",".join(f"{k}:{v}" for k, v in sorted(rungs.items())),
+           s["faults"]["fired"], int(ok))
+    )
+    if not ok:
+        raise SystemExit(f"chaos gate failed: {out}")
+
+
+if __name__ == "__main__":
+    main()

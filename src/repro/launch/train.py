@@ -75,6 +75,17 @@ def main():
                          "(default) or reduce-scatter + deferred param "
                          "all-gather at the next step's head (sharded "
                          "optimizer step; halves the exposed wire volume)")
+    ap.add_argument("--guards", action="store_true",
+                    help="arm the resilience runtime (repro.resilience): "
+                         "numeric guardrails on every step + the skip-step "
+                         "-> EF-flush -> checkpoint-rewind recovery ladder "
+                         "(rewind needs --ckpt-dir/--ckpt-every)")
+    ap.add_argument("--inject-faults", default="",
+                    help="deterministic chaos schedule, e.g. "
+                         "'grad_nan@10,ef_blowup@20x2,kill@30' "
+                         "(kind@step[xTIMES][*SCALE]; implies --guards)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for fault-site selection (reproducible chaos)")
     ap.add_argument("--history-out", default="")
     ap.add_argument("--telemetry-dir", default="",
                     help="arm the unified telemetry subsystem (repro.obs): "
@@ -147,6 +158,30 @@ def main():
         from repro.runtime import AdaptiveRuntime
 
         autotune = AdaptiveRuntime(tr)
+    resilience = None
+    if args.guards or args.inject_faults:
+        # one runtime across chunked run calls, like the AdaptiveRuntime:
+        # the recovery ladder and fault firing counts must not reset at
+        # checkpoint boundaries
+        from repro.resilience import (
+            GuardConfig, ResilienceRuntime, parse_fault_spec,
+        )
+
+        gcfg = GuardConfig(
+            ckpt_dir=args.ckpt_dir or None,
+            # the guard-owned rewind target rides the normal ckpt cadence
+            ckpt_every=args.ckpt_every if args.ckpt_dir else 0,
+        )
+        plan = (
+            parse_fault_spec(args.inject_faults, seed=args.fault_seed)
+            if args.inject_faults else None
+        )
+        resilience = ResilienceRuntime(tr, guards=gcfg, faults=plan)
+        msg = "guards armed (skip-step -> EF-flush -> rewind)"
+        if plan is not None:
+            msg += f"; injecting {len(plan.events)} fault(s): " \
+                   f"{','.join(e.kind + '@' + str(e.step) for e in plan.events)}"
+        print(f"[resilience] {msg}")
     telemetry = None
     if args.telemetry_dir:
         from repro.obs import Telemetry
@@ -161,7 +196,7 @@ def main():
         if args.ckpt_dir and args.ckpt_every > 0:
             chunk = min(chunk, args.ckpt_every)
         state = tr.run(state, loader, steps=chunk, autotune=autotune,
-                       telemetry=telemetry)
+                       telemetry=telemetry, guards=resilience)
         done += chunk
         if args.ckpt_dir and (args.ckpt_every > 0 or done >= args.steps):
             path = checkpoint.save_train_state(
@@ -182,6 +217,13 @@ def main():
         print(f"[autotune] measured CCR "
               f"{(s['measured_ccr'] or 0.0):.3f}, interval {s['interval']}, "
               f"{s['replans']} re-plan(s)")
+    if resilience is not None:
+        rs = resilience.summary()
+        print(f"[resilience] {rs['trips']} guard trip(s) "
+              f"{rs['trips_by_guard']}, {rs['actions']} recovery action(s) "
+              f"{rs['actions_by_rung']}"
+              + (f", faults fired {rs['faults']['by_kind']}"
+                 if "faults" in rs else ""))
     if args.history_out:
         os.makedirs(os.path.dirname(args.history_out) or ".", exist_ok=True)
         with open(args.history_out, "w") as f:

@@ -1,0 +1,62 @@
+"""Resilience subsystem (DESIGN.md §16): deterministic fault injection,
+cheap numeric guardrails, and an escalating auto-recovery ladder wired
+through ``Trainer.run(guards=..., faults=...)`` and ``api.fit``.
+
+Production entry point::
+
+    from repro.resilience import GuardConfig
+    tr.run(state, batches, guards=GuardConfig(ckpt_dir="ckpt", ckpt_every=50))
+
+Chaos entry point (reproducible — same plan + seed, same corruption)::
+
+    tr.run(state, batches, guards=True, faults="grad_nan@10,ef_blowup@20")
+"""
+from .faults import (
+    FAULT_KINDS,
+    FaultEvent,
+    FaultInjector,
+    FaultPlan,
+    GRAD_FAULTS,
+    InjectedCrash,
+    as_fault_plan,
+    blowup_residual,
+    corrupt_planes,
+    corrupt_tree,
+    parse_fault_spec,
+    release_pages,
+    starve_pages,
+)
+from .guards import (
+    GUARD_KINDS,
+    GuardConfig,
+    GuardTrip,
+    Guards,
+    as_guard_config,
+    plane_nonfinite_counts,
+)
+from .recovery import ACTIONS, RecoveryError, ResilienceRuntime
+
+__all__ = [
+    "ACTIONS",
+    "FAULT_KINDS",
+    "FaultEvent",
+    "FaultInjector",
+    "FaultPlan",
+    "GRAD_FAULTS",
+    "GUARD_KINDS",
+    "GuardConfig",
+    "GuardTrip",
+    "Guards",
+    "InjectedCrash",
+    "RecoveryError",
+    "ResilienceRuntime",
+    "as_fault_plan",
+    "as_guard_config",
+    "blowup_residual",
+    "corrupt_planes",
+    "corrupt_tree",
+    "parse_fault_spec",
+    "plane_nonfinite_counts",
+    "release_pages",
+    "starve_pages",
+]

@@ -1,0 +1,373 @@
+"""Seeded, deterministic fault injection (DESIGN.md §16).
+
+A chaos run is only useful if it is *reproducible*: the same
+:class:`FaultPlan` against the same seed must corrupt the same elements of
+the same leaves at the same steps, so a recovery bug found in CI replays
+locally.  Every corruption site is drawn from
+``numpy.random.default_rng([seed, step, event_index])`` — nothing depends
+on wall clock, dict order, or device layout.
+
+Fault taxonomy (the failure classes that dominate real DP runs):
+
+* ``grad_nan`` / ``grad_inf`` / ``grad_bitflip`` — numeric corruption of
+  the values feeding the gradient computation.  The injector poisons
+  ``count`` elements of the parameter tree at the step boundary; every
+  gradient plane built from a poisoned operand is non-finite (NaN/Inf
+  propagate through the backward pass and the packed arena planes), which
+  is exactly the signal ``guards.py`` watches.  ``corrupt_planes`` applies
+  the same corruption directly to packed arena planes for pipeline-level
+  tests.
+* ``ef_blowup`` — scales the error-feedback residual by ``scale``
+  (default 1e20), modelling residual-energy divergence under a broken
+  compression schedule (the failure mode GraVAC's convergence gating
+  exists to prevent).
+* ``ccr_skew`` — wraps the adaptive runtime's probe and adds a synthetic
+  straggler delay to the measured comm time for ``times`` probes: the
+  measured CCR spikes the way it does when one worker is slow, which is
+  what the :class:`ReplanController`'s hysteresis + circuit breaker must
+  absorb without thrashing.
+* ``page_starve`` — grabs pages from a serve :class:`PagePool` and holds
+  them, starving admission (``starve_pages`` / ``release_pages``).
+* ``kill`` — raises :class:`InjectedCrash` at the step boundary: the
+  mid-run crash that loses unflushed sharded state.  The *resume* side is
+  the caller's job (``checkpoint.restore_train_state``), mirroring a real
+  operator restart.
+
+Each event fires ``times`` times total, matched by exact step number —
+so a recovery that rewinds *through* a fault step replays it only while
+firings remain, and a skip-step retry of the same step re-encounters the
+fault until it is exhausted.  That models transient faults (fire once,
+retry succeeds) and persistent ones (fire N times, forcing the recovery
+ladder to escalate) with one knob.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+GRAD_FAULTS = ("grad_nan", "grad_inf", "grad_bitflip")
+FAULT_KINDS = GRAD_FAULTS + ("ef_blowup", "ccr_skew", "page_starve", "kill")
+
+
+class InjectedCrash(RuntimeError):
+    """Raised by a ``kill`` fault: simulates the process dying mid-run."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault.  ``step`` is the train-state step count the
+    event matches (exactly — a rewound run re-encounters it only while
+    ``times`` firings remain).  ``scale`` is the ``ef_blowup`` factor or
+    the ``ccr_skew`` straggler delay in seconds; ``count`` is how many
+    elements to corrupt (grad faults) or pages to hold (page_starve)."""
+
+    step: int
+    kind: str
+    times: int = 1
+    scale: float = 1e20
+    count: int = 1
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; known: {FAULT_KINDS}"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A reproducible chaos schedule: events + the seed corruption sites
+    are drawn from."""
+
+    events: tuple[FaultEvent, ...] = ()
+    seed: int = 0
+
+    @property
+    def kinds(self) -> tuple[str, ...]:
+        return tuple(sorted({e.kind for e in self.events}))
+
+
+def parse_fault_spec(spec: str, *, seed: int = 0) -> FaultPlan:
+    """Parse the CLI fault grammar: ``kind@step[xTIMES][*SCALE]`` items,
+    comma-separated — e.g. ``grad_nan@10,grad_inf@18x4,ef_blowup@14*1e12``.
+    """
+    events = []
+    for item in spec.split(","):
+        item = item.strip()
+        if not item:
+            continue
+        if "@" not in item:
+            raise ValueError(
+                f"bad fault spec {item!r}: expected kind@step[xN][*SCALE]"
+            )
+        kind, rest = item.split("@", 1)
+        scale = 1e20
+        times = 1
+        if "*" in rest:
+            rest, s = rest.split("*", 1)
+            scale = float(s)
+        if "x" in rest:
+            rest, t = rest.split("x", 1)
+            times = int(t)
+        events.append(
+            FaultEvent(step=int(rest), kind=kind.strip(), times=times,
+                       scale=scale)
+        )
+    return FaultPlan(events=tuple(events), seed=seed)
+
+
+def as_fault_plan(obj) -> FaultPlan | None:
+    """Coerce the user-facing ``faults=`` argument: None passes through,
+    a spec string parses, a plan or live injector is used as-is."""
+    if obj is None or isinstance(obj, (FaultPlan, FaultInjector)):
+        return obj
+    if isinstance(obj, str):
+        return parse_fault_spec(obj)
+    if isinstance(obj, FaultEvent):
+        return FaultPlan(events=(obj,))
+    if isinstance(obj, (list, tuple)) and all(
+        isinstance(e, FaultEvent) for e in obj
+    ):
+        return FaultPlan(events=tuple(obj))
+    raise TypeError(
+        f"faults must be None, a spec string, FaultEvent(s), a FaultPlan "
+        f"or a FaultInjector; got {type(obj).__name__}"
+    )
+
+
+# ---------------------------------------------------------------------------
+# corruption primitives (deterministic site selection)
+# ---------------------------------------------------------------------------
+
+def _rng(seed: int, step: int, idx: int) -> np.random.Generator:
+    return np.random.default_rng([int(seed) & 0x7FFFFFFF, int(step), int(idx)])
+
+
+def _poison_value(kind: str, x: jax.Array, flat_idx: int,
+                  rng: np.random.Generator) -> jax.Array:
+    flat = x.reshape(-1)
+    if kind == "grad_nan":
+        v = jnp.asarray(np.nan, flat.dtype)
+    elif kind == "grad_inf":
+        v = jnp.asarray(np.inf, flat.dtype)
+    elif kind == "grad_bitflip":
+        # flip one bit of the element's binary representation — a high
+        # exponent bit, so the flip is a blow-up rather than a rounding
+        # wiggle (low-mantissa flips are invisible to any cheap guard and
+        # are absorbed by EF like ordinary noise)
+        itemsize = flat.dtype.itemsize
+        uint = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}[itemsize]
+        bits = np.asarray(flat[flat_idx]).view(uint)
+        bit = uint(1) << uint(itemsize * 8 - 2 - int(rng.integers(0, 3)))
+        v = (bits ^ bit).view(flat.dtype)
+        v = jnp.asarray(v)
+    else:
+        raise ValueError(f"not a value-corruption kind: {kind!r}")
+    return flat.at[flat_idx].set(v).reshape(x.shape)
+
+
+def corrupt_tree(tree: Any, kind: str, *, seed: int, step: int,
+                 count: int = 1, event_index: int = 0) -> tuple[Any, list]:
+    """Corrupt ``count`` elements of a pytree's floating leaves, sites
+    drawn deterministically from (seed, step, event_index).  Returns
+    ``(corrupted_tree, sites)`` where each site is
+    ``(leaf_index, flat_index)``."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    float_ids = [
+        i for i, leaf in enumerate(leaves)
+        if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.floating)
+        and leaf.size > 0
+    ]
+    if not float_ids:
+        return tree, []
+    rng = _rng(seed, step, event_index)
+    sizes = np.array([leaves[i].size for i in float_ids], np.float64)
+    sites = []
+    for _ in range(max(int(count), 1)):
+        li = float_ids[int(rng.choice(len(float_ids), p=sizes / sizes.sum()))]
+        fi = int(rng.integers(0, leaves[li].size))
+        leaves[li] = _poison_value(kind, leaves[li], fi, rng)
+        sites.append((li, fi))
+    return jax.tree_util.tree_unflatten(treedef, leaves), sites
+
+
+def corrupt_planes(planes: Sequence[jax.Array], kind: str, *, seed: int,
+                   step: int, count: int = 1) -> tuple[list[jax.Array], list]:
+    """The same corruption applied directly to packed gradient arena
+    planes (``core.arena.ArenaLayout.assemble`` output) — the unit-level
+    form the plane guards are tested against."""
+    planes = list(planes)
+    out, sites = corrupt_tree(planes, kind, seed=seed, step=step, count=count)
+    return list(out), sites
+
+
+def blowup_residual(comp_state: Any, scale: float) -> Any:
+    """Scale every floating leaf of a compressor state (the EF residual)
+    by ``scale`` — the residual-energy divergence fault."""
+    return jax.tree.map(
+        lambda r: (r.astype(jnp.float32) * jnp.float32(scale)).astype(r.dtype)
+        if hasattr(r, "dtype") and jnp.issubdtype(r.dtype, jnp.floating)
+        else r,
+        comp_state,
+    )
+
+
+# ---------------------------------------------------------------------------
+# serve-side starvation
+# ---------------------------------------------------------------------------
+
+def starve_pages(pool, n: int | None = None) -> list[int]:
+    """Allocate-and-hold ``n`` pages (default: all available) from a serve
+    :class:`~repro.serve.kv_arena.PagePool`.  Returns the held page ids —
+    pass them to :func:`release_pages` to end the fault."""
+    n = pool.available if n is None else min(int(n), pool.available)
+    held = pool.alloc(n) if n > 0 else []
+    return held or []
+
+
+def release_pages(pool, held: list[int]) -> None:
+    if held:
+        pool.free(held)
+
+
+# ---------------------------------------------------------------------------
+# the injector
+# ---------------------------------------------------------------------------
+
+class FaultInjector:
+    """Applies a :class:`FaultPlan` at step boundaries.
+
+    ``pre_step(state, batch, step)`` fires every event whose ``step``
+    matches and whose firing budget remains, returning the (possibly
+    corrupted) state/batch; ``kill`` events raise :class:`InjectedCrash`
+    instead.  ``wrap_probe`` decorates an adaptive-runtime probe so
+    ``ccr_skew`` events inflate its measured comm time.  All telemetry
+    goes through the bundle handed in by the resilience runtime."""
+
+    def __init__(self, plan: FaultPlan, telemetry=None):
+        from repro.obs import as_telemetry
+
+        self.plan = plan
+        self.telemetry = as_telemetry(telemetry)
+        self.fired = [0] * len(plan.events)
+        self.log: list[dict] = []
+
+    def attach_telemetry(self, telemetry) -> None:
+        from repro.obs import as_telemetry
+
+        self.telemetry = as_telemetry(telemetry)
+
+    def _record(self, step: int, event: FaultEvent, detail: dict) -> None:
+        rec = {"step": int(step), "fault": event.kind, **detail}
+        self.log.append(rec)
+        tel = self.telemetry
+        if tel.enabled:
+            tel.events.emit(
+                "fault_injected", step=int(step), fault=event.kind,
+                detail=detail,
+            )
+            tel.registry.counter(
+                "faults_injected_total", "chaos faults fired, by kind",
+                kind=event.kind,
+            ).inc()
+
+    def pre_step(self, state: dict, batch: Any, step: int):
+        """Fire every due event against this step's inputs.  Must be
+        called AFTER the caller snapshots its clean pre-step state — the
+        whole point of skip-step recovery is that the snapshot predates
+        the corruption."""
+        for i, ev in enumerate(self.plan.events):
+            if ev.step != int(step) or self.fired[i] >= ev.times:
+                continue
+            if ev.kind == "ccr_skew":
+                continue        # consumed by wrap_probe, not the step path
+            self.fired[i] += 1
+            if ev.kind == "kill":
+                self._record(step, ev, {"firing": self.fired[i]})
+                raise InjectedCrash(f"injected kill at step {step}")
+            if ev.kind in GRAD_FAULTS:
+                params, sites = corrupt_tree(
+                    state["params"], ev.kind, seed=self.plan.seed,
+                    step=step, count=ev.count, event_index=i,
+                )
+                state = {**state, "params": params}
+                self._record(step, ev, {
+                    "firing": self.fired[i],
+                    "sites": [[li, fi] for li, fi in sites],
+                })
+            elif ev.kind == "ef_blowup":
+                state = {**state, "comp": blowup_residual(state["comp"],
+                                                          ev.scale)}
+                self._record(step, ev, {
+                    "firing": self.fired[i], "scale": ev.scale,
+                })
+        return state, batch
+
+    # ---- probe skew -------------------------------------------------------
+    def wrap_probe(self, probe: Callable) -> Callable:
+        """Decorate a ``probe(state, batch, phase) -> PhaseSample`` so due
+        ``ccr_skew`` events add their synthetic straggler delay to the
+        sample's comm time (the slow-worker tail every collective waits
+        on).  Each event fires on ``times`` consecutive probes starting at
+        its ``step``th probe call (probe calls are the natural clock here
+        — the probe cadence, not the step cadence, is what the controller
+        sees)."""
+        calls = [0]
+
+        def skewed(state, batch, phase):
+            sample = probe(state, batch, phase)
+            n = calls[0]
+            calls[0] += 1
+            delay = 0.0
+            for i, ev in enumerate(self.plan.events):
+                if ev.kind != "ccr_skew":
+                    continue
+                if ev.step <= n and self.fired[i] < ev.times:
+                    self.fired[i] += 1
+                    delay += float(ev.scale)
+                    self._record(n, ev, {
+                        "firing": self.fired[i], "delay_s": float(ev.scale),
+                    })
+            if delay > 0.0:
+                sample = dataclasses.replace(
+                    sample, t_comm=sample.t_comm + delay,
+                    t_full=(sample.t_full + delay
+                            if sample.t_full > 0.0 else sample.t_full),
+                )
+            return sample
+
+        return skewed
+
+    def summary(self) -> dict:
+        return {
+            "events": len(self.plan.events),
+            "fired": int(sum(self.fired)),
+            "by_kind": {
+                k: sum(
+                    f for f, e in zip(self.fired, self.plan.events)
+                    if e.kind == k
+                )
+                for k in self.plan.kinds
+            },
+        }
+
+
+__all__ = [
+    "FAULT_KINDS",
+    "FaultEvent",
+    "FaultInjector",
+    "FaultPlan",
+    "GRAD_FAULTS",
+    "InjectedCrash",
+    "as_fault_plan",
+    "blowup_residual",
+    "corrupt_planes",
+    "corrupt_tree",
+    "parse_fault_spec",
+    "release_pages",
+    "starve_pages",
+]

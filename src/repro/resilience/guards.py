@@ -1,0 +1,279 @@
+"""Cheap numeric guardrails over the training step (DESIGN.md §16).
+
+Guards must be nearly free — the chaos gate budgets their total overhead
+at ≤3% of step wall time — so every check is either (a) a scalar the step
+already computes (``total_loss``, ``grad_norm``: NaN/Inf anywhere in the
+gradient propagates into the global norm, so one finite-check on it has
+the same detection power as a per-leaf sweep), (b) a single reduction per
+packed arena plane (:func:`plane_nonfinite_counts`, used by the arena
+pipeline tests), or (c) a cadenced O(params) reduction — the EF-residual
+watchdog, a single cached jitted norm over the compressor state every
+``residual_check_every`` steps rather than per step.
+
+Three guards:
+
+* **nonfinite** — loss or global gradient norm is NaN/Inf.  The step
+  that produced it already applied a poisoned update, which is why
+  recovery restores the *pre-step* snapshot rather than patching the
+  post-step state.
+* **loss_spike** — loss exceeds ``loss_spike_factor ×`` the rolling
+  median of the last ``loss_window`` finite losses (armed only after
+  ``loss_spike_min_steps`` samples, so init noise can't trip it).
+  Catches blow-ups that stay finite.
+* **residual** — EF residual norm exceeds ``residual_abs_max``.
+  Residual mass is *deferred gradient*, so divergence here silently
+  poisons every future flush long before the loss moves; this guard maps
+  straight to the EF-flush recovery rung.
+
+What these guards cannot see (honest limits, DESIGN.md §16): silent
+numerical drift that stays finite and small (a low-mantissa bit flip is
+indistinguishable from rounding), corruption in the optimizer moments,
+and anything that corrupts the checkpoint itself — the digest check in
+``checkpoint.store`` covers at-rest corruption, but a correct checkpoint
+of an already-wrong state is unrecoverable by this subsystem.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+GUARD_KINDS = ("nonfinite", "loss_spike", "residual")
+
+# Module-level so the jitted executable is cached by a STABLE function
+# identity: a per-Guards-instance jit would recompile (~250 ms) on every
+# trainer run, which is the entire 3% overhead budget many times over.
+_residual_norm_jit = None
+
+
+def _residual_norm_leaves(leaves):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def _get_residual_norm_jit():
+    global _residual_norm_jit
+    if _residual_norm_jit is None:
+        import jax
+
+        _residual_norm_jit = jax.jit(_residual_norm_leaves)
+    return _residual_norm_jit
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardConfig:
+    """Knobs for the guard battery and (consumed by ``recovery.py``) the
+    escalation ladder bounds."""
+
+    check_every: int = 1            # host-side metric check cadence (steps)
+    sync_every: int = 4             # materialise deferred checks in batches
+    #   of this many steps: one host<->device wake per batch instead of
+    #   per step (each blocking wake costs ~0.5 ms of scheduler latency
+    #   on a saturated box, which alone blows the 3% budget on a small
+    #   step).  EVERY step is still checked — detection *latency* grows
+    #   to at most check_every*sync_every steps, detection *power* does
+    #   not change.  1 = the strict lag-one pipeline (tests that assert
+    #   step-exact recovery arithmetic pin this).
+    loss_window: int = 32           # rolling-median window for spikes
+    loss_spike_factor: float = 100.0
+    loss_spike_min_steps: int = 8   # samples before the spike guard arms
+    residual_check_every: int = 8   # EF-norm watchdog cadence (0 = off)
+    residual_abs_max: float = 1e12
+    # --- escalation ladder bounds (recovery.py) ---
+    max_skips: int = 2              # skip-step rungs per incident
+    max_flushes: int = 1            # EF-flush rungs per incident
+    max_rewinds: int = 2            # checkpoint rewinds per RUN (never reset)
+    retry_backoff_s: float = 0.0    # sleep between escalations
+    # --- guard-owned checkpointing (rewind target) ---
+    ckpt_dir: str | None = None
+    ckpt_every: int = 0             # 0 = never save; rewind needs a dir + cadence
+
+    def __post_init__(self):
+        if self.check_every < 1:
+            raise ValueError("check_every must be >= 1")
+        if self.sync_every < 1:
+            raise ValueError("sync_every must be >= 1")
+        if self.loss_window < 2:
+            raise ValueError("loss_window must be >= 2")
+
+
+def as_guard_config(obj) -> GuardConfig | None:
+    """Coerce the user-facing ``guards=`` argument: None passes through,
+    True means defaults, a dict is keyword overrides."""
+    if obj is None or isinstance(obj, GuardConfig):
+        return obj
+    if obj is True:
+        return GuardConfig()
+    if obj is False:
+        return None
+    if isinstance(obj, dict):
+        return GuardConfig(**obj)
+    raise TypeError(
+        f"guards must be None/True/False, a GuardConfig or a dict of "
+        f"overrides; got {type(obj).__name__}"
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardTrip:
+    """One guard firing.  ``value``/``threshold`` are the observed
+    statistic and the limit it crossed (NaN value for non-finite trips)."""
+
+    step: int
+    guard: str
+    reason: str
+    value: float = float("nan")
+    threshold: float = float("nan")
+
+
+def plane_nonfinite_counts(planes: Sequence[jnp.ndarray]) -> list[int]:
+    """Non-finite element count per packed arena plane — exactly one
+    ``sum(~isfinite)`` reduction per plane, the cheapest whole-gradient
+    scan the arena layout admits (planes are already flat and contiguous,
+    so there is no per-bucket gather)."""
+    return [int(jnp.sum(~jnp.isfinite(p))) for p in planes]
+
+
+class Guards:
+    """The guard battery.  ``check(step, metrics, comp_state)`` is called
+    by the resilience runtime on its host-side cadence with the step's
+    already-materialised scalar metrics; it returns the list of trips
+    (empty on a clean step).  The battery is stateful only through the
+    rolling loss window."""
+
+    def __init__(self, config: GuardConfig | None = None):
+        self.config = config or GuardConfig()
+        self._losses: list[float] = []
+        self.trips: list[GuardTrip] = []
+
+    # -- individual guards --------------------------------------------------
+    def _check_nonfinite(self, step: int, loss: float,
+                         gnorm: float | None) -> GuardTrip | None:
+        if not math.isfinite(loss):
+            return GuardTrip(step, "nonfinite", f"loss={loss}", value=loss)
+        if gnorm is not None and not math.isfinite(gnorm):
+            return GuardTrip(step, "nonfinite", f"grad_norm={gnorm}",
+                             value=gnorm)
+        return None
+
+    def _check_loss_spike(self, step: int, loss: float) -> GuardTrip | None:
+        cfg = self.config
+        window = self._losses[-cfg.loss_window:]
+        if len(window) >= cfg.loss_spike_min_steps:
+            med = float(np.median(window))
+            limit = cfg.loss_spike_factor * max(abs(med), 1e-8)
+            if abs(loss) > limit:
+                return GuardTrip(step, "loss_spike",
+                                 f"|loss|={abs(loss):.3e} > "
+                                 f"{cfg.loss_spike_factor:g}x median "
+                                 f"{med:.3e}",
+                                 value=loss, threshold=limit)
+        return None
+
+    def _check_residual(self, step: int, comp_state: Any,
+                        value: float | None = None) -> GuardTrip | None:
+        """``value`` is a precomputed norm from :meth:`residual_async`
+        (the caller already applied the cadence); without it the cadence
+        is applied here and the norm computed synchronously."""
+        cfg = self.config
+        if value is None:
+            if cfg.residual_check_every <= 0 or comp_state is None:
+                return None
+            if step % cfg.residual_check_every != 0:
+                return None
+            value = self._residual_value(comp_state)
+        norm = value
+        if not math.isfinite(norm) or norm > cfg.residual_abs_max:
+            return GuardTrip(step, "residual",
+                             f"EF residual norm {norm:.3e} exceeds "
+                             f"{cfg.residual_abs_max:.1e}",
+                             value=norm, threshold=cfg.residual_abs_max)
+        return None
+
+    def _residual_value(self, comp_state: Any) -> float:
+        """EF residual L2 norm via one cached jitted reduction.  The eager
+        ``transitions.residual_norm`` dispatches per-leaf ops and costs
+        tens of milliseconds on a reduced model — fine at replan
+        boundaries, fatal inside the 3%-budget watchdog cadence.  The jit
+        cache keys on leaf shapes, which are fixed for a run."""
+        import jax
+
+        if isinstance(comp_state, dict) and "residual" in comp_state:
+            comp_state = comp_state["residual"]
+        leaves = [
+            l for l in jax.tree_util.tree_leaves(comp_state)
+            if hasattr(l, "dtype") and jnp.issubdtype(l.dtype, jnp.floating)
+        ]
+        if not leaves:
+            return 0.0
+        return float(_get_residual_norm_jit()(leaves))
+
+    def residual_async(self, step: int, comp_state: Any):
+        """Dispatch the residual-norm reduction WITHOUT materialising it —
+        returns a device scalar (or None when the cadence/state says no
+        check is due).  The resilience runtime calls this at enqueue time
+        so that by the batched flush the scalar is already computed and
+        ``float()`` costs microseconds instead of a pipeline stall."""
+        import jax
+
+        cfg = self.config
+        if cfg.residual_check_every <= 0 or comp_state is None:
+            return None
+        if step % cfg.residual_check_every != 0:
+            return None
+        if isinstance(comp_state, dict) and "residual" in comp_state:
+            comp_state = comp_state["residual"]
+        leaves = [
+            l for l in jax.tree_util.tree_leaves(comp_state)
+            if hasattr(l, "dtype") and jnp.issubdtype(l.dtype, jnp.floating)
+        ]
+        if not leaves:
+            return None
+        return _get_residual_norm_jit()(leaves)
+
+    # -- the battery --------------------------------------------------------
+    def check(self, step: int, metrics: dict, comp_state: Any = None,
+              residual_value: float | None = None) -> list[GuardTrip]:
+        """Run every guard against one step's host-side metrics.  The
+        loss window only learns from clean steps — a tripped step's loss
+        must not drag the median toward the blow-up."""
+        loss = float(metrics.get("loss", metrics.get("total_loss", 0.0)))
+        gnorm = metrics.get("grad_norm")
+        gnorm = None if gnorm is None else float(gnorm)
+
+        trips = []
+        t = self._check_nonfinite(step, loss, gnorm)
+        if t is not None:
+            trips.append(t)
+        else:
+            t = self._check_loss_spike(step, loss)
+            if t is not None:
+                trips.append(t)
+        rt = self._check_residual(step, comp_state, value=residual_value)
+        if rt is not None:
+            trips.append(rt)
+        if not trips:
+            self._losses.append(loss)
+            if len(self._losses) > 4 * self.config.loss_window:
+                del self._losses[: -2 * self.config.loss_window]
+        self.trips.extend(trips)
+        return trips
+
+    def reset_window(self) -> None:
+        """Drop the loss history — called after a checkpoint rewind, where
+        the pre-rewind window no longer describes the trajectory."""
+        self._losses.clear()
+
+
+__all__ = [
+    "GUARD_KINDS",
+    "GuardConfig",
+    "GuardTrip",
+    "Guards",
+    "as_guard_config",
+    "plane_nonfinite_counts",
+]

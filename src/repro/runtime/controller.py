@@ -42,6 +42,17 @@ class AutotuneConfig:
     cooldown_steps: int = 32     # min steps between re-plans
     max_replans: int = 8
     max_interval: int = 64
+    # circuit breaker (repro.resilience, DESIGN.md §16): when the measured
+    # CCR oscillates across a band boundary — straggler flapping, noisy
+    # probes, or an injected ccr_skew fault — hysteresis+patience damp the
+    # thrash but cannot stop a slow alternation that re-plans every
+    # cooldown.  The breaker latches the controller OPEN (interval frozen,
+    # decisions keep flowing with reason "circuit-open:...") after
+    # breaker_replans re-plans land within any breaker_window_steps span.
+    # 0 disables.  Latched is latched: only an explicit reset_breaker()
+    # (an operator action) closes it again.
+    breaker_replans: int = 4
+    breaker_window_steps: int = 256
     transition_policy: str = "carry"   # "carry" | "rescale" | "flush"
     probe: Callable[..., PhaseSample] | None = None  # override (tests/bench)
     probe_warmup: int = 1
@@ -81,6 +92,38 @@ class ReplanController:
         self.replans = 0
         self.last_replan_step = -(10 ** 9)
         self.decisions: list[ReplanDecision] = []
+        self.replan_steps: list[int] = []
+        self.frozen = False
+        self.freeze_reason: str | None = None
+
+    # ---- circuit breaker --------------------------------------------------
+    def freeze(self, reason: str) -> None:
+        """Latch the breaker open: the interval is frozen and every
+        subsequent decision is a no-replan with reason
+        ``"circuit-open:<reason>"``."""
+        self.frozen = True
+        self.freeze_reason = reason
+
+    def reset_breaker(self) -> None:
+        """Close a latched breaker (operator action): re-plan history is
+        kept, but the window that tripped it is cleared so the very next
+        re-plan cannot instantly re-latch."""
+        self.frozen = False
+        self.freeze_reason = None
+        self.replan_steps.clear()
+
+    def _check_breaker(self, step: int) -> None:
+        c = self.config
+        if c.breaker_replans <= 0 or self.frozen:
+            return
+        recent = [
+            s for s in self.replan_steps
+            if step - s < c.breaker_window_steps
+        ]
+        if len(recent) >= c.breaker_replans:
+            self.freeze(
+                f"{len(recent)} replans in {c.breaker_window_steps} steps"
+            )
 
     # ---- the band ---------------------------------------------------------
     def consistent(self, ccr: float) -> bool:
@@ -103,8 +146,16 @@ class ReplanController:
                 self.replans += 1
                 self.last_replan_step = int(step)
                 self.interval = int(interval)
+                self.replan_steps.append(int(step))
+                # latch AFTER the commit: the replan that trips the
+                # breaker still lands (so max_replans stays the hard
+                # bound); everything later is frozen out
+                self._check_breaker(int(step))
             return d
 
+        if self.frozen:
+            return out(False, self.interval,
+                       f"circuit-open:{self.freeze_reason}")
         if measured_ccr is None:
             return out(False, self.interval, "no-measurement")
         effective_ccr = measured_ccr * self.exposed_scale
@@ -341,6 +392,8 @@ class AdaptiveRuntime:
         return {
             "interval": self.controller.interval,
             "replans": self.controller.replans,
+            "breaker_open": self.controller.frozen,
+            "breaker_reason": self.controller.freeze_reason,
             "measured_ccr": self.monitor.measured_ccr(),
             "monitor": self.monitor.summary(),
             "transitions": [t.summary() for t in self.transitions],

@@ -61,11 +61,15 @@ def residual_norm(comp_state: Any) -> float:
     ``residual`` half counts (``q`` is a sketch, not deferred gradient)."""
     if isinstance(comp_state, dict) and "residual" in comp_state:
         comp_state = comp_state["residual"]
-    total = 0.0
+    total = None
     for leaf in jax.tree_util.tree_leaves(comp_state):
         if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.floating):
-            total += float(jnp.sum(jnp.square(leaf.astype(jnp.float32))))
-    return math.sqrt(total)
+            sq = jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+            total = sq if total is None else total + sq
+    if total is None:
+        return 0.0
+    # one device sync for the whole tree, not one per leaf
+    return math.sqrt(float(total))
 
 
 def _same_structure(a: Any, b: Any) -> bool:

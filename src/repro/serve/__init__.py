@@ -15,6 +15,7 @@ from .prefill import ChunkedPrefill
 from .scheduler import (
     FINISH_EOS,
     FINISH_LENGTH,
+    FINISH_REJECTED,
     FINISH_TRUNCATED,
     Completion,
     Request,
@@ -28,6 +29,7 @@ __all__ = [
     "Engine",
     "FINISH_EOS",
     "FINISH_LENGTH",
+    "FINISH_REJECTED",
     "FINISH_TRUNCATED",
     "KVArena",
     "KVLayout",

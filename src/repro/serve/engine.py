@@ -60,6 +60,19 @@ class ServeConfig:
     page_size: int = 16          # tokens per KV page
     num_pages: int = 0           # 0 = auto (every slot can run full-length)
     prefill_chunk: int = 16      # prompt tokens per compiled prefill call
+    # load shedding (DESIGN.md §16).  max_queue bounds the admission
+    # queue: a submit over the bound finishes immediately with
+    # finish_reason="rejected" (no tokens consumed, safe to retry) instead
+    # of queueing unboundedly — under an overload storm the queue stops
+    # being a hidden latency reservoir and p99 of ADMITTED requests stays
+    # bounded.  None keeps the legacy unbounded queue.
+    max_queue: int | None = None
+    # starvation shedding: if the queue head has waited starve_patience
+    # consecutive engine ticks during which nothing could be admitted AND
+    # no slot is active (so nothing will ever free pages — e.g. the page
+    # pool is held externally), shed the head as rejected rather than
+    # deadlock the episode.  0 disables (legacy behaviour).
+    starve_patience: int = 0
 
 
 def greedy_sample(logits: jax.Array, key=None, temperature: float = 0.0):
@@ -89,7 +102,7 @@ def build_generate_fn(model, layout):
 
 def _zero_stats() -> dict[str, float]:
     return {
-        "requests": 0, "completed": 0,
+        "requests": 0, "completed": 0, "starved_shed": 0,
         "prefill_calls": 0, "prefill_tokens": 0, "prefill_s": 0.0,
         "insert_calls": 0, "insert_s": 0.0,
         "generate_calls": 0, "generate_tokens": 0, "generate_s": 0.0,
@@ -137,6 +150,7 @@ class Engine:
         self.sched = Scheduler(self.sc.batch_slots)
         self.results: dict[int, Completion] = {}
         self.stats = _zero_stats()
+        self._starved_ticks = 0
         self._key = jax.random.PRNGKey(0)
         # wall-clock origin of this serving episode: request spans in the
         # Chrome trace are rebased to it so traces start near t=0
@@ -146,10 +160,23 @@ class Engine:
     def submit(self, prompt_tokens: Sequence[int], frames: Any = None) -> int:
         rid = self._next_id
         self._next_id += 1
-        self.sched.submit(Request(
+        req = Request(
             rid=rid, prompt=list(prompt_tokens), frames=frames,
             submit_s=time.perf_counter(),
-        ))
+        )
+        if (
+            self.sc.max_queue is not None
+            and self.sched.pending >= self.sc.max_queue
+        ):
+            # shed at the door: the request never queues, consumes no
+            # tokens, and surfaces as finish_reason="rejected" — the
+            # caller (traffic.py) may retry with backoff
+            self.stats["requests"] += 1
+            self._record_completion(
+                self.sched.reject(req, time.perf_counter())
+            )
+            return rid
+        self.sched.submit(req)
         return rid
 
     @property
@@ -172,9 +199,15 @@ class Engine:
 
     def _finish(self, slot: Slot, reason: str) -> None:
         comp = self.sched.finish(slot, reason, time.perf_counter())
+        self.arena.release_slot(slot.index)
+        self._record_completion(comp)
+
+    def _record_completion(self, comp: Completion) -> None:
+        """Terminal bookkeeping shared by slot finishes and slotless
+        rejections: results map, stats, and the telemetry ledger."""
         self.results[comp.rid] = comp
         self.stats["completed"] += 1
-        self.arena.release_slot(slot.index)
+        reason = comp.finish_reason
         tel = self.telemetry
         if tel.enabled:
             tel.tracer.record_request(comp, t0=self._trace_t0)
@@ -292,6 +325,23 @@ class Engine:
             if not self.arena.page_for(slot.index, slot.pos):
                 self._finish(slot, FINISH_TRUNCATED)  # pool ran dry
         active = self.sched.active_slots
+        if self.sc.starve_patience > 0:
+            if self.sched.pending and not active:
+                # queue is non-empty, nothing admitted, nothing running:
+                # no slot will ever free the pages admission is waiting on
+                # (e.g. the pool is held externally — a page_starve
+                # fault).  After starve_patience ticks, shed the head per
+                # tick instead of deadlocking the episode.
+                self._starved_ticks += 1
+                if self._starved_ticks > self.sc.starve_patience:
+                    req = self.sched.queue.popleft()
+                    self.stats["requests"] += 1
+                    self.stats["starved_shed"] += 1
+                    self._record_completion(
+                        self.sched.reject(req, time.perf_counter())
+                    )
+            else:
+                self._starved_ticks = 0
         tel = self.telemetry
         if tel.enabled:
             # occupancy series: one counter-track sample per engine tick

@@ -13,7 +13,15 @@ Every request finishes with an explicit ``finish_reason``:
 * ``"length"`` — ``max_new_tokens`` generated;
 * ``"truncated"`` — the context filled up (``max_len`` reached, the page
   pool ran dry mid-generation, or the prompt alone exceeds the context);
-  previously this case was silently reported as a normal completion.
+  previously this case was silently reported as a normal completion;
+* ``"rejected"`` — load shedding (DESIGN.md §16): the engine refused the
+  request *without running it* — the admission queue is over
+  ``max_queue``, or the queue head starved with every slot/page
+  exhausted.  Distinct from ``"truncated"`` on purpose: a rejected
+  request produced no tokens and is safe to retry verbatim
+  (``traffic.py`` does, with backoff), whereas a truncated one consumed
+  budget.  Under an overload storm this is what keeps p99 of *admitted*
+  requests bounded instead of silently degrading everyone.
 """
 from __future__ import annotations
 
@@ -24,6 +32,7 @@ from typing import Any
 FINISH_EOS = "eos"
 FINISH_LENGTH = "length"
 FINISH_TRUNCATED = "truncated"
+FINISH_REJECTED = "rejected"
 
 
 @dataclasses.dataclass
@@ -127,6 +136,23 @@ class Scheduler:
         slot.first_token_s = 0.0
         return req
 
+    def reject(self, req: Request, now: float) -> Completion:
+        """Shed one request without a slot: a terminal Completion with no
+        tokens, ``finish_reason="rejected"``, and the latency ledger
+        collapsed to the decision instant (admit == finish == now, so a
+        rejection's 'latency' is pure queueing time, never compute)."""
+        return Completion(
+            rid=req.rid,
+            prompt_len=len(req.prompt),
+            tokens=[],
+            finish_reason=FINISH_REJECTED,
+            submit_s=req.submit_s,
+            admit_s=now,
+            prefill_end_s=now,
+            first_token_s=now,
+            finish_s=now,
+        )
+
     def finish(self, slot: Slot, reason: str, now: float) -> Completion:
         req = slot.request
         comp = Completion(
@@ -148,6 +174,7 @@ __all__ = [
     "Completion",
     "FINISH_EOS",
     "FINISH_LENGTH",
+    "FINISH_REJECTED",
     "FINISH_TRUNCATED",
     "Request",
     "Scheduler",

@@ -8,10 +8,20 @@ latency numbers that matter for serving (p50/p99 end-to-end latency,
 time-to-first-token, sustained tokens/sec).  ``sweep`` repeats the run
 across arrival rates on one engine (reset between rates, compiled
 executables reused) to expose the saturation knee.
+
+Shed-and-retry (DESIGN.md §16): when the engine load-sheds
+(``finish_reason="rejected"``, ``ServeConfig.max_queue``), the pump
+resubmits up to ``max_retries`` times with exponential backoff
+(``retry_backoff_s`` doubling per attempt) — the client half of graceful
+degradation.  Latency is always measured from the ORIGINAL scheduled
+arrival, so retries show up as honest tail latency, not as a reset clock.
+With ``max_retries=0`` (default) a rejection is final and the pump
+behaves exactly as before.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import time
 from typing import Callable
 
@@ -25,6 +35,8 @@ class TrafficConfig:
     prompt_len: tuple[int, int] = (4, 12)   # inclusive range
     vocab_size: int = 128
     seed: int = 0
+    max_retries: int = 0           # resubmits per request after a rejection
+    retry_backoff_s: float = 0.05  # first backoff; doubles per attempt
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,6 +50,7 @@ class TrafficReport:
     ttft_p50_ms: float
     tokens_per_s: float
     finish_reasons: dict[str, int]
+    retries: int = 0               # total resubmissions across all requests
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -65,27 +78,60 @@ def _percentile(xs: list[float], q: float) -> float:
 def run_traffic(engine, cfg: TrafficConfig) -> TrafficReport:
     """Open-loop pump: requests are submitted at their scheduled wall-clock
     arrival whether or not the engine has caught up (queueing delay is part
-    of the measured latency, as it would be for real traffic)."""
+    of the measured latency, as it would be for real traffic).  Rejected
+    submissions are resubmitted with exponential backoff up to
+    ``cfg.max_retries`` times; the FINAL completion (retried or not) is
+    what lands in the latency aggregate, timed from the original arrival.
+    """
     plan = synth_requests(cfg)
     submitted = 0
-    rids = []
+    live: dict[int, int] = {}       # rid -> plan index, awaiting completion
+    final: dict[int, object] = {}   # plan index -> terminal Completion
+    attempts = [0] * len(plan)
+    retry_heap: list[tuple[float, int]] = []   # (due rel-time, plan index)
+    retries_total = 0
     t0 = time.perf_counter()
-    while submitted < len(plan) or engine.busy:
+    while len(final) < len(plan):
         now = time.perf_counter() - t0
         while submitted < len(plan) and plan[submitted][0] <= now:
-            rids.append(engine.submit(plan[submitted][1]))
+            live[engine.submit(plan[submitted][1])] = submitted
             submitted += 1
+        while retry_heap and retry_heap[0][0] <= now:
+            _, idx = heapq.heappop(retry_heap)
+            live[engine.submit(plan[idx][1])] = idx
         if engine.busy:
             engine.step()
-        elif submitted < len(plan):
-            time.sleep(min(0.05, max(0.0, plan[submitted][0] - now)))
+        # resolve: rejected -> maybe retry; anything else is terminal
+        for rid in [r for r in live if r in engine.results]:
+            comp = engine.results[rid]
+            idx = live.pop(rid)
+            if (
+                comp.finish_reason == "rejected"
+                and attempts[idx] < cfg.max_retries
+            ):
+                attempts[idx] += 1
+                retries_total += 1
+                due = (time.perf_counter() - t0) + cfg.retry_backoff_s * (
+                    2 ** (attempts[idx] - 1)
+                )
+                heapq.heappush(retry_heap, (due, idx))
+            else:
+                final[idx] = comp
+        if not engine.busy and len(final) < len(plan):
+            waits = []
+            if submitted < len(plan):
+                waits.append(plan[submitted][0] - now)
+            if retry_heap:
+                waits.append(retry_heap[0][0] - now)
+            if waits:
+                time.sleep(min(0.05, max(0.0, min(waits))))
     t_end = time.perf_counter()
 
     lat, ttft, reasons = [], [], {}
     gen_tokens = 0
-    for (arr, _prompt), rid in zip(plan, rids):
-        comp = engine.results[rid]
-        sched_s = t0 + arr  # scheduled arrival, not actual submit call
+    for idx, (arr, _prompt) in enumerate(plan):
+        comp = final[idx]
+        sched_s = t0 + arr  # ORIGINAL scheduled arrival, not any resubmit
         lat.append(comp.finish_s - sched_s)
         ttft.append(comp.first_token_s - sched_s)
         gen_tokens += len(comp.tokens)
@@ -101,6 +147,7 @@ def run_traffic(engine, cfg: TrafficConfig) -> TrafficReport:
         ttft_p50_ms=1e3 * _percentile(ttft, 50),
         tokens_per_s=gen_tokens / makespan,
         finish_reasons=reasons,
+        retries=retries_total,
     )
     tel = getattr(engine, "telemetry", None)
     if tel is not None and tel.enabled:

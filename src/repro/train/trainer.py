@@ -514,6 +514,7 @@ class Trainer:
         self._steps: dict[int, Callable] = {}
         self.history: list[dict] = []
         self.runtime = None          # AdaptiveRuntime of the last run(), if any
+        self.resilience = None       # ResilienceRuntime of the last run(), if any
         self.transitions: list = []  # TransitionReports from re-plans
         # telemetry bundle (repro.obs): registry + event log + tracer.
         # Defaults to the disabled singleton; run(telemetry=...) swaps in a
@@ -731,7 +732,7 @@ class Trainer:
         return state, report
 
     def run(self, state, batches, steps: int | None = None, log=print,
-            autotune=None, telemetry=None):
+            autotune=None, telemetry=None, guards=None, faults=None):
         """Host loop.  ``autotune`` (None | True | AutotuneConfig | a live
         AdaptiveRuntime) arms the adaptive runtime: measured-CCR monitoring
         + hysteresis re-planning + timeline tracing (DESIGN.md §10).
@@ -749,7 +750,17 @@ class Trainer:
         at the existing log cadence (metrics are already host-side floats
         there), so the hot loop gains no extra device syncs; with
         ``telemetry=None`` every hook is a no-op on the shared disabled
-        singleton."""
+        singleton.
+
+        ``guards`` (None | True | GuardConfig | dict of overrides) arms
+        the resilience runtime (DESIGN.md §16): numeric guardrails on
+        each step's metrics plus the skip-step -> EF-flush -> checkpoint-
+        rewind recovery ladder.  ``faults`` (None | spec string |
+        FaultPlan | FaultInjector) arms deterministic fault injection for
+        chaos runs; a live :class:`~repro.resilience.ResilienceRuntime`
+        passed as ``guards`` keeps its ladder/injector state across
+        chunked ``run`` calls.  With both None the loop is the prior
+        path, bit-for-bit."""
         from repro.obs import as_telemetry
         from repro.obs.events import plan_digest
 
@@ -784,6 +795,22 @@ class Trainer:
                 )
             if tel.enabled:
                 rt.attach_telemetry(tel)
+        res = None
+        if guards is not None or faults is not None:
+            from repro.resilience import ResilienceRuntime
+
+            if isinstance(guards, ResilienceRuntime):
+                res = self.resilience = guards
+            else:
+                res = self.resilience = ResilienceRuntime(
+                    self, guards=guards, faults=faults,
+                )
+            res.attach_telemetry(tel)
+            if res.injector is not None and rt is not None:
+                # ccr_skew faults ride the probe path: wrap the runtime's
+                # probe dispatch so due events inflate the measured comm
+                # time (instance attribute shadows the class method)
+                rt._probe = res.injector.wrap_probe(rt._probe)
         it = iter(batches)
         steps_c = tel.registry.counter(
             "train_steps_total", "optimizer steps completed"
@@ -795,6 +822,10 @@ class Trainer:
         t0 = time.perf_counter()
         for i in range(steps):
             batch = next(it)
+            if res is not None:
+                # snapshot (free: state dicts reference immutable arrays)
+                # -> guard-owned checkpoint -> fault injection
+                state, batch = res.pre_step(state, batch)
             phase = state["step"] % self.num_phases
             fn = self._phase_fn(phase)
             # block for a true wall time only on probe-due steps — an
@@ -811,6 +842,11 @@ class Trainer:
             steps_c.inc()
             if self.sharded:
                 self._pending_sync = True
+            if res is not None:
+                # guard check + recovery BEFORE the adaptive runtime sees
+                # the state: a poisoned step must not feed the CCR probe
+                # or cross a re-plan boundary
+                state = res.post_step(state, metrics)
             if rt is not None:
                 wall = None
                 if timed:
@@ -845,6 +881,10 @@ class Trainer:
                         f"step {state['step']:>5d}  loss {shown:.4f}  "
                         f"gnorm {m['grad_norm']:.3f}  t {m['wall_s']:.1f}s"
                     )
+        if res is not None:
+            # drain the lag-one deferred guard check (may recover: the
+            # returned state can sit behind the loop's nominal target)
+            state = res.finalize(state)
         if rt is not None:
             rt.finish()
         # sharded sync: hand back fully-fresh params (the final step's

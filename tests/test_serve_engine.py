@@ -215,3 +215,123 @@ def test_int8_kv_engine(model_and_params):
     out2 = e2.run_until_done()[r2].tokens
     assert out1 == out2
     assert len(e2.layout.plane_dtypes) >= 2
+
+
+# ---------------------------------------------------------------------------
+# overload: load shedding keeps the engine honest past capacity
+# (DESIGN.md §16 — rejected is terminal, retryable, and never silent)
+# ---------------------------------------------------------------------------
+
+
+def test_overload_door_shedding_no_request_lost(model_and_params):
+    """A burst past ``max_queue`` sheds at the door: every rid still
+    resolves, shed requests are ``rejected`` (zero tokens), and admitted
+    ones run to completion untouched."""
+    model, params = model_and_params
+    eng = Engine(model, params, ServeConfig(batch_slots=2, max_len=32,
+                                            max_new_tokens=4, max_queue=2))
+    rids = [eng.submit([i + 1, i + 2, i + 3]) for i in range(8)]
+    res = eng.run_until_done()
+    assert set(rids) == set(res)                       # nothing lost
+    reasons = [res[r].finish_reason for r in rids]
+    # the burst lands before any engine tick, so exactly max_queue survive
+    # the door; the rest shed immediately
+    assert reasons.count("rejected") == 8 - 2
+    for r in rids:
+        comp = res[r]
+        if comp.finish_reason == "rejected":
+            assert comp.tokens == []                   # safe to retry
+            assert comp.finish_s >= comp.submit_s
+        else:
+            assert comp.finish_reason == "length"
+            assert len(comp.tokens) == 4
+
+
+def test_overload_starvation_shedding(model_and_params):
+    """With every page held (resilience ``page_starve`` fault) a queued
+    request must be shed after ``starve_patience`` ticks instead of
+    wedging the engine forever."""
+    from repro.resilience import release_pages, starve_pages
+
+    model, params = model_and_params
+    eng = Engine(model, params, ServeConfig(batch_slots=2, max_len=32,
+                                            max_new_tokens=4, page_size=8,
+                                            starve_patience=3))
+    held = starve_pages(eng.arena.pool)
+    assert eng.arena.pool.available == 0
+    rid = eng.submit([1, 2, 3])
+    res = eng.run_until_done()
+    assert res[rid].finish_reason == "rejected"
+    assert eng.stats["starved_shed"] >= 1
+    # end the fault: the engine serves normally again
+    release_pages(eng.arena.pool, held)
+    rid2 = eng.submit([1, 2, 3])
+    res = eng.run_until_done()
+    assert res[rid2].finish_reason == "length"
+
+
+def test_overload_qps_sweep_p99_of_admitted_bounded(model_and_params):
+    """QPS sweep past capacity: shedding converts overload into
+    ``rejected`` completions (never bogus ``length`` ones), loses no
+    request, and keeps the p99 latency of ADMITTED requests bounded by a
+    fat multiple of the isolated per-request service time — instead of
+    growing with the backlog as an unbounded queue would."""
+    from repro.serve import TrafficConfig, sweep
+
+    model, params = model_and_params
+    eng = Engine(model, params, ServeConfig(batch_slots=2, max_len=32,
+                                            max_new_tokens=4, page_size=8,
+                                            max_queue=2))
+    # isolated service time (compile already warm from other tests; one
+    # more warm-up request makes this robust when run standalone)
+    eng.submit([1, 2, 3])
+    eng.run_until_done()
+    eng.reset()
+    import time as _time
+    t0 = _time.perf_counter()
+    eng.submit([1, 2, 3])
+    eng.run_until_done()
+    service_s = _time.perf_counter() - t0
+    eng.reset()
+
+    base = TrafficConfig(num_requests=16, prompt_len=(3, 6), vocab_size=128,
+                         seed=7)
+    reports = sweep(eng, [20.0, 2000.0], base)
+    shed_total = 0
+    for rep in reports:
+        assert sum(rep.finish_reasons.values()) == 16   # nothing lost
+        shed_total += rep.finish_reasons.get("rejected", 0)
+        assert rep.finish_reasons.get("truncated", 0) == 0
+    # far past capacity the door must actually shed
+    assert reports[-1].finish_reasons.get("rejected", 0) > 0
+    assert shed_total < 2 * 16                          # not shedding everyone
+
+    # p99 of ADMITTED requests: bounded queue => bounded wait.  Recompute
+    # from the engine's ledger of the final (overloaded) rate.
+    admitted = [c for c in eng.results.values()
+                if c.finish_reason != "rejected"]
+    assert admitted
+    lat = sorted(c.latency_s for c in admitted)
+    p99 = lat[min(len(lat) - 1, int(0.99 * len(lat)))]
+    # <= (queue + slots) requests ahead, 2 slots wide, fat 25x margin for
+    # CI timer noise
+    assert p99 < 25.0 * max(service_s, 1e-3) * (2 + 2), (p99, service_s)
+
+
+def test_overload_retry_with_backoff_resolves(model_and_params):
+    """The client half: rejected submissions retried with backoff all
+    reach a terminal state, retries are counted, and latency is measured
+    from the ORIGINAL arrival (retried requests pay their wait)."""
+    from repro.serve import TrafficConfig, run_traffic
+
+    model, params = model_and_params
+    eng = Engine(model, params, ServeConfig(batch_slots=2, max_len=32,
+                                            max_new_tokens=4, max_queue=2))
+    cfg = TrafficConfig(qps=500.0, num_requests=12, prompt_len=(3, 6),
+                        vocab_size=128, seed=3, max_retries=4,
+                        retry_backoff_s=0.01)
+    rep = run_traffic(eng, cfg)
+    assert sum(rep.finish_reasons.values()) == 12
+    assert rep.retries > 0
+    # with a generous retry budget at this scale everyone eventually runs
+    assert rep.finish_reasons.get("length", 0) >= 10
