@@ -32,6 +32,7 @@ from . import (
     chaos_check,
     fig5_ratio_sweep,
     fig11_scaling,
+    hier_check,
     kernel_bench,
     obs_check,
     overlap_check,
@@ -58,6 +59,7 @@ MODULES = {
     "overlap": overlap_check,
     "arena": arena_check,
     "sharded": sharded_check,
+    "hier": hier_check,
     "serve": serve_bench,
     "obs": obs_check,
     "chaos": chaos_check,
@@ -73,7 +75,11 @@ MODULES = {
 # placement gate (fails unless the compiled sharded step reduce-scatters
 # before the final gradient fusion with the deferred param all-gathers at
 # the step head, and the exposed wire bytes are <= 0.6x all-reduce);
-# "serve" is the serving gate (short QPS sweep through the paged-KV
+# "hier" is the two-level hierarchical gate (benchmarks/hier_check.py:
+# compiles one sharded step on a (pod=2, data=4) mesh and fails unless the
+# CommSchedule's per-link byte accounting — intra-pod RS + deferred AG on
+# the ICI, owned-shard exchanges on the DCN — matches the compiled HLO's
+# replica-group-classified collective bytes); "serve" is the serving gate (short QPS sweep through the paged-KV
 # continuous-batching engine; fails on lost requests, invalid finish
 # reasons, or prefill degenerating to one call per token); "obs" is the
 # telemetry gate (benchmarks/obs_check.py: an instrumented run must emit
@@ -85,8 +91,8 @@ MODULES = {
 # recovery rungs with every trip in telemetry, and a guarded step must
 # stay within 3% of an unguarded one — recorded as guard_overhead_frac).
 SMOKE_MODULES = ("table1", "table3", "table5", "fig5", "fig11", "kernels",
-                 "adaptive", "overlap", "arena", "sharded", "serve", "obs",
-                 "chaos")
+                 "adaptive", "overlap", "arena", "sharded", "hier", "serve",
+                 "obs", "chaos")
 
 _REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
@@ -160,6 +166,12 @@ def build_snapshot(all_rows: list[tuple]) -> dict:
                    sharded_rows.get("sharded/exposed_ratio", ""))
     mp = re.search(r"rs_before_final_grad=(\d+)",
                    sharded_rows.get("sharded/placement", ""))
+    # hierarchical gate (benchmarks/hier_check.py): the DCN share of the
+    # exposed wire bytes over one full phase cycle of the two-level plan
+    hier_rows = {name: derived for name, _, derived in all_rows
+                 if name.startswith("hier/")}
+    mh = re.search(r"ratio=([\d.]+)",
+                   hier_rows.get("hier/exposed_dcn_ratio", ""))
     # serving gate (benchmarks/serve_bench.py): per-stage unit costs and
     # the latency/throughput digest at the sweep's heaviest arrival rate
     serve_us = {name: us for name, us, _ in all_rows
@@ -202,6 +214,8 @@ def build_snapshot(all_rows: list[tuple]) -> dict:
     g("sharded_rs_before_final_grad",
       int(mp.group(1)) if mp else None,
       "compiled reduce-scatters placed before the final grad fusion")
+    g("hier_exposed_dcn_ratio", float(mh.group(1)) if mh else None,
+      "DCN share of exposed wire bytes in the two-level hierarchical plan")
     g("prefill_tok_us", _serve("serve/prefill_tok_us"),
       "serving prefill unit cost")
     g("generate_tok_us", _serve("serve/generate_tok_us"),
@@ -250,6 +264,7 @@ TRAJECTORY_KEYS = {
     "serve_p99_ms": "lower",
     "serve_ttft_ms": "lower",
     "serve_tokens_per_s": "higher",
+    "hier_exposed_dcn_ratio": "lower",
 }
 TRAJECTORY_TOLERANCE = 1.25  # >25% the wrong way = regression
 
@@ -269,6 +284,23 @@ def trajectory_regressions(prev: dict, new: dict) -> list[tuple]:
         if ratio > TRAJECTORY_TOLERANCE:
             out.append((key, a, b))
     return out
+
+
+def gate_against_prev(prev: dict, new: dict) -> list[tuple]:
+    """Trajectory gate entry point: compares like-for-like only.  When the
+    ``workload`` field differs between the snapshots every gated number
+    measures a different thing — comparing them would flag phantom
+    regressions (or mask real ones) — so the gate SKIPS with a printed
+    notice instead of diffing apples against oranges."""
+    pw, nw = prev.get("workload"), new.get("workload")
+    if pw != nw:
+        print(
+            f"# trajectory gate SKIPPED: workload changed "
+            f"({pw!r} -> {nw!r}); snapshots are not comparable",
+            file=sys.stderr,
+        )
+        return []
+    return trajectory_regressions(prev, new)
 
 
 def write_snapshot(all_rows: list[tuple]) -> tuple[str, list[tuple]]:
@@ -292,7 +324,7 @@ def write_snapshot(all_rows: list[tuple]) -> tuple[str, list[tuple]]:
         prev_path = os.path.join(_REPO_ROOT, f"BENCH_{nums[-1]}.json")
         with open(prev_path) as f:
             prev = json.load(f)
-        regressions = trajectory_regressions(prev, snap)
+        regressions = gate_against_prev(prev, snap)
     return path, regressions
 
 

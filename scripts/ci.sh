@@ -25,7 +25,14 @@ if [[ "$what" == "all" || "$what" == "bench" ]]; then
     # (and zero per-segment update-slice chains); "sharded" compiles one
     # sharded step and FAILS unless reduce-scatters precede the final
     # gradient fusion with the deferred param all-gathers at the step
-    # head, and exposed wire bytes <= 0.6x all-reduce.  "serve" runs a
+    # head, and exposed wire bytes <= 0.6x all-reduce.  "hier" compiles
+    # one hierarchical sharded step on a (pod=2, data=4) mesh
+    # (benchmarks/hier_check.py) and FAILS unless the CommSchedule's
+    # per-link byte accounting — intra-pod reduce-scatters + deferred
+    # head all-gather on the ICI, owned-shard cross-pod exchanges on the
+    # DCN — matches the compiled HLO's replica-group-classified
+    # collective bytes; its hier_exposed_dcn_ratio lands in
+    # BENCH_<n>.json under the trajectory gate.  "serve" runs a
     # short QPS sweep through the paged-KV continuous-batching engine and
     # FAILS on lost requests, invalid finish reasons, or prefill
     # degenerating to one dispatch per token.  "obs" is the telemetry
@@ -42,7 +49,9 @@ if [[ "$what" == "all" || "$what" == "bench" ]]; then
     # a repro.obs MetricsRegistry snapshot since schema 3, is written to
     # the repo root on every smoke run, and the run FAILS if any stable
     # key regressed >25% vs the previous snapshot
-    # (REPRO_BENCH_NO_TRAJECTORY_GATE=1 records without gating).
+    # (REPRO_BENCH_NO_TRAJECTORY_GATE=1 records without gating; the gate
+    # also auto-skips with a notice when the two snapshots' "workload"
+    # fields differ — cross-workload numbers are not comparable).
     # "chaos" is the resilience gate (benchmarks/chaos_check.py): an
     # 8-worker mesh run under injected NaN grads, an EF blow-up, a
     # persistent Inf and a mid-run kill must heal through all three

@@ -148,6 +148,24 @@ def reduce_scatter(
     return op(x, axes)
 
 
+def pod_shard_exchange(x: jax.Array, pod_axes: Sequence[str]) -> jax.Array:
+    """Cross-pod mean of an owned shard — the DCN half of the two-level
+    hierarchical sync (DESIGN.md §17).  ``x`` is the 1/W_intra shard this
+    worker owns after the intra-pod reduce-scatter (or the exact slice of
+    an intra-pod-replicated bucket); the exchange averages it with the
+    same shard held by the peer workers in every other pod.
+
+    Routed through :func:`pmean` so the ``REPRO_PSUM_PROMOTE_BF16`` guard
+    applies exactly as it does to the intra-pod reduce-scatter: bf16
+    shards are promoted to f32 around the collective on the CPU dry-run
+    backend (XLA's CPU AllReducePromotion pass CHECK-fails on bf16
+    all-reduce) and stay bf16 on the TPU wire.  Identity with no axes.
+    """
+    if not pod_axes:
+        return x
+    return pmean(x, tuple(pod_axes))
+
+
 def all_gather_tiled(x: jax.Array, axis_names: Sequence[str]) -> jax.Array:
     """Concatenating all-gather of per-worker shards along axis 0 — the
     inverse of :func:`reduce_scatter`'s scatter (worker order matches

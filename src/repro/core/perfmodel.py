@@ -7,7 +7,7 @@ All times in seconds; all speedups relative to single-worker linear scaling
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Mapping, Sequence, Union
 
 
 # ---- eq (1)/(2): plain DP ---------------------------------------------------
@@ -187,23 +187,60 @@ def pack_overhead_s(schedule, *, hbm_bw: float, ef: bool = False) -> float:
 
 # ---- schedule-driven timeline (plan/execute split) --------------------------
 
+#: a single scalar bandwidth (every call shares one link — the flat-mesh
+#: model) or a per-link mapping like ``{"ici": 50e9, "dcn": 6.25e9}``
+#: matched against each ``CollectiveCall.link`` (two-level hierarchy,
+#: DESIGN.md §17).
+LinkBandwidth = Union[float, Mapping[str, float]]
+
+
+def _bw_for(link_bw: LinkBandwidth, link: str) -> float:
+    if isinstance(link_bw, Mapping):
+        try:
+            return link_bw[link]
+        except KeyError:
+            raise KeyError(
+                f"link_bw mapping has no bandwidth for link {link!r} "
+                f"(have {sorted(link_bw)})"
+            ) from None
+    return link_bw
+
+
 def schedule_comm_times(
-    schedule, *, world: int, link_bw: float
+    schedule, *, world: int, link_bw: LinkBandwidth
 ) -> list[float]:
     """Per-bucket communication times of one phase, aligned with the
     bucket order of the schedule's plan (0.0 for unselected buckets) —
-    straight from the static ``CommSchedule``, no tracing or measuring."""
+    straight from the static ``CommSchedule``, no tracing or measuring.
+
+    ``link_bw`` may be a per-link mapping (see :data:`LinkBandwidth`);
+    each call is then priced at its own link's bandwidth, so a bucket
+    carrying both a DCN exchange and an ICI rebuild accumulates both
+    terms."""
     plan = schedule.plan
     if plan is None:
         raise ValueError("schedule carries no BucketPlan")
     times = [0.0] * plan.num_buckets
     if schedule.granularity != "bucket":
         # leaf-granularity schemes have no bucket timeline; spread evenly
-        total = schedule.wire_bytes(world) / link_bw
+        total = sum(
+            c.wire_bytes(world) / _bw_for(link_bw, c.link)
+            for c in schedule.calls
+        )
         return [total / plan.num_buckets] * plan.num_buckets
-    for b, call in zip(schedule.selected, schedule.calls):
+    if len(schedule.calls) == len(schedule.selected):
+        pairs = list(zip(schedule.selected, schedule.calls))
+    else:
+        # merged hierarchical schedules carry extra pod-level calls beyond
+        # the 1:1 selected alignment — recover each call's bucket from its
+        # target ("bucket:3" / "pod-bucket:3" / "pod-ag:3")
+        pairs = []
+        for call in schedule.calls:
+            _, _, idx = call.target.rpartition(":")
+            pairs.append((int(idx), call))
+    for b, call in pairs:
         # += : a bucket may carry several calls (e.g. oktopk route+gather)
-        times[b] += call.wire_bytes(world) / link_bw
+        times[b] += call.wire_bytes(world) / _bw_for(link_bw, call.link)
     return times
 
 
@@ -213,7 +250,7 @@ def simulate_schedule(
     schedule,
     *,
     world: int,
-    link_bw: float,
+    link_bw: LinkBandwidth,
     t_compress: float = 0.0,
     t_pack: float = 0.0,
     data_dependency: bool = False,
@@ -264,8 +301,14 @@ def simulate_schedule(
         }
     else:
         sim = simulate_overlap(t_before, comp, comm)
-    deferred = getattr(schedule, "deferred_wire_bytes", None)
-    t_deferred = deferred(world) / link_bw if deferred is not None else 0.0
+    if isinstance(link_bw, Mapping):
+        t_deferred = sum(
+            c.wire_bytes(world) / _bw_for(link_bw, c.link)
+            for c in getattr(schedule, "deferred_calls", ())
+        )
+    else:
+        deferred = getattr(schedule, "deferred_wire_bytes", None)
+        t_deferred = deferred(world) / link_bw if deferred is not None else 0.0
     if t_deferred > 0.0:
         # the AG half hides under the forward pass (t_before) of the next
         # step; only the uncovered remainder extends the step

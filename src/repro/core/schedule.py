@@ -48,6 +48,16 @@ class CollectiveCall:
     # all-gather, DESIGN.md §13) — it never contributes to the phase's
     # *exposed* communication behind the backward pass.
     deferred: bool = False
+    # which physical link this call crosses in a two-level hierarchy
+    # (DESIGN.md §17): "ici" for intra-pod collectives on the fast mesh
+    # axis, "dcn" for the cross-pod exchange.  Flat (single-pod) plans
+    # leave everything on "ici".
+    link: str = "ici"
+    # participant count of THIS call's collective group when it differs
+    # from the schedule-level world (hierarchical plans: the intra-pod RS
+    # runs over W_intra workers while the cross-pod exchange runs over
+    # n_pods).  0 means "use the world the caller passes to wire_bytes".
+    world: int = 0
 
     @property
     def bytes_per_worker(self) -> int:
@@ -64,7 +74,11 @@ class CollectiveCall:
         is the FULL per-worker input buffer (of which the worker keeps
         ``1/W``), while an all-gather's is the LOCAL shard the worker
         contributes — matching the per-worker *injected* bytes the HLO
-        parser reproduces (``launch.hlo_analysis``)."""
+        parser reproduces (``launch.hlo_analysis``).  A call with its own
+        ``world`` (hierarchical plans) ignores the argument — its group
+        size is a property of the plan, not of the schedule."""
+        if self.world:
+            world = self.world
         if world <= 1:
             return 0.0
         b = float(self.bytes_per_worker)
@@ -164,6 +178,51 @@ class CommSchedule:
         w = self.world if world is None else world
         return sum(c.wire_bytes(w) for c in self.calls)
 
+    # ---- per-link accounting (two-level hierarchy, DESIGN.md §17) ---------
+    @property
+    def links(self) -> tuple[str, ...]:
+        """Distinct links this phase touches, "ici" first."""
+        seen = {c.link for c in self.calls} | {
+            c.link for c in self.deferred_calls
+        }
+        return tuple(sorted(seen, key=lambda l: (l != "ici", l)))
+
+    def exposed_bytes_by_link(self) -> dict[str, int]:
+        """Per-link injected bytes of the exposed calls — what the HLO
+        cross-check (``launch.hlo_analysis.collective_bytes_by_link``)
+        must reproduce for the execute half of a hierarchical step."""
+        out: dict[str, int] = {}
+        for c in self.calls:
+            out[c.link] = out.get(c.link, 0) + c.bytes_per_worker
+        return out
+
+    def deferred_bytes_by_link(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for c in self.deferred_calls:
+            out[c.link] = out.get(c.link, 0) + c.bytes_per_worker
+        return out
+
+    def exposed_wire_bytes_by_link(
+        self, world: int | None = None
+    ) -> dict[str, float]:
+        """Ring-amplified wire bytes of the exposed calls split by link —
+        the per-link numerators from which the adaptive controller derives
+        ``exposed_scale`` (slowest-link time, ``runtime.controller``)."""
+        w = self.world if world is None else world
+        out: dict[str, float] = {}
+        for c in self.calls:
+            out[c.link] = out.get(c.link, 0.0) + c.wire_bytes(w)
+        return out
+
+    def deferred_wire_bytes_by_link(
+        self, world: int | None = None
+    ) -> dict[str, float]:
+        w = self.world if world is None else world
+        out: dict[str, float] = {}
+        for c in self.deferred_calls:
+            out[c.link] = out.get(c.link, 0.0) + c.wire_bytes(w)
+        return out
+
     # ---- structure accessors ---------------------------------------------
     def issue_order(self) -> tuple[int, ...]:
         """Indices into ``calls`` sorted by backward readiness — the order
@@ -203,6 +262,10 @@ class CommSchedule:
             out["exposed_bytes_per_worker"] = self.exposed_bytes_per_worker
             out["deferred_bytes_per_worker"] = self.deferred_bytes_per_worker
             out["total_bytes_per_worker"] = self.total_bytes_per_worker
+        if self.links != ("ici",) and self.links != ():
+            out["links"] = list(self.links)
+            out["exposed_bytes_by_link"] = self.exposed_bytes_by_link()
+            out["deferred_bytes_by_link"] = self.deferred_bytes_by_link()
         return out
 
 

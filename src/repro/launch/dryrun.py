@@ -30,12 +30,15 @@ from repro.configs import INPUT_SHAPES, get_config, list_archs
 from repro.core import build_plan, get_compressor
 from repro.core.ccr import (
     HardwareSpec,
-    allreduce_bytes_on_wire,
     analytic_ccr,
     select_interval,
 )
 from repro.launch import analytic_costs, hlo_analysis, shardings as sh
-from repro.launch.mesh import dp_axes as dp_axes_fn, make_production_mesh
+from repro.launch.mesh import (
+    dp_axes as dp_axes_fn,
+    make_production_mesh,
+    make_slice_mesh,
+)
 from repro.models import build_model, count_params, long_context_variant, model_flops
 from repro.optim import adamw
 from repro.train.trainer import build_train_step
@@ -47,8 +50,17 @@ def auto_interval(cfg, mesh, dp) -> int:
     """COVAP's adaptive I = ceil(CCR) from the analytic profiler (SS III.B).
 
     Same rule as ``repro.api``'s ``interval='auto'``; the multi-pod mesh
-    additionally splits the all-reduce into an ICI ring + a DCN crossing.
+    splits the sync into the two-level decomposition (DESIGN.md §17):
+    a ring all-reduce of the shard inside the pod over the ICI, plus a
+    cross-pod exchange over the DCN of only the 1/W_intra slice the intra
+    ring already reduced — priced through per-link ``CollectiveCall``
+    wire models, so this stays consistent with the trainer's static
+    ``CommSchedule`` accounting.  The intra-pod DP world is derived from
+    the dp axes themselves (any axis but 'pod'), not a hardcoded axis
+    name.
     """
+    from repro.core.schedule import CollectiveCall
+
     n_chips = 1
     for a in mesh.shape:
         n_chips *= mesh.shape[a]
@@ -64,10 +76,26 @@ def auto_interval(cfg, mesh, dp) -> int:
     shard = grad_bytes / model_world
     t_comp = (2.0 / 3.0) * flops_per_chip / (HW.peak_flops * HW.mfu)
     if "pod" in dp:
-        # hierarchical: ring inside the pod over ICI + cross-pod over DCN
-        intra = allreduce_bytes_on_wire(shard, mesh.shape["data"]) / HW.ici_bw
-        inter = allreduce_bytes_on_wire(shard, mesh.shape["pod"]) / HW.dcn_bw
-        return select_interval((intra + inter) / max(t_comp, 1e-12))
+        w_intra = 1
+        for a in dp:
+            if a != "pod":
+                w_intra *= mesh.shape[a]
+        calls = (
+            CollectiveCall(
+                "grad-shard", "all_reduce", cfg.param_dtype, int(shard),
+                link="ici", world=w_intra,
+            ),
+            # the DCN carries only the 1/W_intra slice each worker owns
+            # after the intra ring reduced it
+            CollectiveCall(
+                "pod-shard", "all_reduce", cfg.param_dtype,
+                int(shard) // max(w_intra, 1),
+                link="dcn", world=mesh.shape["pod"],
+            ),
+        )
+        bw = {"ici": HW.ici_bw, "dcn": HW.dcn_bw}
+        t_comm = sum(c.wire_bytes(0) / bw[c.link] for c in calls)
+        return select_interval(t_comm / max(t_comp, 1e-12))
     return select_interval(analytic_ccr(
         step_flops_per_chip=flops_per_chip,
         grad_bytes=shard,
@@ -81,12 +109,14 @@ def _spec_shapes(model):
 
 
 def lower_train(model, mesh, dp, compressor_name: str, interval: int, phase: int,
-                pod_interval: int = 1):
+                pod_interval: int = 1, sync: str = "allreduce"):
     cfg = model.cfg
     params_sds = _spec_shapes(model)
     plan = build_plan(params_sds, interval=interval,
                       param_specs=sh.train_param_specs(model, mesh))
     opts = {"interval": interval} if compressor_name == "covap" else {}
+    if sync != "allreduce":
+        opts["sync"] = sync
     compressor = get_compressor(compressor_name, **opts)
     moment_dtype = "bfloat16" if cfg.param_dtype == "bfloat16" else None
     optimizer = adamw(1e-4, moment_dtype=moment_dtype)
@@ -149,14 +179,40 @@ def lower_train(model, mesh, dp, compressor_name: str, interval: int, phase: int
     # pod excluded in hierarchical mode), so the recorded bytes are the
     # ones the HLO below must agree with
     sched = step_jit.comm_schedule
+    # per-link injected bytes of everything the compiled step body runs:
+    # the grad-sync collectives (exposed), the head all-gather freshening
+    # last step's deferred shards (sharded sync re-plans the same gather
+    # every phase, so this schedule's deferred bytes equal the prev one's),
+    # and the cross-pod reconcile if this phase selects pod buckets
+    planned_by_link: dict[str, float] = {}
+
+    def _acc(d):
+        for l, v in d.items():
+            planned_by_link[l] = planned_by_link.get(l, 0.0) + v
+
+    _acc(sched.exposed_bytes_by_link())
+    _acc(sched.deferred_bytes_by_link())
+    pod_sched = getattr(step_jit, "pod_schedule", None)
+    if pod_sched is not None:
+        _acc(pod_sched.exposed_bytes_by_link())
+    if not hier and "pod" in mesh.shape and "pod" in tuple(dp):
+        # flat sync over a multislice mesh: every grad collective's replica
+        # group spans the pod boundary, which the HLO classifier (and the
+        # physical network) counts as DCN traffic — relabel the record to
+        # match; the schedule itself keeps its link labels since flat plans
+        # are priced against a single-bandwidth model elsewhere
+        planned_by_link = {"dcn": sum(planned_by_link.values())}
     meta = {
         "plan_buckets": plan.num_buckets,
         "interval": interval,
         "phase": phase,
         "compressor": compressor_name,
+        "sync": sync,
         "pod_interval": pod_interval,
         "comm_schedule": sched.summary(),
+        "pod_schedule": pod_sched.summary() if pod_sched is not None else None,
         "planned_bytes_per_worker": sched.bytes_per_worker,
+        "planned_bytes_by_link": planned_by_link,
     }
     return lowered, meta
 
@@ -259,7 +315,8 @@ def _cost_analysis(compiled) -> dict:
 def run_one(arch: str, shape_name: str, multi_pod: bool, *,
             compressor: str = "covap", interval: int | None = None,
             phase: int = 0, serve_weights: str = "auto",
-            kv_cache_dtype: str = "", pod_interval: int = 1) -> dict:
+            kv_cache_dtype: str = "", pod_interval: int = 1,
+            sync: str = "allreduce", n_slices: int = 0) -> dict:
     shape = INPUT_SHAPES[shape_name]
     cfg = get_config(arch)
     variant = "exact"
@@ -270,8 +327,17 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, *,
     if kv_cache_dtype:
         cfg = cfg.with_(kv_cache_dtype=kv_cache_dtype)
     model = build_model(cfg)
-    mesh = make_production_mesh(multi_pod=multi_pod)
-    dp = dp_axes_fn(multi_pod=multi_pod)
+    if n_slices:
+        # compile-only N-slice sweep (MaxText-multislice style): each slice
+        # is one pod behind a DCN crossing; smaller per-slice grid so the
+        # sweep fits the 512 fake-device budget
+        mesh = make_slice_mesh(n_slices)
+        dp = ("pod", "data") if n_slices > 1 else ("data",)
+        mesh_desc = "x".join(str(mesh.shape[a]) for a in mesh.shape)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        dp = dp_axes_fn(multi_pod=multi_pod)
+        mesh_desc = "2x16x16" if multi_pod else "16x16"
     n_devices = 1
     for a in mesh.shape:
         n_devices *= mesh.shape[a]
@@ -279,7 +345,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, *,
     rec = {
         "arch": arch,
         "shape": shape_name,
-        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mesh": mesh_desc,
         "n_devices": n_devices,
         "kind": shape.kind,
         "variant": variant,
@@ -292,7 +358,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, *,
                 interval = auto_interval(cfg, mesh, dp)
             lowered, meta = lower_train(
                 model, mesh, dp, compressor, interval or 1, phase,
-                pod_interval=pod_interval,
+                pod_interval=pod_interval, sync=sync,
             )
         elif shape.kind == "prefill":
             lowered, meta = lower_prefill(
@@ -316,6 +382,37 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, *,
         rec["collectives_raw"] = hlo_analysis.collective_summary(
             hlo, trip_aware=False
         )
+
+        # per-link cross-check (DESIGN.md §17): the statically planned
+        # CommSchedule bytes vs the bytes the compiled HLO actually moves
+        # over each link.  Plan numels are global while the HLO operates on
+        # per-model-shard buffers, so the HLO side is scaled back up by the
+        # model world before comparing.  Recorded, not asserted — the hard
+        # gate is launch.hier_gate on an unsharded-model mesh.
+        planned = rec.get("planned_bytes_by_link")
+        if shape.kind == "train" and planned:
+            n_pods_mesh = mesh.shape.get("pod", 1)
+            hlo_by_link = hlo_analysis.collective_bytes_by_link(
+                hlo,
+                intra_world=n_devices // n_pods_mesh,
+                min_bytes=2048,
+                world=n_devices,
+            )
+            mw = mesh.shape.get("model", 1)
+            scaled = {l: v * mw for l, v in hlo_by_link.items()}
+            rel = {}
+            for l in set(planned) | set(scaled):
+                p, h = planned.get(l, 0.0), scaled.get(l, 0.0)
+                # None, not inf: HLO traffic on a link with zero planned
+                # bytes (e.g. model-TP activation collectives on ici under
+                # flat-over-pods sync) — keeps the record strict JSON
+                rel[l] = abs(h - p) / p if p else (0.0 if h == 0.0 else None)
+            rec["bytes_by_link_check"] = {
+                "schedule": planned,
+                "hlo": hlo_by_link,
+                "hlo_model_scaled": scaled,
+                "rel_err": rel,
+            }
 
         # roofline terms (per device).  compute/memory terms are ANALYTIC
         # (XLA cost_analysis counts scan bodies once — see analytic_costs);
@@ -379,6 +476,11 @@ def main():
                     choices=["auto", "model", "model_data"])
     ap.add_argument("--kv-cache-dtype", default="")
     ap.add_argument("--pod-interval", type=int, default=1)
+    ap.add_argument("--sync", default="allreduce", choices=["allreduce", "sharded"])
+    ap.add_argument("--slices", default="",
+                    help="comma list of slice counts for the multislice sweep "
+                         "(e.g. 1,2,4); overrides --mesh with N-slice "
+                         "(pod, 8, 8) compile-only meshes")
     ap.add_argument("--tag", default="", help="suffix for the output JSON")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--all", action="store_true")
@@ -387,14 +489,23 @@ def main():
 
     archs = list_archs(assigned_only=True) if args.arch == "all" else args.arch.split(",")
     shapes = list(INPUT_SHAPES) if args.shape == "all" else args.shape.split(",")
-    meshes = {"pod1": [False], "pod2": [True], "both": [False, True]}[args.mesh]
+    if args.slices:
+        # the multislice sweep reuses the mesh loop: one entry per N
+        meshes = [int(s) for s in args.slices.split(",")]
+        mesh_tags = [f"slice{n}" for n in meshes]
+        slice_mode = True
+    else:
+        meshes = {"pod1": [False], "pod2": [True], "both": [False, True]}[args.mesh]
+        mesh_tags = ["pod2" if m else "pod1" for m in meshes]
+        slice_mode = False
 
     os.makedirs(args.out, exist_ok=True)
     for arch in archs:
         for shape in shapes:
-            for multi_pod in meshes:
-                mesh_tag = "pod2" if multi_pod else "pod1"
+            for mesh_sel, mesh_tag in zip(meshes, mesh_tags):
                 tag = f"{arch}__{shape}__{mesh_tag}__{args.compressor}"
+                if args.sync != "allreduce":
+                    tag += f"__{args.sync}"
                 if args.tag:
                     tag += f"__{args.tag}"
                 path = os.path.join(args.out, tag + ".json")
@@ -402,12 +513,15 @@ def main():
                     print(f"skip {tag}")
                     continue
                 rec = run_one(
-                    arch, shape, multi_pod,
+                    arch, shape,
+                    mesh_sel if not slice_mode else False,
                     compressor=args.compressor,
                     interval=args.interval, phase=args.phase,
                     serve_weights=args.serve_weights,
                     kv_cache_dtype=args.kv_cache_dtype,
                     pod_interval=args.pod_interval,
+                    sync=args.sync,
+                    n_slices=mesh_sel if slice_mode else 0,
                 )
                 with open(path, "w") as f:
                     json.dump(rec, f, indent=1)

@@ -1,0 +1,165 @@
+"""The hierarchical sharded-sync gate: compile one two-level step and
+check its per-link byte accounting against the HLO (DESIGN.md §17).
+
+Shared harness for the ``benchmarks.run --smoke`` "hier" gate and
+``tests/test_hier_bytes.py`` — run in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the CPU backend
+has a real (pod=2, data=4) mesh to emit collectives on:
+
+    python -m repro.launch.hier_gate
+
+prints one ``HIER ...`` line and exits non-zero unless the compiled
+module's per-link injected collective bytes (ICI vs DCN, classified by
+``replica_groups`` pod-block membership) match the statically planned
+``CommSchedule`` accounting: the intra-pod gradient reduce-scatters plus
+the deferred head all-gather on the ICI, and only owned-shard-sized
+cross-pod exchanges on the DCN.  It also reports
+``hier_exposed_dcn_ratio`` — the DCN share of the exposed wire time-less
+bytes over one full phase cycle — which ``benchmarks/hier_check.py``
+records into the BENCH snapshot under the trajectory gate.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import collective_bytes_by_link
+
+# the metric pmeans / grad-norm psums are 4-byte scalars; anything the
+# schedule accounts for is a full bucket or shard
+MIN_BYTES = 1024
+# XLA's all-reduce combiner may fold the scalar grad-norm psum into a
+# same-group bucket all-reduce, and arena padding rounds shard slices up
+REL_TOL = 0.02
+ABS_TOL = 2048.0
+
+
+def build_trainer(
+    *,
+    arch: str = "gpt2-paper",
+    vocab_size: int = 256,
+    seq_len: int = 32,
+    global_batch: int = 8,
+    interval: int = 4,
+    pod_interval: int = 2,
+    n_pods: int = 2,
+    sync: str = "sharded",
+):
+    from jax.sharding import Mesh
+
+    from repro.configs import get_reduced
+    from repro.data import DataConfig, make_loader
+    from repro.models import build_model
+    from repro.optim import adamw
+    from repro.train.trainer import TrainConfig, Trainer
+
+    devices = np.array(jax.devices()).reshape(n_pods, -1)
+    mesh = Mesh(devices, ("pod", "data"))
+    cfg = get_reduced(arch).with_(vocab_size=vocab_size)
+    model = build_model(cfg)
+    tc = TrainConfig(
+        compressor="covap", interval=interval, bucket_bytes=1 << 14,
+        max_buckets=32, log_every=10 ** 9, sync=sync,
+        pod_interval=pod_interval,
+    )
+    trainer = Trainer(model, adamw(1e-3), tc, mesh=mesh,
+                      dp_axes=("pod", "data"))
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq_len,
+                    global_batch=global_batch)
+    batch = next(iter(make_loader(dc)))
+    return trainer, state, batch
+
+
+def planned_bytes_by_link(fn) -> dict[str, float]:
+    """Injected bytes the compiled phase body should move per link: the
+    grad schedule's exposed calls, its deferred head all-gather (the
+    settling gather is phase-independent, so this phase's deferred bytes
+    equal the previous phase's), and the cross-pod reconcile calls."""
+    out: dict[str, float] = {}
+
+    def _acc(d):
+        for link, v in d.items():
+            out[link] = out.get(link, 0.0) + v
+
+    _acc(fn.comm_schedule.exposed_bytes_by_link())
+    _acc(fn.comm_schedule.deferred_bytes_by_link())
+    if fn.pod_schedule is not None:
+        _acc(fn.pod_schedule.exposed_bytes_by_link())
+    return out
+
+
+def compile_and_check(trainer=None, state=None, batch=None, *,
+                      phase: int = 0, **kw) -> dict:
+    """Compile ``trainer``'s hierarchical phase executable (or build the
+    default (2, 4) one) and compare per-link schedule bytes against the
+    optimized HLO's replica-group-classified collective bytes."""
+    if trainer is None:
+        trainer, state, batch = build_trainer(**kw)
+    fn = trainer._phase_fn(phase)
+    hlo = fn.lower(
+        state["params"], state["opt"], state["comp"], batch, jnp.int32(0)
+    ).compile().as_text()
+    n_pods = trainer.mesh.shape["pod"]
+    n_devices = len(trainer.mesh.devices.flat)
+    hlo_by_link = collective_bytes_by_link(
+        hlo, intra_world=n_devices // n_pods, min_bytes=MIN_BYTES,
+        world=n_devices,
+    )
+    planned = planned_bytes_by_link(fn)
+    rel = {}
+    for link in set(planned) | set(hlo_by_link):
+        p, h = planned.get(link, 0.0), hlo_by_link.get(link, 0.0)
+        err = abs(h - p)
+        rel[link] = 0.0 if err <= ABS_TOL else (err / p if p else float("inf"))
+    return {
+        "schedule": planned,
+        "hlo": hlo_by_link,
+        "rel_err": rel,
+        "match": all(v <= REL_TOL for v in rel.values()),
+    }
+
+
+def exposed_dcn_ratio(trainer) -> float:
+    """DCN share of the exposed wire bytes over one full (lcm) phase
+    cycle — the headline number of the two-level decomposition: only
+    owned-shard exchanges touch the slow link, so this should sit well
+    below the DCN's share of a flat all-reduce."""
+    ici = dcn = 0.0
+    for s in trainer.schedules():
+        by_link = s.exposed_wire_bytes_by_link(trainer.dp_world)
+        ici += by_link.get("ici", 0.0)
+        dcn += by_link.get("dcn", 0.0)
+    total = ici + dcn
+    return dcn / total if total else 0.0
+
+
+def main() -> None:
+    trainer, state, batch = build_trainer()
+    r = compile_and_check(trainer, state, batch)
+    ratio = exposed_dcn_ratio(trainer)
+    print(
+        f"HIER ici_schedule={r['schedule'].get('ici', 0.0):.0f} "
+        f"ici_hlo={r['hlo'].get('ici', 0.0):.0f} "
+        f"dcn_schedule={r['schedule'].get('dcn', 0.0):.0f} "
+        f"dcn_hlo={r['hlo'].get('dcn', 0.0):.0f} "
+        f"rel_ici={r['rel_err'].get('ici', 0.0):.4f} "
+        f"rel_dcn={r['rel_err'].get('dcn', 0.0):.4f} "
+        f"match={int(r['match'])} "
+        f"hier_exposed_dcn_ratio={ratio:.4f}"
+    )
+    if not r["match"]:
+        raise SystemExit(
+            f"per-link schedule bytes diverge from compiled HLO: "
+            f"schedule={r['schedule']} hlo={r['hlo']} rel_err={r['rel_err']}"
+        )
+    if not r["schedule"].get("dcn"):
+        raise SystemExit(
+            "hierarchical schedule planned no DCN bytes — the cross-pod "
+            "exchange is missing from the phase plan"
+        )
+
+
+if __name__ == "__main__":
+    main()

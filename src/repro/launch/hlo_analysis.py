@@ -98,6 +98,111 @@ def collective_bytes_per_worker(hlo_text: str, world: int) -> float:
     return total
 
 
+# ---------------------------------------------------------------------------
+# per-link byte accounting (two-level hierarchy, DESIGN.md §17)
+# ---------------------------------------------------------------------------
+
+_RG_EXPLICIT_RE = re.compile(
+    r"replica_groups=\{(\{[\d,]*\}(?:,\{[\d,]*\})*)\}"
+)
+_RG_EMPTY_RE = re.compile(r"replica_groups=\{\}")
+# iota form: replica_groups=[G,S]<=[d0,d1,...]T(p0,p1,...)
+_RG_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?"
+)
+
+
+def parse_replica_groups(line: str) -> list[list[int]] | None:
+    """Participant groups of one collective instruction, or ``None`` when
+    the line carries no ``replica_groups`` attribute.  ``[]`` means the
+    explicit "all devices, one group" form (``replica_groups={}``).
+
+    Handles both the explicit form (``{{0,1},{2,3}}``) and XLA's iota
+    form (``[G,S]<=[dims]T(perm)``: reshape ``iota(prod(dims))`` to
+    ``dims``, transpose by ``perm``, re-split into G groups of S)."""
+    m = _RG_EXPLICIT_RE.search(line)
+    if m:
+        return [
+            [int(x) for x in grp.split(",") if x]
+            for grp in m.group(1)[1:-1].split("},{")
+        ]
+    m = _RG_IOTA_RE.search(line)
+    if m:
+        import numpy as np
+
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        ranks = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            perm = [int(x) for x in m.group(4).split(",")]
+            ranks = ranks.transpose(perm)
+        return ranks.reshape(g, s).tolist()
+    if _RG_EMPTY_RE.search(line):
+        return []
+    return None
+
+
+def group_link(group: list[int], intra_world: int) -> str:
+    """Which link a collective group crosses, for a (pod, intra...) mesh
+    laid out row-major with ``intra_world`` devices per pod: a group whose
+    members span two pod blocks (``rank // intra_world`` differs) crosses
+    the DCN; one confined to a single block stays on the ICI."""
+    k = max(int(intra_world), 1)
+    pods = {r // k for r in group}
+    return "dcn" if len(pods) > 1 else "ici"
+
+
+def collective_bytes_by_link(
+    hlo_text: str, *, intra_world: int, min_bytes: int = 0, world: int = 0
+) -> dict[str, float]:
+    """Per-worker *injected* collective bytes of a compiled module split
+    by link — the number the merged hierarchical
+    ``CommSchedule.exposed_bytes_by_link`` must reproduce
+    (``benchmarks/hier_check.py``).
+
+    Per-op normalisation matches :func:`collective_bytes_per_worker`
+    except each op is normalised by its OWN group size (parsed from
+    ``replica_groups``), not a module-wide world: in a hierarchical step
+    the intra-pod reduce-scatter runs over ``intra_world`` workers while
+    the cross-pod exchange runs over ``n_pods``.  Ops whose normalised
+    bytes fall below ``min_bytes`` (scalar loss/grad-norm psums) are
+    skipped.  ``world`` disambiguates the "all devices" group forms
+    (``replica_groups={}`` or absent)."""
+    out = {"ici": 0.0, "dcn": 0.0}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        _, rhs = s.split("=", 1)
+        m = _OPCODE_RE.search(rhs)
+        if not m:
+            continue
+        cm = _COLL_RE.fullmatch(m.group(1))
+        if not cm:
+            continue
+        kind = cm.group(1)
+        result = _result_bytes(rhs[: m.start()])
+        groups = parse_replica_groups(s)
+        if groups:
+            g = len(groups[0])
+            link = group_link(groups[0], intra_world)
+        else:
+            g = max(int(world), 1)
+            link = (
+                "dcn" if g > max(int(intra_world), 1) else "ici"
+            )
+        if kind == "all-gather":
+            injected = result / max(g, 1)
+        elif kind == "reduce-scatter":
+            injected = result * max(g, 1)
+        else:
+            injected = float(result)
+        if injected < min_bytes:
+            continue
+        out[link] += injected
+    return out
+
+
 _COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\([^)]*\)\s*->")
 _WHILE_RE = re.compile(
     r"\bwhile\(.*?\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)"

@@ -43,6 +43,18 @@ def model_axis_size() -> int:
     return 16
 
 
+def make_slice_mesh(n_slices: int, data: int = 8, model: int = 8):
+    """Compile-only N-slice mesh for the multislice dry-run sweep
+    (modeled on MaxText's multislice launch flow: every slice is one pod
+    behind a DCN crossing).  Row-major (pod, data, model), so device rank
+    ``r`` lives in pod ``r // (data * model)`` — the layout
+    ``launch.hlo_analysis.group_link`` assumes.  ``n_slices <= 1``
+    degenerates to the flat (data, model) mesh."""
+    if n_slices <= 1:
+        return make_mesh_compat((data, model), ("data", "model"))
+    return make_mesh_compat((n_slices, data, model), ("pod", "data", "model"))
+
+
 def make_test_mesh(data: int = 4, model: int = 2):
     """Small mesh for multi-device CPU tests (spawned with fake devices)."""
     return make_mesh_compat((data, model), ("data", "model"))

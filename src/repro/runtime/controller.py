@@ -401,22 +401,58 @@ class AdaptiveRuntime:
         }
 
 
-def exposed_comm_scale(trainer) -> float:
+def exposed_comm_scale(trainer, hw=None) -> float:
     """Fraction of the probe's (dense all-reduce) comm term that stays
-    *exposed* behind the backward pass under the trainer's sync mode.
+    *exposed* behind the backward pass under the trainer's sync mode —
+    derived from the static per-link ``CommSchedule`` accounting instead
+    of a hardcoded scalar.
 
-    ``allreduce``: everything — 1.0.  ``sharded``: only the reduce-scatter
-    half, which moves ``(W-1)/W`` of the buffer where the all-reduce moves
-    ``2(W-1)/W`` — exactly 0.5 (any wire cast applies equally to both
-    decompositions); the param all-gather is deferred under the next
-    forward pass.  Single-worker trainers keep 1.0: there is no collective
-    to halve, and the measured comm floor is dispatch overhead either way.
+    ``allreduce``: everything — 1.0.  ``sharded``: per phase, the exposed
+    time is the SLOWEST link's exposed wire bytes over that link's
+    bandwidth (the ICI reduce-scatters and — hierarchical pods — the DCN
+    shard exchange run back-to-back per bucket but the slow link
+    dominates); the baseline is the all-reduce-equivalent of the same
+    payloads on the fast link, which is what the probe's dense comm term
+    measures.  On a flat mesh this reduces to exactly 0.5: the RS half
+    moves ``(W-1)/W`` of the buffer where the all-reduce moves
+    ``2(W-1)/W``, and the param all-gather is deferred under the next
+    forward pass.  A pod mesh raises it by the DCN exposure.
+    Single-worker trainers keep 1.0: there is no collective to halve, and
+    the measured comm floor is dispatch overhead either way.
+
+    ``hw`` (default :meth:`HardwareSpec.v5e`) supplies the per-link
+    bandwidths ``{"ici", "dcn"}``.
     """
     if getattr(trainer.tc, "sync", "allreduce") != "sharded":
         return 1.0
     if trainer.dp_world <= 1:
         return 1.0
-    return 0.5
+    try:
+        from repro.core.ccr import HardwareSpec
+
+        if hw is None:
+            hw = HardwareSpec.v5e()
+        bw = {"ici": hw.ici_bw, "dcn": hw.dcn_bw}
+        num = 0.0
+        den = 0.0
+        for s in trainer.schedules():
+            by_link = s.exposed_wire_bytes_by_link(trainer.dp_world)
+            num += max(
+                (v / bw.get(l, hw.ici_bw) for l, v in by_link.items()),
+                default=0.0,
+            )
+            for c in s.calls:
+                wire = c.wire_bytes(trainer.dp_world)
+                # AR-equivalent of this payload: an RS (or AG) half moves
+                # exactly half of what the full ring all-reduce would
+                if c.op in ("reduce_scatter", "all_gather"):
+                    wire *= 2.0
+                den += wire / hw.ici_bw
+        if den <= 0.0:
+            return 1.0
+        return min(1.0, num / den)
+    except Exception:
+        return 0.5    # the flat-mesh closed form
 
 
 def as_autotune_config(autotune) -> AutotuneConfig | None:

@@ -88,15 +88,19 @@ class TrainConfig:
     # instead of per-bucket concatenate / dynamic_slice rebuilds.
     # Bitwise-equal to the default path for uniform-dtype models.
     arena: bool = False
-    # collective decomposition (core/comm.py + DESIGN.md §13):
+    # collective decomposition (core/comm.py + DESIGN.md §13/§17):
     # "allreduce" all-reduces each selected bucket (the classic path,
     # pinned); "sharded" reduce-scatters the compressed slot view (each
     # worker keeps 1/W), lets the optimizer's meaningful updates land on
     # the local shard, and defers the all-gather of updated params to the
     # HEAD of the next step so it overlaps the forward pass — exposed wire
     # volume behind the backward pass drops to ~half of the all-reduce
-    # path's.  Segmented bucket pipelines only (covap / none / fp16);
-    # incompatible with hierarchical pods (pod_interval > 1).
+    # path's.  Segmented bucket pipelines only (covap / none / fp16).
+    # Composes with hierarchical pods (pod_interval > 1): the gradient RS
+    # runs over the fast intra-pod axes, ``pod_reconcile`` exchanges only
+    # the owned 1/W shard of each selected bucket across the DCN, and the
+    # deferred head all-gather freshens non-owner shards from the pod's
+    # owners (DESIGN.md §17).
     sync: str = "allreduce"
 
 
@@ -150,27 +154,59 @@ def restore_pod_block(tree):
 
 
 def plan_pod_schedule(
-    plan: BucketPlan, *, pod_phase: int, pod_interval: int
+    plan: BucketPlan, *, pod_phase: int, pod_interval: int,
+    sync: str = "allreduce", intra_world: int = 1, n_pods: int = 1,
 ) -> CommSchedule:
     """Static cross-pod reconciliation plan (hierarchical COVAP, DESIGN
-    SS7b): the coarse filter's selection rule applied at the pod level.
-    Parameters go on the DCN wire in f32, so the planned bytes count f32."""
+    SS7b + §17): the coarse filter's selection rule applied at the pod
+    level.
+
+    With ``intra_world <= 1`` (legacy flat accounting) each selected
+    bucket is one f32 all-reduce of its full extent over the pod group.
+    With ``intra_world = W > 1`` the plan is the two-level decomposition
+    :func:`pod_reconcile` executes: per selected bucket a DCN all-reduce
+    of only the owned ``1/W`` shard of the W-aligned slot (at the
+    bucket's promoted dtype — what actually crosses the slow link), plus
+    — under ``sync="allreduce"`` only — the intra-pod all-gather that
+    rebuilds the full slot on the fast link.  Under ``sync="sharded"``
+    the rebuild rides the next step's deferred head all-gather instead,
+    so no ICI call is planned here."""
+    from repro.core import arena as ar
+
     interval = max(int(pod_interval), 1)
     sel = selected_buckets(plan.num_buckets, pod_phase % interval, interval)
-    calls = tuple(
-        CollectiveCall(
-            f"pod-bucket:{b}", "all_reduce", "float32",
-            plan.buckets[b].numel * 4,
-        )
-        for b in sel
-    )
+    W = max(int(intra_world), 1)
+    pod_world = int(n_pods) if int(n_pods) > 1 else 0
+    calls: list[CollectiveCall] = []
+    if W <= 1:
+        for b in sel:
+            calls.append(CollectiveCall(
+                f"pod-bucket:{b}", "all_reduce", "float32",
+                plan.buckets[b].numel * 4, link="dcn", world=pod_world,
+            ))
+    else:
+        for b in sel:
+            bucket = plan.buckets[b]
+            dt = ar.bucket_dtype(plan, bucket)
+            shard_bytes = (
+                ar.aligned_numel(bucket.numel, W) // W
+            ) * dt.itemsize
+            calls.append(CollectiveCall(
+                f"pod-bucket:{b}", "all_reduce", dt.name, shard_bytes,
+                link="dcn", world=pod_world,
+            ))
+            if sync == "allreduce":
+                calls.append(CollectiveCall(
+                    f"pod-ag:{b}", "all_gather", dt.name, shard_bytes,
+                    link="ici", world=W,
+                ))
     return CommSchedule(
         compressor="pod_reconcile",
         phase=pod_phase % interval,
         num_phases=interval,
         granularity="bucket",
         selected=sel,
-        calls=calls,
+        calls=tuple(calls),
         dense_bytes=sum(b.numel for b in plan.buckets) * 4,
         plan=plan,
     )
@@ -178,34 +214,71 @@ def plan_pod_schedule(
 
 def pod_reconcile(params, schedule: CommSchedule, *,
                   pod_axes: Sequence[str],
-                  reconcile_helper_axes: Sequence[str] = ()):
-    """Hierarchical COVAP's cross-pod level (beyond-paper, DESIGN SS7b):
-    instead of sending every gradient across the slow DCN pod links, each
-    step pmean-reconciles only the PARAMETER segments named by the static
-    ``CommSchedule`` (buckets with ``(b + step) % I_pod == 0`` — the coarse
-    filter applied at the pod level, where CCR > 1 genuinely holds).
-    Local-SGD-style drift between reconciliations, bounded to I_pod steps
-    per bucket by the round-robin.
+                  reconcile_helper_axes: Sequence[str] = (),
+                  owned_only: bool = False):
+    """Hierarchical COVAP's cross-pod level (beyond-paper, DESIGN SS7b +
+    §17): instead of sending every gradient across the slow DCN pod
+    links, each step reconciles only the PARAMETER segments named by the
+    static ``CommSchedule`` (buckets with ``(b + step) % I_pod == 0`` —
+    the coarse filter applied at the pod level, where CCR > 1 genuinely
+    holds).  Local-SGD-style drift between reconciliations, bounded to
+    I_pod steps per bucket by the round-robin.
 
-    The pmean runs over the pod axis PLUS the intra-pod data axes: params
-    are data-replicated so the result is identical, but XLA then lowers the
-    collective hierarchically (reduce-scatter across the 16 data rows ->
-    thin DCN crossing -> all-gather), cutting the cross-pod volume 16x vs a
-    naive per-row pod exchange (EXPERIMENTS SSPerf Pair D follow-up).
+    The exchange is an EXPLICIT two-level decomposition over the
+    ``reconcile_helper_axes`` (the intra-pod DP axes, W workers): each
+    selected bucket is packed into its W-aligned arena slot, worker ``w``
+    slices the shard ``[w*S, (w+1)*S)`` it owns — free, no collective;
+    under allreduce sync params are intra-pod replicated so the slice is
+    exact, under sharded sync it is precisely the shard the optimizer
+    just updated — and :func:`~repro.core.comm.pod_shard_exchange`
+    pmean-reconciles only that 1/W shard across the pods.  Only shard-
+    sized payloads ever touch the DCN.  Then:
+
+    * ``owned_only=False`` (allreduce sync): an intra-pod all-gather on
+      the fast link rebuilds the full reconciled slot on every worker;
+    * ``owned_only=True`` (sharded sync): the reconciled shard is written
+      back to the owned region only — non-owner positions stay stale by
+      contract and are freshened by the next step's deferred head
+      all-gather, which always gathers from the shard owners.
 
     Returns (params, schedule.bytes_per_worker)."""
+    from repro.core import arena as ar
     from repro.core import bucketing as bk
+    from repro.core.comm import (
+        all_gather_tiled, axis_size, flat_axis_index, pod_shard_exchange,
+    )
 
     plan = schedule.plan
     treedef = jax.tree_util.tree_structure(params)
     leaves = jax.tree_util.tree_leaves(params)
-    axes = tuple(pod_axes) + tuple(reconcile_helper_axes)
+    helper = tuple(reconcile_helper_axes)
+    W = 1
+    for a in helper:
+        W *= axis_size(a)
+    if not schedule.selected:
+        return params, schedule.bytes_per_worker
+    layout = ar.build_layout(plan, schedule.selected, align=W)
+    planes = ar.pack_leaves(layout, leaves)
     for b in schedule.selected:
-        for seg in plan.buckets[b].segments:
+        view = layout.bucket_view(planes, b)
+        if W > 1:
+            S = view.shape[0] // W
+            w = flat_axis_index(helper)
+            shard = lax.dynamic_slice_in_dim(view, w * S, S)
+            shard = pod_shard_exchange(shard, pod_axes)
+            if owned_only:
+                full = lax.dynamic_update_slice(view, shard, (w * S,))
+            else:
+                full = all_gather_tiled(shard, helper)
+        else:
+            full = pod_shard_exchange(view, pod_axes)
+        for seg, piece in zip(
+            plan.buckets[b].segments, layout.unpack_bucket(b, full)
+        ):
             li = seg.leaf_idx
-            x = bk._slice_segment(leaves[li], seg)
-            xm = lax.pmean(x.astype(jnp.float32), axes).astype(x.dtype)
-            leaves[li] = bk._update_segment(leaves[li], seg, xm)
+            leaves[li] = bk._update_segment(
+                leaves[li], seg, piece.astype(leaves[li].dtype)
+            )
     return (
         jax.tree_util.tree_unflatten(treedef, leaves),
         schedule.bytes_per_worker,
@@ -223,6 +296,7 @@ def build_step_fn(
     clip_norm: float = 0.0,
     pod_interval: int = 1,
     dp_world: int = 1,
+    n_pods: int = 1,
 ) -> Callable:
     """The un-jitted per-phase step (runs inside shard_map when dp_axes).
 
@@ -238,7 +312,7 @@ def build_step_fn(
     return _build_phase_step(
         model, optimizer, compressor, plan, phase=phase, dp_axes=dp_axes,
         clip_norm=clip_norm, pod_interval=pod_interval, dp_world=dp_world,
-        fused=False,
+        fused=False, n_pods=n_pods,
     )
 
 
@@ -253,6 +327,7 @@ def build_overlapped_step(
     clip_norm: float = 0.0,
     pod_interval: int = 1,
     dp_world: int = 1,
+    n_pods: int = 1,
 ) -> Callable:
     """The fused-overlap per-phase step (``TrainConfig.overlap="fused"``).
 
@@ -278,7 +353,7 @@ def build_overlapped_step(
     return _build_phase_step(
         model, optimizer, compressor, plan, phase=phase, dp_axes=dp_axes,
         clip_norm=clip_norm, pod_interval=pod_interval, dp_world=dp_world,
-        fused=True,
+        fused=True, n_pods=n_pods,
     )
 
 
@@ -298,7 +373,7 @@ def _sharded_grad_norm(synced, grad_axes):
 
 def _build_phase_step(
     model, optimizer, compressor, plan, *, phase, dp_axes, clip_norm,
-    pod_interval, dp_world, fused,
+    pod_interval, dp_world, fused, n_pods=1,
 ) -> Callable:
     """Shared skeleton of :func:`build_step_fn` / :func:`build_overlapped_step`
     — only the loss/grads/sync block differs; each path keeps its exact
@@ -316,18 +391,14 @@ def _build_phase_step(
     pod_axes = tuple(a for a in dp_axes if a == "pod") if pod_interval > 1 else ()
     grad_axes = tuple(a for a in dp_axes if a not in pod_axes)
     sharded = getattr(compressor, "sync_mode", "allreduce") == "sharded"
-    if sharded and pod_axes:
-        raise ValueError(
-            "sync='sharded' is incompatible with hierarchical pods "
-            "(pod_interval > 1): pod_reconcile would average stale "
-            "non-owner param shards"
-        )
 
     comm_schedule = compressor.plan_phase(plan, phase, world=dp_world)
     prev_schedule = comm_schedule if sharded and grad_axes else None
     pod_schedule = (
         plan_pod_schedule(
-            plan, pod_phase=phase % pod_interval, pod_interval=pod_interval
+            plan, pod_phase=phase % pod_interval, pod_interval=pod_interval,
+            sync="sharded" if sharded else "allreduce",
+            intra_world=dp_world, n_pods=n_pods,
         )
         if pod_axes
         else None
@@ -386,6 +457,7 @@ def _build_phase_step(
             params, _ = pod_reconcile(
                 params, pod_schedule,
                 pod_axes=pod_axes, reconcile_helper_axes=grad_axes,
+                owned_only=sharded,
             )
             params, opt_state, comp_state = restore_pod_block(
                 (params, opt_state, comp_state)
@@ -436,16 +508,19 @@ def build_train_step(
     if mesh is not None:
         for a in sync_axes:
             dp_world *= mesh.shape[a]
+    n_pods = mesh.shape["pod"] if hier and mesh is not None else 1
     builder = build_overlapped_step if overlap == "fused" else build_step_fn
     step_fn = builder(
         model, optimizer, compressor, plan,
         phase=phase, dp_axes=dp_axes if mesh is not None else (),
         clip_norm=clip_norm, pod_interval=pod_interval if hier else 1,
-        dp_world=dp_world,
+        dp_world=dp_world, n_pods=n_pods,
     )
     if mesh is None:
         jitted = jax.jit(step_fn, donate_argnums=(0, 1, 2) if donate else ())
         jitted.comm_schedule = step_fn.comm_schedule
+        jitted.prev_schedule = step_fn.prev_schedule
+        jitted.pod_schedule = step_fn.pod_schedule
         return jitted
 
     state_spec = P("pod") if hier else P()
@@ -478,6 +553,8 @@ def build_train_step(
         )
     jitted = jax.jit(mapped, donate_argnums=(0, 1, 2) if donate else (), **kw)
     jitted.comm_schedule = step_fn.comm_schedule
+    jitted.prev_schedule = step_fn.prev_schedule
+    jitted.pod_schedule = step_fn.pod_schedule
     return jitted
 
 
@@ -553,12 +630,43 @@ class Trainer:
 
     def schedules(self) -> list[CommSchedule]:
         """Static comm plan of every phase — available before (and without)
-        compiling a single executable."""
+        compiling a single executable.
+
+        Hierarchical mode: one schedule per phase of the FULL lcm cycle,
+        each carrying the intra-pod gradient calls (link="ici") merged
+        with that step's cross-pod reconciliation calls (link="dcn", plus
+        the intra AG rebuild under allreduce sync) — the per-link byte
+        accounting the adaptive controller and the HLO cross-check read."""
         n = max(self.compressor.num_phases(self.tc.interval), 1)
-        return [
+        base = [
             self.compressor.plan_phase(self.plan, p, world=self.dp_world)
             for p in range(n)
         ]
+        if not self.hierarchical:
+            return base
+        n_pods = self.mesh.shape["pod"] if self.mesh is not None else 1
+        out = []
+        for p in range(self.num_phases):
+            g = base[p % n]
+            pod = plan_pod_schedule(
+                self.plan,
+                pod_phase=p % self.tc.pod_interval,
+                pod_interval=self.tc.pod_interval,
+                sync=self.tc.sync,
+                intra_world=self.dp_world,
+                n_pods=n_pods,
+            )
+            ranks = g.ready_ranks
+            if ranks:
+                # pod calls issue after every gradient collective
+                ranks = ranks + tuple(
+                    range(len(ranks), len(ranks) + len(pod.calls))
+                )
+            out.append(dataclasses.replace(
+                g, phase=p, num_phases=self.num_phases,
+                calls=g.calls + pod.calls, ready_ranks=ranks,
+            ))
+        return out
 
     def schedule_report(self) -> dict:
         scheds = self.schedules()
@@ -612,7 +720,14 @@ class Trainer:
             schedule = self.compressor.plan_phase(
                 self.plan, 0, world=self.dp_world
             )
-            axes = self.dp_axes
+            hier = self.hierarchical
+            # hierarchical: each pod's shard owners hold that pod's
+            # authoritative values, so the settling gather runs over the
+            # intra-pod axes only — pods keep their (bounded) drift
+            axes = (
+                tuple(a for a in self.dp_axes if a != "pod")
+                if hier else self.dp_axes
+            )
             params_def = jax.tree_util.tree_structure(
                 jax.tree.map(lambda _: 0, self._shapes)
             )
@@ -642,10 +757,16 @@ class Trainer:
                 return tree
 
             def flush(params, opt):
-                return gather(params), gather_like_params(opt)
+                if hier:
+                    params, opt = strip_pod_block((params, opt))
+                out = gather(params), gather_like_params(opt)
+                if hier:
+                    out = restore_pod_block(out)
+                return out
 
+            spec = P("pod") if hier else P()
             mapped = shard_map_compat(
-                flush, self.mesh, (P(), P()), (P(), P()), self.dp_axes
+                flush, self.mesh, (spec, spec), (spec, spec), self.dp_axes
             )
             self._flush_fns[0] = jax.jit(mapped)
         return self._flush_fns[0]

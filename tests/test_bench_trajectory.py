@@ -1,0 +1,65 @@
+"""Unit tests for the BENCH trajectory gate (benchmarks/run.py): the
+regression comparator and the workload-mismatch skip path — snapshots
+measuring different workloads must not be diffed against each other."""
+import pytest
+
+from benchmarks.run import (
+    TRAJECTORY_TOLERANCE,
+    gate_against_prev,
+    trajectory_regressions,
+)
+
+BASE = {
+    "workload": "gpt2-paper/reduced covap I=4 seq32 gb8",
+    "step_wall_s": 1.0,
+    "serve_p99_ms": 20.0,
+    "serve_tokens_per_s": 1000.0,
+    "hier_exposed_dcn_ratio": 0.4,
+}
+
+
+def test_trajectory_detects_regressions_both_directions():
+    worse = dict(BASE, step_wall_s=1.0 * TRAJECTORY_TOLERANCE * 1.01,
+                 serve_tokens_per_s=1000.0 / TRAJECTORY_TOLERANCE / 1.01)
+    got = trajectory_regressions(BASE, worse)
+    keys = {k for k, _, _ in got}
+    assert keys == {"step_wall_s", "serve_tokens_per_s"}
+    # inside tolerance: clean
+    ok = dict(BASE, step_wall_s=1.2, serve_tokens_per_s=900.0)
+    assert trajectory_regressions(BASE, ok) == []
+    # improvements never flag
+    better = dict(BASE, step_wall_s=0.1, serve_tokens_per_s=9000.0)
+    assert trajectory_regressions(BASE, better) == []
+
+
+def test_trajectory_skips_missing_and_null_keys():
+    prev = dict(BASE)
+    prev.pop("serve_p99_ms")
+    new = dict(BASE, serve_p99_ms=100.0, step_wall_s=None)
+    assert trajectory_regressions(prev, new) == []
+
+
+def test_hier_dcn_ratio_is_gated():
+    worse = dict(BASE, hier_exposed_dcn_ratio=0.4 * TRAJECTORY_TOLERANCE * 1.01)
+    got = trajectory_regressions(BASE, worse)
+    assert [k for k, _, _ in got] == ["hier_exposed_dcn_ratio"]
+
+
+def test_gate_skips_on_workload_mismatch(capsys):
+    """BENCH_<n> recorded under a different workload than BENCH_<n-1>
+    (e.g. the smoke geometry changed): every gated number measures a
+    different thing, so the gate must SKIP with a printed notice instead
+    of flagging phantom regressions."""
+    new = dict(BASE, workload="gpt2-paper/reduced covap I=8 seq64 gb16",
+               step_wall_s=10.0)
+    assert trajectory_regressions(BASE, new)   # raw compare WOULD flag
+    assert gate_against_prev(BASE, new) == []  # the gate skips instead
+    err = capsys.readouterr().err
+    assert "SKIPPED" in err and "workload" in err
+
+
+def test_gate_compares_when_workloads_match(capsys):
+    worse = dict(BASE, step_wall_s=2.0)
+    got = gate_against_prev(BASE, worse)
+    assert [k for k, _, _ in got] == ["step_wall_s"]
+    assert "SKIPPED" not in capsys.readouterr().err

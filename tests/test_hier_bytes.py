@@ -1,0 +1,373 @@
+"""Two-level hierarchical sync suite (DESIGN.md §17): per-link byte
+accounting and pod-mesh conformance.
+
+* hypothesis properties for the two-level wire model: for arbitrary
+  (n_pods, intra_world, numel, dtype) the intra RS + cross-pod AR +
+  intra AG wire bytes equal the flat RS+AG (== ring all-reduce) wire
+  bytes at equal bandwidth; ``plan_pod_schedule`` prices exactly the
+  owned-shard DCN bytes; W-aligned slot shard decomposition round-trips
+  unchanged;
+* ``CommSchedule`` per-link accessors and ``perfmodel`` per-link
+  bandwidths on the merged hierarchical schedules;
+* the 2x4-pod CPU-mesh conformance pin: hierarchical ``sync="sharded"``
+  == hierarchical ``sync="allreduce"`` bit-for-bit (params, EF
+  residuals, optimizer moments) through ``Trainer.flush_sync``;
+* the compiled per-link gate (``repro.launch.hier_gate``): schedule
+  bytes vs HLO replica-group-classified bytes on both links;
+* the bf16 promotion-guard regression under hierarchical sharded sync.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import arena as ar
+from repro.core import build_plan, get_compressor
+from repro.core.schedule import CollectiveCall
+from repro.train.trainer import plan_pod_schedule
+
+_SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+# ---------------------------------------------------------------------------
+# wire-model properties
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(n_pods=st.integers(2, 16), intra=st.integers(2, 32),
+       m=st.integers(1, 200),
+       dtype=st.sampled_from(["float32", "bfloat16", "float16"]))
+def test_two_level_wire_equals_flat_at_equal_bandwidth(n_pods, intra, m, dtype):
+    """The hierarchical ring identity: reduce-scatter inside the pod
+    (k workers), all-reduce the owned 1/k shard across p pods, all-gather
+    inside the pod == one flat ring all-reduce over p*k workers — and the
+    flat sharded decomposition (RS + deferred AG at p*k) prices the same,
+    so at equal per-link bandwidth the two-level plan moves exactly the
+    flat plan's bytes."""
+    k, p = intra, n_pods
+    numel = m * k * p          # divisible by both worlds: no padding terms
+    it = np.dtype(dtype).itemsize
+    B = numel * it
+    rs = CollectiveCall("b:0", "reduce_scatter", dtype, B, link="ici",
+                        world=k)
+    xp = CollectiveCall("pod-bucket:0", "all_reduce", dtype, B // k,
+                        link="dcn", world=p)
+    ag = CollectiveCall("pod-ag:0", "all_gather", dtype, B // k, link="ici",
+                        world=k)
+    two_level = rs.wire_bytes(0) + xp.wire_bytes(0) + ag.wire_bytes(0)
+    W = p * k
+    flat_rs = CollectiveCall("b:0", "reduce_scatter", dtype, B, world=W)
+    flat_ag = CollectiveCall("p:0", "all_gather", dtype, B // W, world=W)
+    flat = flat_rs.wire_bytes(0) + flat_ag.wire_bytes(0)
+    assert two_level == pytest.approx(flat, rel=1e-12)
+    # both equal the ring all-reduce closed form 2(W-1)/W * B
+    assert flat == pytest.approx(2 * (W - 1) / W * B, rel=1e-12)
+
+
+@settings(max_examples=30, deadline=None)
+@given(numel=st.integers(1, 5000), intra=st.sampled_from([2, 4, 8]),
+       n_pods=st.integers(2, 8), pod_interval=st.integers(1, 4))
+def test_pod_schedule_exact_per_link_bytes(numel, intra, n_pods,
+                                           pod_interval):
+    """``plan_pod_schedule``'s per-link injected bytes, exactly: one DCN
+    all-reduce of the W-aligned owned shard per selected bucket; under
+    allreduce sync additionally one same-sized ICI all-gather; under
+    sharded sync no ICI call at all."""
+    tree = {"w": jax.ShapeDtypeStruct((numel,), np.float32)}
+    plan = build_plan(tree, bucket_bytes=1 << 30, max_buckets=1, interval=1)
+    assert plan.num_buckets == 1
+    shard_bytes = (ar.aligned_numel(numel, intra) // intra) * 4
+    for sync in ("allreduce", "sharded"):
+        sched = plan_pod_schedule(
+            plan, pod_phase=0, pod_interval=pod_interval, sync=sync,
+            intra_world=intra, n_pods=n_pods,
+        )
+        if 0 not in sched.selected:
+            assert not sched.calls
+            continue
+        by_link = sched.exposed_bytes_by_link()
+        assert by_link.get("dcn") == shard_bytes
+        if sync == "allreduce":
+            assert by_link.get("ici") == shard_bytes
+            assert sched.links == ("ici", "dcn")
+        else:
+            assert "ici" not in by_link
+            assert sched.links == ("dcn",)
+        # wire amplification uses each call's OWN world, independent of
+        # the caller-supplied schedule world
+        wire = sched.exposed_wire_bytes_by_link(1)
+        assert wire["dcn"] == pytest.approx(
+            2 * (n_pods - 1) / n_pods * shard_bytes
+        )
+        if sync == "allreduce":
+            assert wire["ici"] == pytest.approx((intra - 1) * shard_bytes)
+
+
+@settings(max_examples=30, deadline=None)
+@given(numel=st.integers(1, 3000), intra=st.sampled_from([2, 4, 8]),
+       n_pods=st.sampled_from([2, 4]))
+def test_aligned_shard_exchange_roundtrip_unchanged(numel, intra, n_pods):
+    """The W-aligned slot's owned-shard decomposition round-trips
+    unchanged: slicing the slot into W contiguous shards (what
+    ``pod_reconcile`` hands each worker), reassembling them, and
+    unpacking rebuilds the original leaf bitwise — and the zero pad tail
+    the alignment added stays exactly zero through a cross-pod mean of
+    arbitrary per-pod values (zeros on every pod average to zero), so
+    padding never leaks into real elements across the exchange."""
+    rng = np.random.RandomState(numel)
+    x = rng.randn(numel).astype(np.float32)
+    tree = {"w": jax.ShapeDtypeStruct((numel,), np.float32)}
+    plan = build_plan(tree, bucket_bytes=1 << 30, max_buckets=1, interval=1)
+    layout = ar.build_layout(plan, (0,), align=intra)
+    planes = ar.pack_leaves(layout, [x])
+    view = np.asarray(layout.bucket_view(planes, 0))
+    S = view.shape[0] // intra
+    assert view.shape[0] == ar.aligned_numel(numel, intra)
+    # shard decomposition covers the slot exactly, once
+    out = np.concatenate(
+        [view[w * S:(w + 1) * S] for w in range(intra)]
+    )
+    np.testing.assert_array_equal(out, view)
+    (piece,) = layout.unpack_bucket(0, out)
+    np.testing.assert_array_equal(np.asarray(piece), x)
+    # pad tail: zeros on every pod -> exactly zero after the mean, for
+    # any per-pod payload in the real region
+    pods = np.stack([
+        ar.pack_leaves(layout, [rng.randn(numel).astype(np.float32)])
+        for _ in range(n_pods)
+    ])
+    mean = np.asarray(
+        layout.bucket_view(pods.sum(axis=0) / n_pods, 0)
+    )
+    np.testing.assert_array_equal(mean[numel:], 0.0)
+
+
+# ---------------------------------------------------------------------------
+# CommSchedule per-link accessors + perfmodel per-link bandwidths
+# ---------------------------------------------------------------------------
+
+def _hier_trainer(sync="sharded", n_pods=2, data=4):
+    from jax.sharding import Mesh
+
+    from repro.configs import get_reduced
+    from repro.models import build_model
+    from repro.optim import adamw
+    from repro.train.trainer import TrainConfig, Trainer
+
+    class _FakeMesh:
+        """Shape-only stand-in: schedules() and the perf model read only
+        ``mesh.shape``, so no real devices are needed."""
+        shape = {"pod": n_pods, "data": data}
+
+    cfg = get_reduced("gpt2-paper").with_(vocab_size=256)
+    tc = TrainConfig(compressor="covap", interval=4, bucket_bytes=1 << 14,
+                     max_buckets=32, log_every=10 ** 9, sync=sync,
+                     pod_interval=2)
+    return Trainer(build_model(cfg), adamw(1e-3), tc, mesh=_FakeMesh(),
+                   dp_axes=("pod", "data"))
+
+
+def test_merged_hier_schedules_carry_per_link_accounting():
+    tr = _hier_trainer()
+    scheds = tr.schedules()
+    assert len(scheds) == 4          # lcm(4, 2)
+    for s in scheds:
+        assert s.links == ("ici", "dcn")
+        by = s.exposed_bytes_by_link()
+        assert by["ici"] > 0 and by["dcn"] > 0
+        # the DCN carries only owned shards: every dcn call is 1/W of its
+        # bucket's aligned slot
+        for c in s.calls:
+            if c.link == "dcn":
+                assert c.world == 2 and c.target.startswith("pod-bucket:")
+        # per-link injected bytes partition the total
+        assert sum(by.values()) == pytest.approx(s.exposed_bytes_per_worker)
+        summ = s.summary()
+        assert summ["links"] == ["ici", "dcn"] or \
+            summ["links"] == ("ici", "dcn")
+        assert summ["exposed_bytes_by_link"]["dcn"] == pytest.approx(
+            by["dcn"]
+        )
+
+
+def test_perfmodel_per_link_bandwidths():
+    """schedule_comm_times / simulate_schedule price each call on its own
+    link: an infinitely fast DCN removes exactly the DCN share, and a
+    Mapping link_bw with only one link raises a KeyError naming it."""
+    from repro.core.perfmodel import schedule_comm_times, simulate_schedule
+
+    tr = _hier_trainer()
+    s = tr.schedules()[0]
+    W = tr.dp_world
+    both = schedule_comm_times(s, world=W, link_bw={"ici": 1e9, "dcn": 1e9})
+    flat = schedule_comm_times(s, world=W, link_bw=1e9)
+    assert sum(both) == pytest.approx(sum(flat))
+    fast_dcn = schedule_comm_times(
+        s, world=W, link_bw={"ici": 1e9, "dcn": 1e18}
+    )
+    dcn_share = sum(
+        c.wire_bytes(W) for c in s.calls if c.link == "dcn"
+    ) / 1e9
+    assert sum(flat) - sum(fast_dcn) == pytest.approx(dcn_share, rel=1e-6)
+    with pytest.raises(KeyError, match="dcn"):
+        schedule_comm_times(s, world=W, link_bw={"ici": 1e9})
+    r = simulate_schedule(1e-3, 1e-3, s, world=W,
+                          link_bw={"ici": 1e9, "dcn": 1e8})
+    assert r["comm_total"] > 0
+
+
+def test_exposed_comm_scale_reads_slowest_link():
+    """The controller's exposed scale derives from per-link exposed
+    bytes: flat sharded sits at ~0.5 (RS half deferred), hierarchical
+    sharded sits strictly above it (the DCN exchange is exposed and slow)
+    but below 1."""
+    from repro.runtime import exposed_comm_scale
+
+    class _FlatMesh:
+        shape = {"data": 8}
+
+    from repro.configs import get_reduced
+    from repro.models import build_model
+    from repro.optim import adamw
+    from repro.train.trainer import TrainConfig, Trainer
+
+    cfg = get_reduced("gpt2-paper").with_(vocab_size=256)
+    tc = TrainConfig(compressor="covap", interval=4, bucket_bytes=1 << 14,
+                     max_buckets=32, log_every=10 ** 9, sync="sharded")
+    tr_flat = Trainer(build_model(cfg), adamw(1e-3), tc, mesh=_FlatMesh(),
+                      dp_axes=("data",))
+    s_flat = exposed_comm_scale(tr_flat)
+    assert s_flat == pytest.approx(0.5, abs=0.05)
+    s_hier = exposed_comm_scale(_hier_trainer())
+    assert 0.5 < s_hier <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# pod-mesh conformance: hierarchical sharded == hierarchical allreduce
+# ---------------------------------------------------------------------------
+
+_HIER_PARITY_SUB = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.configs import get_reduced
+from repro.data import DataConfig, make_loader
+from repro.models import build_model
+from repro.optim import adamw
+from repro.train.trainer import TrainConfig, Trainer
+
+mesh = Mesh(np.array(jax.devices()[:8]).reshape(2, 4), ("pod", "data"))
+cfg = get_reduced("gpt2-paper").with_(vocab_size=256)
+model = build_model(cfg)
+
+def run(sync, steps=5):
+    # clip_norm stays 0: the sharded path's grad-norm psum sums in a
+    # different order than the allreduce path's single-array norm, so
+    # clipping would break the bitwise pin (DESIGN.md §13) — norms agree
+    # to ~ulp only.
+    tc = TrainConfig(compressor="covap", interval=4, bucket_bytes=1 << 14,
+                     max_buckets=32, log_every=10 ** 9, sync=sync,
+                     pod_interval=2)
+    tr = Trainer(model, adamw(3e-3), tc, mesh=mesh, dp_axes=("pod", "data"))
+    state = tr.init_state(jax.random.PRNGKey(0))
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8,
+                    corpus_tokens=1 << 14)
+    # Trainer.run: the real loop incl. the end-of-run flush_sync of the
+    # last step's deferred param all-gather
+    return tr.run(state, iter(make_loader(dc)), steps=steps, log=None)
+
+base = run("allreduce")
+got = run("sharded")
+# params, EF residuals AND optimizer moments, on BOTH pod blocks: the
+# two sync modes share one two-level pod_reconcile, so the drift each
+# pod carries between reconciliations is bitwise identical too
+for x, y in zip(
+    jax.tree.leaves((base["params"], base["comp"], base["opt"])),
+    jax.tree.leaves((got["params"], got["comp"], got["opt"])),
+):
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+print("HIER PARITY EQUAL")
+"""
+
+
+def _run_sub(body: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(body)],
+        capture_output=True, text=True, timeout=560, env=env,
+    )
+    assert r.returncode == 0, (
+        f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
+    )
+    return r.stdout
+
+
+def test_hier_sharded_equals_hier_allreduce_on_pod_mesh():
+    """The acceptance criterion: on an 8-worker (pod=2, data=4) CPU mesh,
+    hierarchical ``sync="sharded"`` == hierarchical ``sync="allreduce"``
+    bit-for-bit — params, EF residuals, optimizer moments — over a full
+    lcm(interval, pod_interval) cycle + 1, through ``Trainer.flush_sync``."""
+    out = _run_sub(_HIER_PARITY_SUB)
+    assert "HIER PARITY EQUAL" in out
+
+
+def test_hier_gate_per_link_bytes_match_hlo():
+    """The compiled gate: per-link CommSchedule bytes == the HLO's
+    replica-group-classified collective bytes, and the DCN plan is
+    non-empty."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.hier_gate"],
+        capture_output=True, text=True, timeout=560, env=env,
+    )
+    assert r.returncode == 0, f"{r.stdout}\n{r.stderr[-3000:]}"
+    line = next(l for l in r.stdout.splitlines() if l.startswith("HIER"))
+    kv = dict(p.split("=") for p in line.split()[1:])
+    assert kv["match"] == "1"
+    assert float(kv["dcn_schedule"]) > 0
+    assert 0.0 < float(kv["hier_exposed_dcn_ratio"]) < 1.0
+
+
+_BF16_HIER_SUB = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.configs import get_reduced
+from repro.data import DataConfig, make_loader
+from repro.models import build_model
+from repro.optim import sgd
+from repro.train.trainer import TrainConfig, Trainer
+
+mesh = Mesh(np.array(jax.devices()[:8]).reshape(2, 4), ("pod", "data"))
+cfg = get_reduced("gpt2-paper").with_(vocab_size=256,
+                                      param_dtype="bfloat16")
+model = build_model(cfg)
+tc = TrainConfig(compressor="covap", interval=2, bucket_bytes=1 << 14,
+                 max_buckets=16, log_every=10 ** 9, sync="sharded",
+                 pod_interval=2)
+tr = Trainer(model, sgd(1e-3), tc, mesh=mesh, dp_axes=("pod", "data"))
+state = tr.init_state(jax.random.PRNGKey(0))
+dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=8)
+state = tr.run(state, iter(make_loader(dc)), steps=2, log=None)
+assert all(jnp.isfinite(x).all() for x in jax.tree.leaves(state["params"])
+           if jnp.issubdtype(x.dtype, jnp.floating))
+print("BF16 HIER SHARDED OK")
+"""
+
+
+def test_bf16_params_compile_under_hierarchical_sharded_sync():
+    """Regression for the REPRO_PSUM_PROMOTE_BF16 guard on the cross-pod
+    exchange: a bf16-param arch must compile and step on the CPU dry-run
+    backend under hierarchical sync="sharded" — the DCN shard exchange
+    routes through comm.pmean, so the same f32 promotion that protects
+    the intra-pod reduce-scatter wraps the pod all-reduce (XLA CPU
+    CHECK-fails on raw bf16 all-reduces)."""
+    out = _run_sub(_BF16_HIER_SUB)
+    assert "BF16 HIER SHARDED OK" in out

@@ -254,18 +254,34 @@ def test_supports_sharded_sync_matches_constructor_validation():
         assert supports_sharded_sync(base) == constructible, name
 
 
-def test_sharded_rejects_hierarchical_pods():
+def test_sharded_composes_with_hierarchical_pods():
+    """Sharded sync COMPOSES with hierarchical pods (DESIGN.md §17; the
+    pre-§17 guard raised here): the step builds, and its cross-pod plan
+    carries only owned-shard-sized DCN calls — no intra all-gather
+    rebuild (the deferred head AG covers the non-owner shards)."""
     from repro.optim import sgd
-    from repro.train.trainer import build_step_fn
+    from repro.train.trainer import build_step_fn, plan_pod_schedule
 
     tree = make_tree([(8, 4)])
     plan = build_plan(tree, bucket_bytes=1 << 20, max_buckets=4, interval=1)
     comp = get_compressor("none", sync="sharded")
-    with pytest.raises(ValueError, match="hierarchical"):
-        build_step_fn(
-            None, sgd(1e-3), comp, plan, phase=0,
-            dp_axes=("pod", "data"), pod_interval=2,
-        )
+    fn = build_step_fn(
+        None, sgd(1e-3), comp, plan, phase=0,
+        dp_axes=("pod", "data"), pod_interval=2, dp_world=4, n_pods=2,
+    )
+    pod = fn.pod_schedule
+    assert pod is not None and pod.calls
+    assert all(c.link == "dcn" and c.op == "all_reduce" for c in pod.calls)
+    full = ar.aligned_numel(plan.buckets[0].numel, 4) * 4
+    assert all(c.payload_bytes == full // 4 for c in pod.calls)
+    # the allreduce-sync plan for the same phase additionally rebuilds the
+    # full slot on the fast link
+    pod_ar = plan_pod_schedule(
+        plan, pod_phase=0, pod_interval=2, sync="allreduce",
+        intra_world=4, n_pods=2,
+    )
+    assert {c.link for c in pod_ar.calls} == {"ici", "dcn"}
+    assert any(c.op == "all_gather" and c.link == "ici" for c in pod_ar.calls)
 
 
 # ---------------------------------------------------------------------------
